@@ -1,0 +1,30 @@
+"""Theory check (Section 3.2): phase count t <= (1+2e)/e^2 and
+sum_i n_i <= n(1+2e)/e (eq. 4), measured across eps."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pushrelabel import solve_assignment_int, round_costs
+from repro.core.costs import build_cost_matrix
+from .common import emit, time_call, uniform_square_points
+
+
+def run(full: bool = False):
+    n = 1024 if full else 512
+    x, y = uniform_square_points(n, seed=3)
+    c = np.asarray(build_cost_matrix(jnp.asarray(x), jnp.asarray(y),
+                                     "euclidean"))
+    scale = c.max()
+    for eps in [0.2, 0.1, 0.05, 0.02, 0.01]:
+        c_int = round_costs(jnp.asarray(c / scale), eps)
+        t = time_call(lambda: solve_assignment_int(c_int, eps), repeats=2)
+        st = solve_assignment_int(c_int, eps)
+        bound_t = (1 + 2 * eps) / eps ** 2
+        bound_ni = n * (1 + 2 * eps) / eps
+        emit(
+            f"phases/n={n}/eps={eps}", t,
+            f"phases={int(st.phases)};bound={bound_t:.0f};"
+            f"sum_ni={int(st.sum_ni)};ni_bound={bound_ni:.0f};"
+            f"rounds={int(st.rounds)}",
+        )

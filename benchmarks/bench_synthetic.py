@@ -1,0 +1,47 @@
+"""Paper Figure 1: runtime on synthetic inputs (n uniform 2-D points per
+side, Euclidean costs) - push-relabel vs Sinkhorn at matched accuracy.
+
+CPU-scaled defaults (n up to 1024); pass full=True for the paper's grid
+(n up to 10000, eps down to 0.005)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pushrelabel import solve_assignment
+from repro.core.sinkhorn import sinkhorn, reg_for_additive_eps
+from repro.core.costs import build_cost_matrix
+from repro.core.exact import exact_assignment_cost
+from .common import emit, time_call, uniform_square_points
+
+
+def run(full: bool = False):
+    ns = [500, 1000, 2000, 4000, 8000, 10000] if full else [256, 512, 1024]
+    epss = [0.1, 0.01, 0.005] if full else [0.1, 0.02]
+    rows = []
+    for n in ns:
+        x, y = uniform_square_points(n, seed=n)
+        c = build_cost_matrix(jnp.asarray(x), jnp.asarray(y), "euclidean")
+        c_np = np.asarray(c)
+        opt = exact_assignment_cost(c_np) if n <= 2048 else None
+        scale = float(c_np.max())
+        for eps in epss:
+            t_pr = time_call(lambda: solve_assignment(c, eps), repeats=3)
+            r = solve_assignment(c, eps)
+            gap = ((float(r.cost) - opt) / (n * scale)) if opt else float("nan")
+            emit(f"synthetic/pushrelabel/n={n}/eps={eps}", t_pr,
+                 f"phases={int(r.phases)};gap_per_n={gap:.5f}")
+            reg = reg_for_additive_eps(eps, n)
+            nu = jnp.full((n,), 1.0 / n)
+            t_sk = time_call(
+                lambda: sinkhorn(c, nu, nu, reg=reg, tol=eps / 8.0,
+                                 max_iters=2000),
+                repeats=3,
+            )
+            rs = sinkhorn(c, nu, nu, reg=reg, tol=eps / 8.0, max_iters=2000)
+            gap_s = ((float(rs.cost) * n - opt) / (n * scale)) if opt \
+                else float("nan")
+            emit(f"synthetic/sinkhorn/n={n}/eps={eps}", t_sk,
+                 f"iters={int(rs.iters)};gap_per_n={gap_s:.5f}")
+            rows.append((n, eps, t_pr, t_sk))
+    return rows

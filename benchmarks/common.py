@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: timing, CSV emission, synthetic inputs."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, repeats: int = 3,
+              **kw) -> float:
+    """Median wall seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def uniform_square_points(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return (rng.uniform(size=(n, 2)).astype(np.float32),
+            rng.uniform(size=(n, 2)).astype(np.float32))
+
+
+def mnist_like_images(n: int, seed: int):
+    """Procedural stand-in for MNIST (offline container): sparse blobs on a
+    28x28 grid, L1-normalized like the paper's preprocessing."""
+    rng = np.random.default_rng(seed)
+    imgs = np.zeros((n, 28, 28), np.float32)
+    for i in range(n):
+        k = rng.integers(2, 5)
+        for _ in range(k):
+            cx, cy = rng.uniform(4, 24, size=2)
+            sx, sy = rng.uniform(1.0, 3.0, size=2)
+            yy, xx = np.mgrid[0:28, 0:28]
+            imgs[i] += np.exp(-(((xx - cx) / sx) ** 2
+                                + ((yy - cy) / sy) ** 2))
+    flat = imgs.reshape(n, 784)
+    flat /= np.maximum(flat.sum(1, keepdims=True), 1e-9)
+    return flat

@@ -1,0 +1,38 @@
+"""One function per paper table/figure. Prints ``name,us_per_call,derived``
+CSV. ``python -m benchmarks.run [--full]`` (full = paper-scale grids)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: synthetic,mnist,phases,"
+                         "routing,ot")
+    args = ap.parse_args()
+
+    from . import bench_synthetic, bench_mnist, bench_phases, \
+        bench_routing, bench_ot
+
+    benches = {
+        "synthetic": bench_synthetic.run,   # paper Fig. 1
+        "mnist": bench_mnist.run,           # paper Fig. 2
+        "phases": bench_phases.run,         # Section 3.2 bounds
+        "ot": bench_ot.run,                 # Section 4 clustered solver
+        "routing": bench_routing.run,       # framework integration
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        fn(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

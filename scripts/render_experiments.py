@@ -1,0 +1,25 @@
+"""Splice generated tables into EXPERIMENTS.md at the marker comments."""
+import io, sys, contextlib
+sys.path.insert(0, "src")
+from repro.roofline import aggregate
+
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    cells = aggregate.load("results/dryrun")
+    print(aggregate.dryrun_table(cells))
+dry = buf.getvalue()
+
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    print(aggregate.roofline_table(cells))
+roof = buf.getvalue()
+
+src = open("EXPERIMENTS.md").read()
+src = src.replace("<!-- DRYRUN_TABLE -->", dry)
+src = src.replace("<!-- ROOFLINE_TABLE -->", roof)
+perf = open("results/perf_log.md").read() if __import__("os").path.exists("results/perf_log.md") else ""
+src = src.replace("<!-- PERF_LOG -->", perf)
+open("EXPERIMENTS.md", "w").write(src)
+print("EXPERIMENTS.md rendered:",
+      len(dry.splitlines()), "dryrun rows;",
+      len(roof.splitlines()), "roofline rows")

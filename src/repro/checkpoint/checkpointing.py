@@ -1,0 +1,152 @@
+"""Sharded, fault-tolerant checkpointing (no orbax).
+
+Layout: <dir>/step_<n>/  arrays.npz (flattened pytree leaves)
+                         manifest.json (treedef, shapes, dtypes, crc32, step)
+Writes go to a temp dir + atomic rename, so a killed writer never corrupts
+the latest checkpoint; restore picks the newest directory whose manifest
+passes CRC. Save can run on a background thread (async=True); `retain`
+bounds disk usage.
+
+Elastic restore: arrays are saved as full logical tensors (device_get on the
+addressable global array); restoring onto a different mesh just re-shards -
+the trainer passes target shardings at restore time."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _encode(arr: np.ndarray):
+    """npz cannot represent ml_dtypes (bfloat16 etc.); store a same-width
+    integer view and record the logical dtype in the manifest."""
+    name = arr.dtype.name
+    if arr.dtype.kind == "V" or name not in np.sctypeDict:
+        width = arr.dtype.itemsize
+        return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[width]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, dtype_name: str):
+    if arr.dtype.name != dtype_name:
+        import ml_dtypes
+
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def save(directory: str, step: int, tree: Any, *, async_: bool = False,
+         retain: int = 3):
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def write():
+        os.makedirs(directory, exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_")
+        try:
+            encoded = [_encode(l) for l in host_leaves]
+            arrays = {f"a{i}": a for i, (a, _) in enumerate(encoded)}
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            crc = 0
+            for a, _ in encoded:
+                crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+            manifest = {
+                "step": step,
+                "treedef": str(treedef),
+                "num_leaves": len(host_leaves),
+                "shapes": [list(l.shape) for l in host_leaves],
+                "dtypes": [name for _, name in encoded],
+                "crc32": crc,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = os.path.join(directory, f"step_{step:010d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+        _gc(directory, retain)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=False)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _gc(directory: str, retain: int):
+    steps = sorted(
+        d for d in os.listdir(directory) if d.startswith("step_")
+    )
+    for d in steps[:-retain]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in sorted(os.listdir(directory), reverse=True):
+        if not d.startswith("step_"):
+            continue
+        path = os.path.join(directory, d)
+        if _verify(path):
+            best = int(d.split("_")[1])
+            break
+    return best
+
+
+def _verify(path: str) -> bool:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            crc = 0
+            for i in range(manifest["num_leaves"]):
+                crc = zlib.crc32(
+                    np.ascontiguousarray(z[f"a{i}"]).tobytes(), crc
+                )
+        return crc == manifest["crc32"]
+    except Exception:
+        return False
+
+
+def restore(directory: str, step: int, like: Any, *, shardings: Any = None):
+    """Restore into the structure of `like`. If `shardings` (a matching
+    pytree of NamedSharding) is given, leaves are placed sharded - this is
+    the elastic-rescale path: any mesh works as long as dims divide."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    if not _verify(path):
+        raise IOError(f"checkpoint {path} fails CRC verification")
+    leaves, treedef = _flatten(like)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        host = [
+            _decode(z[f"a{i}"], manifest["dtypes"][i])
+            for i in range(len(leaves))
+        ]
+    if shardings is not None:
+        sh_leaves = treedef.flatten_up_to(shardings)
+        out = [
+            jax.device_put(h, s) if s is not None else jax.device_put(h)
+            for h, s in zip(host, sh_leaves)
+        ]
+    else:
+        out = [jax.device_put(h) for h in host]
+    return treedef.unflatten(out)

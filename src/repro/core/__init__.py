@@ -1,0 +1,12 @@
+"""The paper's primary contribution: push-relabel additive approximation
+for assignment and optimal transport, integer-exact, jit-end-to-end."""
+from .pushrelabel import solve_assignment, solve_assignment_int, AssignmentResult
+from .transport import solve_ot, solve_ot_int, OTResult, northwest_corner
+from .costs import build_cost_matrix
+from .sinkhorn import sinkhorn
+
+__all__ = [
+    "solve_assignment", "solve_assignment_int", "AssignmentResult",
+    "solve_ot", "solve_ot_int", "OTResult", "northwest_corner",
+    "build_cost_matrix", "sinkhorn",
+]

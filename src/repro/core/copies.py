@@ -1,0 +1,33 @@
+"""Literal Section-4 reduction: materialize unit copies and run the
+unbalanced assignment solver. Exponentially sized in 1/eps - used ONLY as a
+test oracle (small theta) for the clustered production solver in transport.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .pushrelabel import solve_assignment_int, complete_matching, round_costs
+
+
+def solve_ot_via_copies(c, nu, mu, eps: float, theta: float):
+    """Returns (plan, cost, int-state) by expanding each node into copies."""
+    c = np.asarray(c, np.float32)
+    nu = np.asarray(nu, np.float64)
+    mu = np.asarray(mu, np.float64)
+    scale = max(float(c.max()), 1e-30)
+    s_int = np.floor(nu * theta).astype(np.int64)
+    d_int = np.ceil(mu * theta).astype(np.int64)
+    rows = np.repeat(np.arange(c.shape[0]), s_int)
+    cols = np.repeat(np.arange(c.shape[1]), d_int)
+    big_c = c[np.ix_(rows, cols)] / scale
+    c_int = round_costs(jnp.asarray(big_c), eps)
+    state = solve_assignment_int(c_int, eps)
+    matching = np.asarray(
+        complete_matching(state.match_ba, state.match_ab)
+    )
+    plan = np.zeros(c.shape, np.float64)
+    valid = matching >= 0
+    np.add.at(plan, (rows[valid], cols[matching[valid]]), 1.0 / theta)
+    cost = float((plan * c).sum())
+    return plan, cost, state, rows, cols

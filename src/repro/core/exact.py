@@ -1,0 +1,37 @@
+"""Exact oracles used only in tests/benchmarks (never in the hot path).
+
+- assignment: scipy's Jonker-Volgenant ``linear_sum_assignment``.
+- optimal transport: scipy ``linprog`` (HiGHS) on the flow LP for small n.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def exact_assignment_cost(c) -> float:
+    from scipy.optimize import linear_sum_assignment
+
+    c = np.asarray(c)
+    r, col = linear_sum_assignment(c)
+    return float(c[r, col].sum())
+
+
+def exact_ot_cost(c, mu, nu) -> float:
+    """min <C, P> s.t. P 1 = mu, P^T 1 = nu, P >= 0 (balanced OT)."""
+    from scipy.optimize import linprog
+
+    c = np.asarray(c, np.float64)
+    mu = np.asarray(mu, np.float64)
+    nu = np.asarray(nu, np.float64)
+    m, n = c.shape
+    a_eq = np.zeros((m + n, m * n))
+    for i in range(m):
+        a_eq[i, i * n : (i + 1) * n] = 1.0
+    for j in range(n):
+        a_eq[m + j, j::n] = 1.0
+    res = linprog(
+        c.ravel(), A_eq=a_eq[:-1], b_eq=np.concatenate([mu, nu])[:-1],
+        bounds=(0, None), method="highs",
+    )
+    assert res.success, res.message
+    return float(res.fun)

@@ -1,0 +1,272 @@
+"""Optimal transport via the push-relabel framework (paper Section 4).
+
+The paper reduces OT to an unbalanced assignment instance: scale masses by
+theta = 4n/eps, round supplies down / demands up to integers, and replace each
+node by unit copies. Lemma 4.1 shows copies of one vertex carry at most TWO
+distinct dual values (exactly eps apart), so copies are never materialized:
+
+  per supply b : ``y_b``  - dual of b's free copies (== max over copies);
+                 ``free_b`` units of free supply. Matched-copy duals are
+                 implicit: a matched pair is tight, y(b-copy) = c - y(a-copy).
+  per demand a : ``ya_hi`` - max dual value among a's copies (<= 0);
+                 ``free_a`` units of unmatched demand (always at dual 0, which
+                 forces ya_hi == 0 while free_a > 0).
+  flows        : ``F_hi[b,a]`` / ``F_lo[b,a]`` - units matched to a-copies at
+                 ``ya_hi[a]`` / ``ya_hi[a] - 1`` respectively.
+
+Only the *hi* cluster of a is ever admissible from free supply (the lo cluster
+sits at slack >= 1), so each phase is a capacity-respecting greedy maximal
+matching from free supply onto hi-cluster capacity, followed by push
+(displacement of old flow picked up by new partners) and relabel. When a
+column's hi cluster is fully consumed by M', its value collapses one step down
+- precisely the mechanism that preserves eps-feasibility after free supply
+duals rise (paper invariant I2, case (ii)).
+
+All arithmetic is int32 in units of eps; the solve is one jitted XLA program.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .matching import proposal_keys
+
+
+class OTState(NamedTuple):
+    y_b: jnp.ndarray      # (nb,) int32 dual of free supply copies
+    ya_hi: jnp.ndarray    # (na,) int32 max dual among demand copies (<= 0)
+    free_b: jnp.ndarray   # (nb,) int32 unmatched supply units
+    free_a: jnp.ndarray   # (na,) int32 unmatched demand units
+    f_hi: jnp.ndarray     # (nb, na) int32 flow matched at ya_hi
+    f_lo: jnp.ndarray     # (nb, na) int32 flow matched at ya_hi - 1
+    phases: jnp.ndarray
+    rounds: jnp.ndarray
+
+
+class OTResult(NamedTuple):
+    plan: jnp.ndarray     # (nb, na) float32, exact marginals (nu rows, mu cols)
+    cost: jnp.ndarray     # <plan, C> under original costs
+    y_b: jnp.ndarray      # scaled approximate duals (supply side)
+    y_a: jnp.ndarray      # scaled approximate duals (demand side)
+    phases: jnp.ndarray
+    rounds: jnp.ndarray
+    state: OTState        # raw integer state (for invariant checks)
+    theta: float
+    s_int: jnp.ndarray    # integer supplies after rounding
+    d_int: jnp.ndarray    # integer demands after rounding
+
+
+def _grant_round(c_int, y_b, ya_hi, rem_b, cap_a, salt):
+    """One propose/accept round. Every b with remaining free supply proposes
+    all of it to one hash-random admissible column with remaining capacity;
+    columns grant FIFO by row order via a segmented exclusive prefix sum."""
+    nb, na = c_int.shape
+    adm = (y_b[:, None] + ya_hi[None, :] == c_int + 1) & (cap_a[None, :] > 0)
+    keys = proposal_keys(nb, na, salt)
+    keys = jnp.where(adm, keys, jnp.uint32(0xFFFFFFFF))
+    best = jnp.argmin(keys, axis=1).astype(jnp.int32)
+    can = jnp.any(adm, axis=1) & (rem_b > 0)
+    tgt = jnp.where(can, best, jnp.int32(-1))
+
+    # Segmented exclusive prefix of proposal amounts, ordered by row index.
+    amt = jnp.where(can, rem_b, 0)
+    cums = jnp.cumsum(amt)
+    excl = cums - amt
+    big = jnp.iinfo(jnp.int32).max
+    tgt_safe = jnp.where(can, tgt, na)
+    base = jnp.full((na,), big, jnp.int32).at[tgt_safe].min(
+        jnp.where(can, excl, big), mode="drop"
+    )
+    prefix = excl - jnp.where(can, base[jnp.clip(tgt, 0, na - 1)], 0)
+    grant = jnp.clip(cap_a[jnp.clip(tgt, 0, na - 1)] - prefix, 0, amt)
+    grant = jnp.where(can, grant, 0)
+    return tgt_safe, grant, jnp.any(can)
+
+
+def _phase(c_int, s: OTState, max_rounds: int) -> OTState:
+    nb, na = c_int.shape
+    free_b0, free_a0 = s.free_b, s.free_a
+    # hi-cluster capacity available to M': free units (only live at value 0 ==
+    # ya_hi) plus already-matched hi copies (displaceable).
+    m_hi = jnp.sum(s.f_hi, axis=0)
+    cap0 = jnp.where(s.ya_hi == 0, s.free_a, 0) + m_hi
+    # Guard: free_a > 0 implies ya_hi == 0, so the where() is redundant by the
+    # invariant but keeps the state safe if it is ever perturbed.
+    granted0 = jnp.zeros((nb, na), jnp.int32)
+
+    def cond(c):
+        rem_b, cap_a, granted, rounds, done = c
+        return (~done) & (rounds < max_rounds)
+
+    def body(c):
+        rem_b, cap_a, granted, rounds, _ = c
+        salt = s.phases * jnp.int32(7919) + rounds
+        tgt_safe, grant, any_prop = _grant_round(
+            c_int, s.y_b, s.ya_hi, rem_b, cap_a, salt
+        )
+        rows = jnp.arange(nb, dtype=jnp.int32)
+        granted = granted.at[rows, jnp.clip(tgt_safe, 0, na - 1)].add(
+            jnp.where(tgt_safe < na, grant, 0)
+        )
+        cap_a = cap_a.at[tgt_safe].add(-grant, mode="drop")
+        rem_b = rem_b - grant
+        return (rem_b, cap_a, granted, rounds + 1, ~any_prop)
+
+    # Derive loop-carry zeros from data so the carry's varying-axes match
+    # under shard_map (a literal jnp.int32(0) is unvarying and trips the
+    # vma check when the body mixes in sharded data).
+    zero_s = jnp.sum(c_int[:1, :1]) * 0
+    rem_b, cap_a, granted, rounds, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (free_b0, cap0, granted0 + zero_s, zero_s, zero_s != 0),
+    )
+
+    g_a = jnp.sum(granted, axis=0)                       # units matched in M'
+    use_free = jnp.minimum(g_a, jnp.where(s.ya_hi == 0, free_a0, 0))
+    disp = g_a - use_free                                # displaced hi flow
+    # Victims: strip `disp` units off each column of f_hi, bottom rows first.
+    suffix_excl = jnp.cumsum(s.f_hi[::-1], axis=0)[::-1] - s.f_hi
+    take = jnp.clip(disp[None, :] - suffix_excl, 0, s.f_hi)
+    f_hi = s.f_hi - take
+    freed_b = jnp.sum(take, axis=1)
+
+    # Relabel (III(a)): every M'-matched a-copy drops by one -> granted units
+    # land at ya_hi - 1. If the hi cluster is now empty, the column collapses.
+    free_a = free_a0 - use_free
+    # Copies remaining at the hi value: surviving free units (they live at 0,
+    # i.e. at ya_hi iff ya_hi == 0; free units are never displaced so a column
+    # with free_a > 0 can never collapse) plus surviving matched-hi flow.
+    hi_left = jnp.where(s.ya_hi == 0, free_a, 0) + jnp.sum(f_hi, axis=0)
+    collapse = (hi_left == 0) & (g_a > 0)
+    ya_hi = jnp.where(collapse, s.ya_hi - 1, s.ya_hi)
+    f_hi_new = jnp.where(collapse[None, :], s.f_lo + granted, f_hi)
+    f_lo_new = jnp.where(collapse[None, :], 0, s.f_lo + granted)
+
+    # Relabel (III(b)): rows of B' with free supply left after M' rise by one.
+    rem_after = rem_b
+    y_b = s.y_b + ((free_b0 > 0) & (rem_after > 0)).astype(jnp.int32)
+    free_b = rem_after + freed_b
+
+    return OTState(
+        y_b=y_b,
+        ya_hi=ya_hi,
+        free_b=free_b,
+        free_a=free_a,
+        f_hi=f_hi_new,
+        f_lo=f_lo_new,
+        phases=s.phases + 1,
+        rounds=s.rounds + rounds,
+    )
+
+
+@partial(jax.jit, static_argnames=("eps", "max_phases", "max_rounds"))
+def solve_ot_int(
+    c_int: jnp.ndarray,
+    s_int: jnp.ndarray,
+    d_int: jnp.ndarray,
+    eps: float,
+    max_phases: int,
+    max_rounds: int,
+) -> OTState:
+    nb, na = c_int.shape
+    total_s = jnp.sum(s_int)
+    threshold = (jnp.float32(eps) * total_s.astype(jnp.float32)).astype(jnp.int32)
+
+    init = OTState(
+        y_b=jnp.ones((nb,), jnp.int32),
+        ya_hi=jnp.zeros((na,), jnp.int32),
+        free_b=s_int.astype(jnp.int32),
+        free_a=d_int.astype(jnp.int32),
+        f_hi=jnp.zeros((nb, na), jnp.int32),
+        f_lo=jnp.zeros((nb, na), jnp.int32),
+        phases=jnp.int32(0),
+        rounds=jnp.int32(0),
+    )
+
+    def cond(s: OTState):
+        return (jnp.sum(s.free_b) > threshold) & (s.phases < max_phases)
+
+    return jax.lax.while_loop(cond, lambda s: _phase(c_int, s, max_rounds), init)
+
+
+def northwest_corner(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form NW-corner plan: P[i,j] = (min(R_i,C_j) - max(R_{i-1},C_{j-1}))+"""
+    cr = jnp.cumsum(r)
+    cc = jnp.cumsum(c)
+    cr0 = cr - r
+    cc0 = cc - c
+    return jnp.maximum(
+        jnp.minimum(cr[:, None], cc[None, :])
+        - jnp.maximum(cr0[:, None], cc0[None, :]),
+        0.0,
+    )
+
+
+def solve_ot(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps: float,
+    *,
+    theta: float | None = None,
+    guaranteed: bool = False,
+) -> OTResult:
+    """epsilon-additive approximate OT (rows = supplies nu, cols = demands mu).
+
+    Cost error is measured against costs scaled to [0, 1] (paper convention):
+    w(plan) <= w(opt) + O(eps) * max(c). ``guaranteed=True`` runs at eps/3.
+    """
+    if guaranteed:
+        eps = eps / 3.0
+    c = jnp.asarray(c, jnp.float32)
+    nu = jnp.asarray(nu, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    nb, na = c.shape
+    n = max(nb, na)
+    if theta is None:
+        theta = 4.0 * n / eps
+    scale = jnp.maximum(jnp.max(c), 1e-30)
+    c_int = jnp.floor(c / scale / eps).astype(jnp.int32)
+    s_int = jnp.floor(nu * theta).astype(jnp.int32)          # round down
+    d_int = jnp.ceil(mu * theta).astype(jnp.int32)           # round up
+    max_phases = int((1.0 + 2.0 * eps) / (eps * eps)) + 8
+    state = solve_ot_int(
+        c_int, s_int, d_int, eps, max_phases, max_rounds=int(nb + na + 2)
+    )
+
+    flow = (state.f_hi + state.f_lo).astype(jnp.float32)
+    # Integer completion: leftover free supply -> leftover demand capacity.
+    comp = northwest_corner(
+        state.free_b.astype(jnp.float32), state.free_a.astype(jnp.float32)
+    )
+    plan = (flow + comp) / jnp.float32(theta)
+    # Repair marginals to the *original* (nu, mu): demand round-up can
+    # overshoot a column by < 1/theta; rescale columns then NW-fill residuals.
+    colsum = jnp.sum(plan, axis=0)
+    col_scale = jnp.where(colsum > mu, mu / jnp.maximum(colsum, 1e-30), 1.0)
+    plan = plan * col_scale[None, :]
+    r = jnp.maximum(nu - jnp.sum(plan, axis=1), 0.0)
+    cc = jnp.maximum(mu - jnp.sum(plan, axis=0), 0.0)
+    # balance tiny float drift before the NW fill
+    tot = jnp.minimum(jnp.sum(r), jnp.sum(cc))
+    r = r * jnp.where(jnp.sum(r) > 0, tot / jnp.maximum(jnp.sum(r), 1e-30), 0.0)
+    cc = cc * jnp.where(jnp.sum(cc) > 0, tot / jnp.maximum(jnp.sum(cc), 1e-30), 0.0)
+    plan = plan + northwest_corner(r, cc)
+
+    cost = jnp.sum(plan * c)
+    return OTResult(
+        plan=plan,
+        cost=cost,
+        y_b=state.y_b.astype(jnp.float32) * eps * scale,
+        y_a=state.ya_hi.astype(jnp.float32) * eps * scale,
+        phases=state.phases,
+        rounds=state.rounds,
+        state=state,
+        theta=float(theta),
+        s_int=s_int,
+        d_int=d_int,
+    )

@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python-on-XLA semantics, which validates the exact tiling logic
+that will run on TPU. On a TPU backend `interpret=False` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import slack_propose as _sp
+from . import cost_matrix as _cm
+from . import sinkhorn_step as _ss
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
+def slack_propose(c_int, y_b, y_a, avail_a, salt, *, block_m=128, block_n=128):
+    return _sp.slack_propose(
+        c_int, y_b, y_a, avail_a, salt,
+        block_m=block_m, block_n=block_n, interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("metric", "block_m", "block_n", "block_k"))
+def cost_matrix(x, y, metric="sqeuclidean", *, block_m=128, block_n=128,
+                block_k=32):
+    return _cm.cost_matrix(
+        x, y, metric,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("reg", "block_m", "block_n"))
+def sinkhorn_row_update(c, g, log_nu, reg, *, block_m=128, block_n=128):
+    return _ss.sinkhorn_row_update(
+        c, g, log_nu, reg,
+        block_m=block_m, block_n=block_n, interpret=_interpret(),
+    )
+
+
+def make_pallas_propose_fn(block_m: int = 128, block_n: int = 128):
+    """Adapter matching matching.greedy_maximal_matching's propose_fn
+    signature, so the phase loop can run on the fused kernel."""
+
+    def propose(c_int, y_b, y_a, active_b, avail_a, salt_round):
+        col, key = _sp.slack_propose(
+            c_int, y_b, y_a, avail_a, salt_round,
+            block_m=block_m, block_n=block_n, interpret=_interpret(),
+        )
+        found = key != jnp.uint32(0xFFFFFFFF)
+        return jnp.where(active_b & found, col, jnp.int32(-1))
+
+    return propose

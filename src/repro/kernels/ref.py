@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernels must match these
+bit-for-bit (integer kernels) or to float tolerance (cost/sinkhorn)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matching import proposal_keys
+
+
+def slack_propose_ref(c_int, y_b, y_a, avail_a, salt):
+    """Per-row hash-random admissible column among available columns.
+
+    Returns (best_col, best_key): best_col == -1 where no admissible edge
+    exists; key is the winning hash (uint32 max when none).
+    """
+    m, n = c_int.shape
+    adm = (y_b[:, None] + y_a[None, :] == c_int + 1) & avail_a[None, :]
+    keys = proposal_keys(m, n, salt)
+    keys = jnp.where(adm, keys, jnp.uint32(0xFFFFFFFF))
+    best_key = jnp.min(keys, axis=1)
+    best = jnp.argmin(keys, axis=1).astype(jnp.int32)
+    found = best_key != jnp.uint32(0xFFFFFFFF)
+    return jnp.where(found, best, jnp.int32(-1)), best_key
+
+
+def cost_matrix_ref(x, y, metric: str = "sqeuclidean"):
+    if metric in ("sqeuclidean", "euclidean"):
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        y2 = jnp.sum(y * y, axis=-1, keepdims=True)
+        d = jnp.maximum(x2 + y2.T - 2.0 * (x @ y.T), 0.0)
+        return jnp.sqrt(d + 1e-30) if metric == "euclidean" else d
+    if metric == "l1":
+        return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    raise ValueError(metric)
+
+
+def sinkhorn_row_ref(c, g, log_nu, reg: float):
+    """f_i = reg * (log_nu_i - logsumexp_j((g_j - c_ij)/reg))."""
+    return reg * (
+        log_nu - jax.nn.logsumexp((g[None, :] - c) / reg, axis=1)
+    )

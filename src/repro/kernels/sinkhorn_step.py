@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused log-domain Sinkhorn row update with online
+logsumexp (flash-attention-style running max/sum over column tiles).
+
+Computes  f_i = reg * (log_nu_i - LSE_j((g_j - c_ij)/reg))  reading each cost
+tile exactly once and never materializing the (m, n) scaled matrix. Column
+tiles are the reduction axis: two (BM, 1) accumulators (running max, running
+scaled sum) ride along the j axis; the final tile writes f.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, g_ref, lognu_ref, f_ref, m_acc, s_acc, *, nj: int,
+            inv_reg: float, reg: float):
+    j = pl.program_id(1)
+    z = (g_ref[...] - c_ref[...]) * inv_reg      # (bm, bn)
+    zmax = jnp.max(z, axis=1, keepdims=True)     # (bm, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, -jnp.inf)
+        s_acc[...] = jnp.zeros_like(s_acc)
+
+    m_old = m_acc[...]
+    m_new = jnp.maximum(m_old, zmax)
+    # guard exp(-inf - -inf)
+    corr = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_new), 0.0)
+    s_new = s_acc[...] * corr + jnp.sum(jnp.exp(z - m_new), axis=1,
+                                        keepdims=True)
+    m_acc[...] = m_new
+    s_acc[...] = s_new
+
+    @pl.when(j == nj - 1)
+    def _final():
+        lse = m_new + jnp.log(jnp.maximum(s_new, 1e-38))
+        f_ref[...] = reg * (lognu_ref[...] - lse)
+
+
+def sinkhorn_row_update(
+    c: jnp.ndarray,
+    g: jnp.ndarray,
+    log_nu: jnp.ndarray,
+    reg: float,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+):
+    m, n = c.shape
+    pm, pn = (-m) % block_m, (-n) % block_n
+    # pad columns with +inf cost => z = -inf => contributes exp(-inf) = 0
+    c_p = jnp.pad(c.astype(jnp.float32), ((0, pm), (0, pn)),
+                  constant_values=jnp.inf)
+    g_p = jnp.pad(g.astype(jnp.float32), (0, pn))[None, :]
+    lognu_p = jnp.pad(log_nu.astype(jnp.float32), (0, pm))[:, None]
+    mp, np_ = m + pm, n + pn
+    grid = (mp // block_m, np_ // block_n)
+
+    f, _, _ = pl.pallas_call(
+        functools.partial(_kernel, nj=grid[1], inv_reg=1.0 / reg, reg=reg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c_p, g_p, lognu_p)
+    return f[:m, 0]

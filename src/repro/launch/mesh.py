@@ -1,0 +1,33 @@
+"""Production mesh builders. A FUNCTION (not module constant) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(jax.devices())} - run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_small_mesh(shape=(2, 4), axes=("data", "model")):
+    """CI-scale mesh for dry-run smoke tests (8 forced host devices)."""
+    n = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

@@ -1,0 +1,194 @@
+"""GQA attention: flash-style chunked softmax for train/prefill, plain
+KV-cache attention for decode (decode shards the cache on the sequence axis
+across 'model' - FlashDecoding-style - via sharding constraints; the SPMD
+partitioner turns the softmax reductions into the partial-stat collectives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _init(ks[0], (d, h * dh), dtype=dtype),
+        "wk": _init(ks[1], (d, kvh * dh), dtype=dtype),
+        "wv": _init(ks[2], (d, kvh * dh), dtype=dtype),
+        "wo": _init(ks[3], (h * dh, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kvh * dh,), dtype)
+        p["bv"] = jnp.zeros((kvh * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kvh, dh)
+    v = v.reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool, q_block: int = 512,
+                    kv_block: int = 1024):
+    """Online-softmax attention. q: (B, Sq, H, Dh); k/v: (B, Sk, KvH, Dh).
+
+    The (q-block, kv-block) iteration space is flattened to a static list of
+    *causally intersecting* pairs and processed by one lax.scan - FLOPs are
+    ~half of the rectangular masked version for causal self-attention, and
+    the (Sq, Sk) score matrix is never materialized. GQA via head-group
+    reshape. Peak intermediate: (B, KvH, g, q_block, kv_block).
+    """
+    in_dtype = q.dtype
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = dh ** -0.5
+    q = (q * scale).astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    pq = (-sq) % q_block
+    pk = (-sk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = q.shape[1] // q_block
+    nk = k.shape[1] // kv_block
+    qr = q.reshape(b, nq, q_block, kvh, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, kv_block, kvh, dh)
+    vr = v.reshape(b, nk, kv_block, kvh, dh)
+    # qr: (nq, B, KvH, g, qb, Dh)
+
+    if causal:
+        pairs = [(qi, ki) for qi in range(nq) for ki in range(nk)
+                 if ki * kv_block < (qi + 1) * q_block]
+    else:
+        pairs = [(qi, ki) for qi in range(nq) for ki in range(nk)]
+    qi_arr = jnp.array([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    m0 = jnp.full((nq, b, kvh, g, q_block), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, kvh, g, q_block), jnp.float32)
+    a0 = jnp.zeros((nq, b, kvh, g, q_block, dh), jnp.float32)
+
+    def body(carry, t):
+        m, l, acc = carry
+        qi, ki = qi_arr[t], ki_arr[t]
+        qb_ = jax.lax.dynamic_index_in_dim(qr, qi, 0, keepdims=False)
+        kb_ = jax.lax.dynamic_index_in_dim(kr, ki, 1, keepdims=False)
+        vb_ = jax.lax.dynamic_index_in_dim(vr, ki, 1, keepdims=False)
+        s_ = jnp.einsum("bhgqd,bkhd->bhgqk", qb_, kb_)
+        k_pos = ki * kv_block + jnp.arange(kv_block)
+        valid = k_pos[None, :] < sk
+        if causal:
+            q_pos = qi * q_block + jnp.arange(q_block)
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        s_ = jnp.where(valid[None, None, None], s_, NEG_INF)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_old, jnp.max(s_, axis=-1))
+        p_ = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + jnp.sum(p_, axis=-1)
+        a_new = a_old * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p_, vb_
+        )
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(len(pairs)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (nq, B, KvH, g, qb, Dh) -> (B, S, H, Dh)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_block, h, dh)
+    return out[:, :sq].astype(in_dtype)
+
+
+def attn_forward(p, cfg, x, positions, *, causal=True):
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = flash_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attn_forward(p, cfg, x, memory):
+    """Decoder cross-attention onto encoder memory (no RoPE, not causal)."""
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (memory @ p["wk"]).reshape(b, memory.shape[1], kvh, dh)
+    v = (memory @ p["wv"]).reshape(b, memory.shape[1], kvh, dh)
+    out = flash_attention(q, k, v, causal=False)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attn_prefill(p, cfg, x, positions):
+    """Returns (out, (k_cache, v_cache)) for serving."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = flash_attention(q, k, v, causal=True)
+    return out.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
+def attn_decode(p, cfg, x, cache, pos):
+    """One-token decode. cache: (k, v) each (B, S_max, KvH, Dh); pos ()."""
+    b, s, _ = x.shape  # s == 1
+    k_cache, v_cache = cache
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    s_max = k_cache.shape[1]
+    if cfg.fast_decode_math:
+        # read the cache ONCE in its storage dtype; fp32 accumulation via
+        # preferred_element_type - no materialized fp32 cache copies.
+        qg = (q * dh ** -0.5).reshape(b, 1, kvh, g, dh).astype(k_cache.dtype)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                            preferred_element_type=jnp.float32)
+        valid = jnp.arange(s_max)[None, None, None, None, :] <= pos
+        scores = jnp.where(valid, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(k_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    else:
+        qg = (q * dh ** -0.5).reshape(b, 1, kvh, g, dh).astype(jnp.float32)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                            k_cache.astype(jnp.float32))
+        valid = jnp.arange(s_max)[None, None, None, None, :] <= pos
+        scores = jnp.where(valid, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w,
+                         v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    return out @ p["wo"], (k_cache, v_cache)

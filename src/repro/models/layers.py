@@ -1,0 +1,89 @@
+"""Shared neural building blocks (pure-JAX, no flax): norms, RoPE, GLU MLP,
+embeddings, chunked cross-entropy. Parameters are plain pytrees of arrays;
+every apply function is functional."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(w, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def glu_mlp_init(key, d, ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d, ff), dtype=dtype),
+        "w_up": _init(k2, (d, ff), dtype=dtype),
+        "w_down": _init(k3, (ff, d), dtype=dtype),
+    }
+
+
+def glu_mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return _init(key, (vocab, d), scale=0.02, dtype=dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def cross_entropy_chunked(logits_fn, x, labels, mask, chunk: int = 512):
+    """Streaming CE over sequence chunks so the (B, S, V) logits tensor is
+    never materialized in full. ``logits_fn(x_chunk) -> (B, c, V)``."""
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = x.shape[1] // chunk
+
+    def body(carry, idx):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        logits = logits_fn(xs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        return (tot + jnp.sum(nll), cnt + jnp.sum(ms)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1.0)

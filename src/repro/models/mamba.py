@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD, state-space duality) block - chunked quadratic-intra /
+recurrent-inter algorithm (arXiv:2405.21060), plus O(1)-state single-token
+decode.
+
+TPU-sharding adaptation (documented in DESIGN.md): the fused ``in_proj`` of
+the reference implementation is split into separate z / x / B / C / dt
+projections so each output can carry its own tensor-parallel sharding
+(d_inner and heads shard over 'tp'; the small B/C/dt streams stay
+replicated) - the fused projection would place split points off shard
+boundaries and force per-layer reshards. Depthwise convs split exactly.
+
+The chunk loop is a lax.scan so prefill memory stays O(chunk^2 + state) per
+layer regardless of sequence length."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, rmsnorm
+
+
+def mamba_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    headdim = cfg.ssm_headdim
+    nheads = d_inner // headdim
+    d_state = cfg.ssm_state
+    return d_inner, headdim, nheads, d_state
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, headdim, nheads, d_state = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_z": _init(ks[0], (d, d_inner), dtype=dtype),
+        "in_x": _init(ks[1], (d, d_inner), dtype=dtype),
+        "in_b": _init(ks[2], (d, d_state), dtype=dtype),
+        "in_c": _init(ks[3], (d, d_state), dtype=dtype),
+        "in_dt": _init(ks[4], (d, nheads), dtype=dtype),
+        "conv_x": _init(ks[5], (4, d_inner), scale=0.5, dtype=dtype),
+        "conv_b": _init(ks[5], (4, d_state), scale=0.5, dtype=dtype),
+        "conv_c": _init(ks[5], (4, d_state), scale=0.5, dtype=dtype),
+        "conv_bias_x": jnp.zeros((d_inner,), dtype),
+        "conv_bias_b": jnp.zeros((d_state,), dtype),
+        "conv_bias_c": jnp.zeros((d_state,), dtype),
+        "a_log": jnp.zeros((nheads,), dtype),
+        "d_skip": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": _init(ks[2], (d_inner, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, bias):
+    """Depthwise causal conv, kernel 4, over (B, L, C)."""
+    pad = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    out = (
+        pad[:, 0:-3] * w[0] + pad[:, 1:-2] * w[1]
+        + pad[:, 2:-1] * w[2] + pad[:, 3:] * w[3]
+    )
+    return jax.nn.silu(out + bias)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, chunk: int = 256, init_state=None):
+    """Chunked SSD. x: (B,L,H,P); dt: (B,L,H); a: (H,) (negative);
+    b_mat/c_mat: (B,L,N). Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p_ = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p_).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b_mat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_mat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p_, n), jnp.float32)
+
+    def body(state, inp):
+        xk, dtk, bk, ck = inp                    # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        da = dtk * a                             # (B,Q,H)
+        cums = jnp.cumsum(da, axis=1)            # inclusive cumsum over chunk
+        seg = cums[:, :, None, :] - cums[:, None, :, :]   # (B,Qi,Qj,H)
+        tri = jnp.tril(jnp.ones((xk.shape[1], xk.shape[1]), bool))
+        # mask BEFORE exp: upper-triangle seg is positive and can overflow,
+        # which would poison the backward pass (inf * 0 = nan).
+        seg = jnp.where(tri[None, :, :, None], seg, -1e30)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)  # (B,Qi,Qj)
+        xdt = xk * dtk[..., None]                # (B,Q,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, xdt)
+        # inter-chunk: contribution of incoming state
+        state_decay = jnp.exp(cums)              # (B,Q,H)
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", ck, state, state_decay
+        )
+        # update state: S' = S*exp(sum da) + sum_i exp(cum_end - cum_i) xdt_i b_i
+        total = cums[:, -1]                      # (B,H)
+        rem = jnp.exp(total[:, None, :] - cums)  # (B,Q,H)
+        s_local = jnp.einsum("bqhp,bqn,bqh->bhpn", xdt, bk, rem)
+        state = state * jnp.exp(total)[:, :, None, None] + s_local
+        return state, y_intra + y_inter
+
+    state, ys = jax.lax.scan(body, init_state, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p_)
+    return y[:, :l], state
+
+
+def _project(p, u):
+    z = u @ p["in_z"]
+    x = u @ p["in_x"]
+    b_raw = u @ p["in_b"]
+    c_raw = u @ p["in_c"]
+    dt = u @ p["in_dt"]
+    return z, x, b_raw, c_raw, dt
+
+
+def mamba_forward(p, cfg, u, cache=None, pos=None):
+    """Full-sequence forward. Returns (out, cache); cache = (conv_x_state
+    (B,3,d_inner), conv_b_state, conv_c_state, ssm_state (B,H,P,N))."""
+    d_inner, headdim, nheads, d_state = mamba_dims(cfg)
+    bsz, l, _ = u.shape
+    z, x_raw, b_raw, c_raw, dt = _project(p, u)
+
+    def tail(t):
+        return t[:, -3:, :] if l >= 3 else jnp.pad(
+            t, ((0, 0), (3 - l, 0), (0, 0))
+        )
+
+    conv_state = (tail(x_raw), tail(b_raw), tail(c_raw))
+    x = _causal_conv(x_raw, p["conv_x"], p["conv_bias_x"])
+    b_mat = _causal_conv(b_raw, p["conv_b"], p["conv_bias_b"])
+    c_mat = _causal_conv(c_raw, p["conv_c"], p["conv_bias_c"])
+    x = x.reshape(bsz, l, nheads, headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, state = ssd_scan(
+        x.astype(jnp.float32), dt, a,
+        b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+    )
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm_w"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], conv_state + (state,)
+
+
+def mamba_decode(p, cfg, u, cache):
+    """Single-token decode. u: (B, 1, d)."""
+    d_inner, headdim, nheads, d_state = mamba_dims(cfg)
+    bsz = u.shape[0]
+    cx, cb, cc, ssm_state = cache
+    z, x_raw, b_raw, c_raw, dt = _project(p, u)
+
+    def step_conv(state, new, w, bias):
+        new = new[:, 0]
+        out = (state[:, 0] * w[0] + state[:, 1] * w[1]
+               + state[:, 2] * w[2] + new * w[3])
+        out = jax.nn.silu(out + bias)
+        state = jnp.concatenate([state[:, 1:], new[:, None, :]], axis=1)
+        return out, state
+
+    x, cx = step_conv(cx, x_raw, p["conv_x"], p["conv_bias_x"])
+    b_mat, cb = step_conv(cb, b_raw, p["conv_b"], p["conv_bias_b"])
+    c_mat, cc = step_conv(cc, c_raw, p["conv_c"], p["conv_bias_c"])
+
+    x = x.reshape(bsz, nheads, headdim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)
+    xdt = x * dt[..., None]
+    ssm_state = (
+        ssm_state * da[:, :, None, None]
+        + jnp.einsum("bhp,bn->bhpn", xdt, b_mat.astype(jnp.float32))
+    )
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c_mat.astype(jnp.float32))
+    y = y + x * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = rmsnorm(p["norm_w"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], (cx, cb, cc, ssm_state)
+
+
+def mamba_cache_init(cfg, batch, dtype=jnp.float32):
+    d_inner, headdim, nheads, d_state = mamba_dims(cfg)
+    return (
+        jnp.zeros((batch, 3, d_inner), dtype),
+        jnp.zeros((batch, 3, d_state), dtype),
+        jnp.zeros((batch, 3, d_state), dtype),
+        jnp.zeros((batch, nheads, headdim, d_state), jnp.float32),
+    )

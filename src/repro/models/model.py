@@ -1,0 +1,208 @@
+"""Top-level model assembly: embeddings -> stages -> head, with train loss,
+prefill and single-token decode entry points, plus abstract input specs for
+the multi-pod dry-run (ShapeDtypeStruct only, no allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .layers import embed_init, embed_lookup, rmsnorm, rmsnorm_init, _init, \
+    cross_entropy_chunked
+from .transformer import (
+    build_stages, encoder_stages, stage_init, stages_forward, stages_prefill,
+    stages_decode,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _pdtype(cfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _cast(params):
+    """Mixed precision: fp32 master weights compute in bf16 (grads land on
+    the fp32 masters through the cast)."""
+    return jax.tree.map(
+        lambda w: w.astype(COMPUTE_DTYPE)
+        if w.dtype == jnp.float32 else w,
+        params,
+    )
+
+
+class Model(NamedTuple):
+    cfg: Any
+    stages: Any
+    init_params: Any
+    loss_fn: Any
+    forward_hidden: Any
+    prefill: Any
+    decode_step: Any
+    input_specs: Any
+
+
+def init_params(cfg, key):
+    dtype = _pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    stages = build_stages(cfg)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": _init(ks[1], (cfg.d_model, cfg.vocab_padded), dtype=dtype),
+        "stages": [
+            stage_init(k, cfg, spec, n, dtype)
+            for k, (spec, n) in zip(jax.random.split(ks[2], len(stages)),
+                                    stages)
+        ],
+    }
+    if cfg.family == "audio":
+        enc = encoder_stages(cfg)
+        params["encoder"] = {
+            "stages": [
+                stage_init(k, cfg, spec, n, dtype)
+                for k, (spec, n) in zip(
+                    jax.random.split(ks[3], len(enc)), enc)
+            ],
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+    return params
+
+
+def _embed_inputs(params, cfg, batch):
+    """Returns (x (B,S,d) bf16, positions (B,S), loss_mask (B,S), memory)."""
+    memory = None
+    if cfg.input_mode == "frames":
+        frames = batch["frames"].astype(COMPUTE_DTYPE)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1]), frames.shape[:2]
+        )
+        memory = stages_forward(
+            params["encoder"]["stages"], cfg, encoder_stages(cfg),
+            frames, enc_pos, causal=False,
+        )
+        memory = rmsnorm(params["encoder"]["final_norm"], memory)
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens).astype(COMPUTE_DTYPE)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.input_mode == "tokens+patches":
+        patches = batch["patches"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([patches, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(patches.shape[:2], jnp.float32), mask], axis=1
+        )
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x = sharding.constrain(x, "dp", "tp" if cfg.seq_shard else None, None)
+    return x, positions, mask, memory
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token CE. batch['tokens']: (B, S+1) int32 (inputs||label tail)."""
+    params = _cast(params)
+    tokens = batch["tokens"]
+    inp = {**batch, "tokens": tokens[:, :-1]}
+    x, positions, mask, memory = _embed_inputs(params, cfg, inp)
+    stages = build_stages(cfg)
+    x = stages_forward(params["stages"], cfg, stages, x, positions,
+                       memory=memory)
+    x = rmsnorm(params["final_norm"], x)
+    # align labels with the (possibly patch-prefixed) sequence
+    n_prefix = x.shape[1] - (tokens.shape[1] - 1)
+    labels = tokens[:, 1:]
+    if n_prefix:
+        labels = jnp.concatenate(
+            [jnp.zeros((x.shape[0], n_prefix), labels.dtype), labels], axis=1
+        )
+    head = params["lm_head"]
+
+    def logits_fn(xc):
+        return sharding.constrain(
+            xc.astype(COMPUTE_DTYPE) @ head, "dp", None, "tp"
+        )
+
+    return cross_entropy_chunked(logits_fn, x, labels, mask)
+
+
+def prefill(params, cfg, batch):
+    """Returns (caches, last_logits)."""
+    params = _cast(params)
+    x, positions, _, memory = _embed_inputs(params, cfg, batch)
+    stages = build_stages(cfg)
+    x, caches = stages_prefill(params["stages"], cfg, stages, x, positions,
+                               memory=memory)
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = (x.astype(COMPUTE_DTYPE) @ params["lm_head"])[:, 0]
+    return caches, logits
+
+
+def decode_step(params, cfg, caches, token, pos):
+    """token: (B, 1) int32; pos: () int32. Returns (logits (B, V), caches)."""
+    params = _cast(params)
+    x = embed_lookup(params["embed"], token).astype(COMPUTE_DTYPE)
+    stages = build_stages(cfg)
+    x, caches = stages_decode(params["stages"], cfg, stages, x, caches, pos)
+    x = rmsnorm(params["final_norm"], x)
+    logits = (x.astype(COMPUTE_DTYPE) @ params["lm_head"])[:, 0]
+    return logits, caches
+
+
+def pad_caches(cfg, caches, max_len: int):
+    """Grow self-attention KV caches to max_len slots (serving headroom).
+    Mamba/cross caches are length-independent and pass through."""
+
+    def grow(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("self_k", "self_v"):
+            pad = max_len - leaf.shape[2]   # (period, B, S, KvH, Dh)
+            if pad > 0:
+                leaf = jnp.pad(leaf, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                      (0, 0)))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+def decode_cache_specs(cfg, batch_size: int, seq_len: int):
+    """Abstract cache pytree for the dry-run decode path (no allocation):
+    eval_shape over prefill with abstract inputs of the cache length."""
+    specs = input_specs(cfg, seq_len, batch_size, kind="prefill")
+
+    def f(params, b):
+        return prefill(params, cfg, b)
+
+    params_s = abstract_params(cfg)
+    caches, _ = jax.eval_shape(f, params_s, specs)
+    return caches
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.random.key(0))
+
+
+def input_specs(cfg, seq_len: int, batch: int, kind: str = "train"):
+    """ShapeDtypeStruct stand-ins for every model input."""
+    sd = jax.ShapeDtypeStruct
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if kind == "train":
+        b = {"tokens": sd((batch, seq_len + 1), i32)}
+    elif kind == "prefill":
+        b = {"tokens": sd((batch, seq_len), i32)}
+    elif kind == "decode":
+        return {"token": sd((batch, 1), i32),
+                "pos": sd((), i32)}
+    else:
+        raise ValueError(kind)
+    if cfg.input_mode == "frames":
+        # encoder frames: precomputed frame embeddings (frontend stub)
+        n = seq_len if kind == "train" else seq_len
+        b["frames"] = sd((batch, n, cfg.d_model), bf16)
+    if cfg.input_mode == "tokens+patches":
+        b["patches"] = sd((batch, cfg.num_patch_tokens, cfg.d_model), bf16)
+        # patches occupy part of the sequence budget
+        toks = max(seq_len - cfg.num_patch_tokens, 8)
+        key = "tokens"
+        b[key] = sd((batch, toks + 1 if kind == "train" else toks), i32)
+    return b

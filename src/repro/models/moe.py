@@ -1,0 +1,253 @@
+"""Mixture-of-Experts layer with three interchangeable routers:
+
+  - ``topk``        : standard softmax-top-k gating (baseline).
+  - ``sinkhorn``    : Sinkhorn-normalized balanced gating (baseline; the
+                      numerical method the paper competes with).
+  - ``pushrelabel`` : THE PAPER. Token->expert assignment is an unbalanced
+                      optimal-transport instance (tokens supply k units each,
+                      experts demand capacity); we run a fixed budget of
+                      integer push-relabel phases (transport._phase) inside
+                      the training step. BASE-layers (arXiv:2103.16716)
+                      formulated routing as exactly this assignment problem,
+                      solved there with the Hungarian method / auction; the
+                      push-relabel solver gives the O(log n / eps^2)-depth
+                      parallel version.
+
+Expert parallelism: experts are sharded over the 'model' mesh axis;
+activations are replicated across it, so each shard dispatches to its local
+experts only (no all_to_all) and partial outputs are combined with one psum -
+the same collective volume as a Megatron TP MLP. Dispatch is sort-based
+(argsort by expert id -> rank-within-expert -> capacity-bounded scatter), no
+(T, E, C) one-hot tensors.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, glu_mlp_init, glu_mlp
+from repro.core.transport import OTState, _phase
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, e, ffe = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, e), scale=0.02, dtype=jnp.float32),
+        "w_gate": _init(ks[1], (e, d, ffe), dtype=dtype),
+        "w_up": _init(ks[2], (e, d, ffe), dtype=dtype),
+        "w_down": _init(ks[3], (e, ffe, d), dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = glu_mlp_init(
+            ks[4], d, cfg.num_shared_experts * ffe, dtype=dtype
+        )
+    return p
+
+
+# --------------------------------------------------------------------------
+# Routers: all return (sel (T, k) int32, gates (T, k) float32).
+# --------------------------------------------------------------------------
+
+def route_topk(logits, k):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, sel = jax.lax.top_k(probs, k)
+    return sel.astype(jnp.int32), gates / jnp.maximum(
+        gates.sum(-1, keepdims=True), 1e-9
+    )
+
+
+def route_sinkhorn(logits, k, iters: int = 8):
+    """Balanced gating via Sinkhorn normalization of the prob matrix
+    (S-BASE style). Selection through the balanced matrix, gate values from
+    the raw softmax (straight-through)."""
+    t, e = logits.shape
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    f = jnp.zeros((t,))
+    g = jnp.zeros((e,))
+    log_cap = math.log(1.0 / e)
+
+    def body(_, fg):
+        f, g = fg
+        g = log_cap - jax.nn.logsumexp(logp + f[:, None], axis=0)
+        f = -math.log(t) * 0 - jax.nn.logsumexp(logp + g[None, :], axis=1)
+        return f, g
+
+    f, g = jax.lax.fori_loop(0, iters, body, (f, g))
+    balanced = logp + f[:, None] + g[None, :]
+    _, sel = jax.lax.top_k(jax.lax.stop_gradient(balanced), k)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates = jnp.take_along_axis(probs, sel, axis=1)
+    return sel.astype(jnp.int32), gates / jnp.maximum(
+        gates.sum(-1, keepdims=True), 1e-9
+    )
+
+
+def pushrelabel_assign(
+    affinity: jnp.ndarray,
+    k: int,
+    capacity: int,
+    *,
+    levels: int = 16,
+    phases: int = 12,
+    max_rounds: int = 8,
+) -> jnp.ndarray:
+    """Balanced token->expert flows via a fixed budget of push-relabel
+    phases on the integer OT instance (supplies = k per token, demands =
+    capacity per expert, cost = quantized -affinity). Returns (T, E) int32
+    flow. Runs entirely inside jit (fori_loop over _phase)."""
+    t, e = affinity.shape
+    aff = affinity.astype(jnp.float32)
+    lo = jnp.min(aff)
+    hi = jnp.max(aff)
+    cost = (hi - aff) / jnp.maximum(hi - lo, 1e-9)         # in [0, 1]
+    c_int = jnp.clip(
+        jnp.floor(cost * levels).astype(jnp.int32), 0, levels
+    )
+    eps = 1.0 / levels
+    # zeros derived from the (possibly shard_map-varying) cost matrix so the
+    # fori/while carries keep consistent varying-axes under shard_map
+    zero_t = c_int[:, 0] * 0
+    zero_e = c_int[0, :] * 0
+    zero_s = jnp.sum(c_int[:1, :1]) * 0
+    init = OTState(
+        y_b=zero_t + 1,
+        ya_hi=zero_e,
+        free_b=zero_t + k,
+        free_a=zero_e + capacity,
+        f_hi=c_int * 0,
+        f_lo=c_int * 0,
+        phases=zero_s,
+        rounds=zero_s,
+    )
+    state = jax.lax.fori_loop(
+        0, phases, lambda _, s: _phase(c_int, s, max_rounds), init
+    )
+    return state.f_hi + state.f_lo
+
+
+def route_pushrelabel(logits, k, *, phases: int = 24):
+    t, e = logits.shape
+    capacity = -(-t * k // e)  # ceil: perfectly balanced demand
+    flow = pushrelabel_assign(
+        jax.lax.stop_gradient(logits), k, capacity, phases=phases
+    )
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    # Expand the flow MULTISET into k slots (flow[t,e] units can exceed 1;
+    # a distinct-expert top_k would spill extra slots onto hot experts).
+    # Unmatched units fall back to the best expert with residual capacity.
+    residual = jnp.maximum(capacity - jnp.sum(flow, axis=0), 0)
+    base = probs + (residual[None, :] > 0).astype(jnp.float32) * 2.0
+    score = flow.astype(jnp.float32) * 10.0 + base
+    sels = []
+    for _ in range(k):
+        pick = jnp.argmax(score, axis=1)
+        sels.append(pick.astype(jnp.int32))
+        # consume one flow unit (or burn the fallback bonus) at the pick
+        score = score.at[jnp.arange(t), pick].add(-10.0)
+    sel = jnp.stack(sels, axis=1)
+    gates = jnp.take_along_axis(probs, sel, axis=1)
+    return sel.astype(jnp.int32), gates / jnp.maximum(
+        gates.sum(-1, keepdims=True), 1e-9
+    )
+
+
+ROUTERS = {
+    "topk": lambda logits, k: route_topk(logits, k),
+    "sinkhorn": lambda logits, k: route_sinkhorn(logits, k),
+    "pushrelabel": lambda logits, k: route_pushrelabel(logits, k),
+}
+
+
+# --------------------------------------------------------------------------
+# Sort-based capacity dispatch (local experts [e0, e0 + e_loc)).
+# --------------------------------------------------------------------------
+
+def _dispatch_local(tokens, sel, gates, e0, e_loc, cap):
+    """tokens (T,d); sel/gates (T,k). Returns (buffer (e_loc*cap, d),
+    buf_gate (e_loc*cap,), src_token (e_loc*cap,) int32 with -1 holes)."""
+    t, d = tokens.shape
+    k = sel.shape[1]
+    flat_e = (sel - e0).reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_gate = gates.reshape(-1)
+    local = (flat_e >= 0) & (flat_e < e_loc)
+    key = jnp.where(local, flat_e, e_loc)
+    order = jnp.argsort(key, stable=True)
+    e_sorted = key[order]
+    # rank within expert segment
+    idx = jnp.arange(t * k, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.array([True]), e_sorted[1:] != e_sorted[:-1]]
+    )
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0)
+    )
+    rank = idx - seg_start
+    ok = (e_sorted < e_loc) & (rank < cap)
+    slot = jnp.where(ok, e_sorted * cap + rank, e_loc * cap)
+    buffer = jnp.zeros((e_loc * cap, d), tokens.dtype).at[slot].set(
+        tokens[flat_tok[order]], mode="drop"
+    )
+    buf_gate = jnp.zeros((e_loc * cap,), jnp.float32).at[slot].set(
+        flat_gate[order], mode="drop"
+    )
+    src = jnp.full((e_loc * cap,), -1, jnp.int32).at[slot].set(
+        flat_tok[order], mode="drop"
+    )
+    return buffer, buf_gate, src
+
+
+def moe_local_forward(p_experts, cfg, tokens, sel, gates, e0, e_loc):
+    """Per-shard expert compute: dispatch -> GLU experts -> weighted return.
+    tokens: (T, d). Returns partial (T, d) covering local experts only."""
+    t, d = tokens.shape
+    cap = int(t * cfg.top_k / cfg.num_experts * cfg.capacity_factor) + 1
+    buffer, buf_gate, src = _dispatch_local(tokens, sel, gates, e0, e_loc, cap)
+    xb = buffer.reshape(e_loc, cap, d)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", xb, p_experts["w_gate"])
+    ) * jnp.einsum("ecd,edf->ecf", xb, p_experts["w_up"])
+    yb = jnp.einsum("ecf,efd->ecd", h, p_experts["w_down"])
+    y_flat = yb.reshape(e_loc * cap, d) * buf_gate[:, None].astype(yb.dtype)
+    out = jnp.zeros((t, d), yb.dtype).at[
+        jnp.where(src >= 0, src, t)
+    ].add(y_flat, mode="drop")
+    return out
+
+
+def moe_forward(p, cfg, x, *, axis_name=None):
+    """x: (B, S, d). Inside shard_map (axis_name set) the expert weights
+    arrive pre-sharded along the expert dim (block (E_loc, ...)); the local
+    expert range is derived from the block shape and axis index, and partial
+    outputs are psum-combined across the axis."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    logits = tokens.astype(jnp.float32) @ p["router"]
+    sel, gates = ROUTERS[cfg.router](logits, cfg.top_k)
+    e_loc = p["w_gate"].shape[0]
+    if axis_name is not None:
+        e0 = jax.lax.axis_index(axis_name) * e_loc
+    else:
+        e0 = 0
+    experts = {k_: p[k_] for k_ in ("w_gate", "w_up", "w_down")}
+    out = moe_local_forward(experts, cfg, tokens, sel, gates, e0, e_loc)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if cfg.num_shared_experts:
+        out = out + glu_mlp(p["shared"], x)
+    return out
+
+
+def load_balance_stats(logits, sel, num_experts):
+    """Aux metrics: expert load entropy + max/mean load ratio."""
+    t = sel.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[sel.reshape(-1)].add(1.0)
+    load = counts / jnp.maximum(counts.sum(), 1.0)
+    entropy = -jnp.sum(load * jnp.log(load + 1e-9))
+    imbalance = jnp.max(counts) / jnp.maximum(counts.mean(), 1e-9)
+    return {"load_entropy": entropy, "load_imbalance": imbalance}

@@ -1,0 +1,70 @@
+"""Greedy maximal matching: validity, maximality, admissibility (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matching import greedy_maximal_matching
+
+
+def _run(c_int, y_b, y_a, bprime, salt=0):
+    mm = greedy_maximal_matching(
+        jnp.asarray(c_int, jnp.int32),
+        jnp.asarray(y_b, jnp.int32),
+        jnp.asarray(y_a, jnp.int32),
+        jnp.asarray(bprime, bool),
+        jnp.int32(salt),
+    )
+    return np.asarray(mm.mprime_b), np.asarray(mm.mprime_a), int(mm.rounds)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+    density=st.sampled_from([0.0, 0.1, 0.5, 1.0]),
+)
+def test_maximal_matching_properties(m, n, seed, density):
+    rng = np.random.default_rng(seed)
+    # Build admissibility directly: c = y_b + y_a - 1 on admissible edges.
+    y_b = rng.integers(0, 5, size=m).astype(np.int32)
+    y_a = -rng.integers(0, 5, size=n).astype(np.int32)
+    adm = rng.uniform(size=(m, n)) < density
+    c = y_b[:, None] + y_a[None, :] - 1 + 10 * (~adm).astype(np.int32)
+    bprime = rng.uniform(size=m) < 0.7
+    mb, ma, rounds = _run(c, y_b, y_a, bprime)
+
+    # 1. valid matching, consistent two-sided pointers
+    matched_rows = np.where(mb >= 0)[0]
+    cols = mb[matched_rows]
+    assert len(np.unique(cols)) == len(cols)
+    for r_, c_ in zip(matched_rows, cols):
+        assert ma[c_] == r_
+    # 2. only B' rows matched, only admissible edges used
+    assert all(bprime[r_] for r_ in matched_rows)
+    assert all(adm[r_, c_] for r_, c_ in zip(matched_rows, cols))
+    # 3. maximality: no admissible edge between unmatched B' row & unmatched col
+    free_rows = bprime & (mb < 0)
+    free_cols = ma < 0
+    assert not adm[np.ix_(free_rows, free_cols)].any()
+    # 4. parallel depth sanity
+    assert rounds <= min(m, n) + 1
+
+
+def test_empty_bprime():
+    mb, ma, rounds = _run(np.zeros((4, 4)), np.ones(4), np.zeros(4),
+                          np.zeros(4, bool))
+    assert (mb == -1).all() and (ma == -1).all()
+
+
+def test_full_bipartite_logarithmic_rounds():
+    """Complete admissible graph: randomized proposals resolve contention in
+    far fewer than n rounds (the deterministic first-available strategy
+    would need n)."""
+    n = 64
+    y_b = np.ones(n, np.int32)
+    y_a = np.zeros(n, np.int32)
+    c = np.zeros((n, n), np.int32)  # all edges admissible: 1 + 0 == 0 + 1
+    mb, ma, rounds = _run(c, y_b, y_a, np.ones(n, bool))
+    assert (mb >= 0).all()
+    assert rounds <= 16  # expected O(log n)

@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + train-grad step, prefill + decode; asserts shapes and finiteness.
+(Full configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, reduced
+from repro.models import model as M
+
+ALL_ARCHS = sorted(ARCHS.keys())
+
+
+def _concretize(specs, seed=0):
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32 and v.shape:
+            out[k] = jax.random.randint(jax.random.key(seed), v.shape, 0, 500)
+        elif not v.shape:
+            out[k] = jnp.int32(0)
+        else:
+            out[k] = jax.random.normal(
+                jax.random.key(seed + 1), v.shape, jnp.float32
+            ).astype(v.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_forward_and_grad(arch):
+    cfg = reduced(ARCHS[arch])
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = _concretize(M.input_specs(cfg, 64, 2, "train"))
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch)
+    )(params)
+    assert np.isfinite(float(loss))
+    assert 2.0 < float(loss) < 12.0  # ~ln(vocab) at init
+    gn = sum(
+        float(jnp.sum(g.astype(jnp.float32) ** 2))
+        for g in jax.tree.leaves(grads)
+    )
+    assert np.isfinite(gn) and gn > 0.0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = reduced(ARCHS[arch])
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = _concretize(M.input_specs(cfg, 32, 2, "prefill"))
+    caches, logits0 = M.prefill(params, cfg, batch)
+    assert logits0.shape == (2, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits0).all())
+    caches = M.pad_caches(cfg, caches, 48)
+    tok = jnp.ones((2, 1), jnp.int32)
+    for step in range(2):
+        logits, caches = M.decode_step(
+            params, cfg, caches, tok, jnp.int32(32 + step)
+        )
+        assert logits.shape == (2, cfg.vocab_padded)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+def test_decode_matches_forward_logits():
+    """Greedy parity: decode-step logits must match teacher-forced forward
+    logits position by position (dense arch)."""
+    cfg = reduced(ARCHS["qwen3-4b"])
+    params = M.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(9), (1, 12), 0, 400)
+    caches, lg_prefill = M.prefill(params, cfg, {"tokens": toks})
+    caches = M.pad_caches(cfg, caches, 16)
+    lg_step, _ = M.decode_step(
+        params, cfg, M.pad_caches(
+            cfg, M.prefill(params, cfg, {"tokens": toks[:, :-1]})[0], 16
+        ),
+        toks[:, -1:], jnp.int32(11),
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg_prefill, np.float32),
+        np.asarray(lg_step, np.float32),
+        rtol=0.15, atol=0.15,  # bf16 accumulation differences
+    )
+
+
+def test_ssm_decode_matches_forward():
+    """Mamba2: recurrent single-step decode must track the chunked SSD scan."""
+    cfg = reduced(ARCHS["mamba2-2.7b"])
+    params = M.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(2), (1, 9), 0, 400)
+    _, lg_full = M.prefill(params, cfg, {"tokens": toks})
+    caches, _ = M.prefill(params, cfg, {"tokens": toks[:, :-1]})
+    lg_step, _ = M.decode_step(params, cfg, caches, toks[:, -1:],
+                               jnp.int32(8))
+    np.testing.assert_allclose(
+        np.asarray(lg_full, np.float32), np.asarray(lg_step, np.float32),
+        rtol=0.15, atol=0.15,
+    )
+
+
+@pytest.mark.parametrize("router", ["topk", "sinkhorn", "pushrelabel"])
+def test_moe_routers_in_model(router):
+    cfg = reduced(ARCHS["deepseek-moe-16b"]).with_(router=router)
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = _concretize(M.input_specs(cfg, 64, 2, "train"))
+    loss = float(M.loss_fn(params, cfg, batch))
+    assert np.isfinite(loss)
+
+
+def test_pushrelabel_router_balances_skewed_logits():
+    """On adversarially skewed logits top-k collapses onto one expert;
+    the paper's balanced-assignment router caps every expert at capacity."""
+    from repro.models.moe import route_topk, route_pushrelabel
+
+    t, e, k = 512, 8, 1
+    logits = jnp.concatenate(
+        [jnp.full((t, 1), 5.0), jax.random.normal(jax.random.key(0), (t, e - 1))],
+        axis=1,
+    )
+    sel_t, _ = route_topk(logits, k)
+    sel_p, _ = route_pushrelabel(logits, k)
+    load_t = np.bincount(np.asarray(sel_t).ravel(), minlength=e)
+    load_p = np.bincount(np.asarray(sel_p).ravel(), minlength=e)
+    assert load_t.max() > 0.9 * t          # collapse
+    assert load_p.max() <= t / e + 1       # balanced to capacity
+
+
+def test_full_configs_construct_abstractly():
+    """Full production configs build abstract param trees (no allocation)."""
+    for arch in ALL_ARCHS:
+        cfg = ARCHS[arch]
+        tree = M.abstract_params(cfg)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+        assert n > 1e8, (arch, n)

@@ -1,0 +1,78 @@
+"""Optimizer unit tests: convergence on quadratics, factored-state shapes,
+int8 error-feedback compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizer import (
+    adamw_init, adamw_update, adafactor_init, adafactor_update,
+    clip_by_global_norm, cosine_schedule, compress_int8, decompress_int8,
+)
+
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array([[1.0, -1.0]] * 2)}
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_converges_on_quadratic(opt):
+    params = _quadratic_params()
+    if opt == "adamw":
+        state = adamw_init(params)
+        upd = lambda p, g, s: adamw_update(p, g, s, lr=0.05, wd=0.0)
+    else:
+        state = adafactor_init(params)
+        upd = lambda p, g, s: adafactor_update(p, g, s, lr=0.05, wd=0.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = upd(params, g, state)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "v": jnp.zeros((7,))}
+    st = adafactor_init(params)
+    assert st.v["w"][0].shape == (64,)
+    assert st.v["w"][1].shape == (32,)
+    assert st.v["v"][0].shape == (7,)
+    # factored state is ~ (m+n) instead of m*n
+    n_state = sum(x.size for x in jax.tree.leaves(st.v))
+    assert n_state == 64 + 32 + 7
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) < 1e-3 / 5
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=0.1)
+    assert float(lr(jnp.int32(100))) < 1e-5 + 1e-9
+
+
+def test_int8_error_feedback_is_unbiased_over_steps():
+    """Error feedback: accumulated quantization error stays bounded and the
+    running sum of decompressed grads tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    err = jnp.zeros_like(g_true)
+    acc_true = np.zeros(512)
+    acc_deq = np.zeros(512)
+    for step in range(50):
+        g = g_true * (1.0 + 0.1 * step)
+        q, scale, err = compress_int8(g, err)
+        acc_true += np.asarray(g)
+        acc_deq += np.asarray(decompress_int8(q, scale))
+    # residual error is bounded by one quantization step, not O(steps)
+    resid = np.abs(acc_true - acc_deq).max()
+    assert resid <= float(scale) * 2.0

@@ -1,0 +1,128 @@
+"""Assignment solver: accuracy vs exact oracle + paper invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pushrelabel import (
+    solve_assignment,
+    solve_assignment_int,
+    complete_matching,
+    round_costs,
+)
+from repro.core.feasibility import check_invariants
+from repro.core.exact import exact_assignment_cost
+from repro.core.costs import build_cost_matrix
+
+
+def _points_cost(n, m=None, seed=0):
+    rng = np.random.default_rng(seed)
+    m = m or n
+    x = rng.uniform(size=(m, 2))
+    y = rng.uniform(size=(n, 2))
+    return np.asarray(build_cost_matrix(x, y, "euclidean"))
+
+
+@pytest.mark.parametrize("n", [5, 40, 150])
+@pytest.mark.parametrize("eps", [0.2, 0.05, 0.01])
+def test_additive_bound_vs_exact(n, eps):
+    c = _points_cost(n, seed=n)
+    r = solve_assignment(jnp.asarray(c), eps)
+    opt = exact_assignment_cost(c)
+    assert float(r.cost) <= opt + 3.0 * eps * n * c.max() + 1e-5
+    # perfect matching
+    m = np.asarray(r.matching)
+    assert (m >= 0).all() and len(np.unique(m)) == n
+
+
+def test_guaranteed_flag_tightens():
+    c = _points_cost(80, seed=3)
+    opt = exact_assignment_cost(c)
+    r = solve_assignment(jnp.asarray(c), 0.09, guaranteed=True)
+    assert float(r.cost) <= opt + 0.09 * 80 * c.max() + 1e-5
+
+
+@pytest.mark.parametrize("eps", [0.1, 0.02])
+def test_invariants_hold_at_termination(eps):
+    c = _points_cost(60, seed=7)
+    scale = c.max()
+    c_int = round_costs(jnp.asarray(c / scale), eps)
+    st_ = solve_assignment_int(c_int, eps)
+    checks = check_invariants(c_int, st_.y_b, st_.y_a, st_.match_ba, eps)
+    assert all(checks.values()), checks
+
+
+def test_unbalanced_rows_less_than_cols():
+    c = _points_cost(90, m=40, seed=9)
+    r = solve_assignment(jnp.asarray(c), 0.05)
+    m = np.asarray(r.matching)
+    assert (m >= 0).all() and len(np.unique(m)) == 40  # all supplies matched
+    opt = exact_assignment_cost(c)  # scipy matches all rows of min side
+    assert float(r.cost) <= opt + 3 * 0.05 * 40 * c.max() + 1e-5
+
+
+def test_phase_and_sum_ni_bounds():
+    """Eq. (4): sum n_i <= n(1+2e)/e ; t <= (1+2e)/e^2."""
+    n, eps = 120, 0.05
+    c = _points_cost(n, seed=11)
+    c_int = round_costs(jnp.asarray(c / c.max()), eps)
+    st_ = solve_assignment_int(c_int, eps)
+    assert int(st_.sum_ni) <= n * (1 + 2 * eps) / eps + 1
+    assert int(st_.phases) <= (1 + 2 * eps) / eps**2 + 1
+
+
+def test_matching_cardinality_at_termination():
+    n, eps = 100, 0.1
+    c = _points_cost(n, seed=13)
+    c_int = round_costs(jnp.asarray(c / c.max()), eps)
+    st_ = solve_assignment_int(c_int, eps)
+    assert int(jnp.sum(st_.match_ba >= 0)) >= (1 - eps) * n - 1
+
+
+def test_zero_cost_matrix():
+    c = jnp.zeros((12, 12))
+    r = solve_assignment(c, 0.1)
+    assert float(r.cost) == 0.0
+    assert len(np.unique(np.asarray(r.matching))) == 12
+
+
+def test_complete_matching_fills_all_rows():
+    match_ba = jnp.array([2, -1, 0, -1], dtype=jnp.int32)
+    match_ab = jnp.array([2, -1, 0, -1, -1], dtype=jnp.int32)
+    full = np.asarray(complete_matching(match_ba, match_ab))
+    assert (full >= 0).all()
+    assert len(np.unique(full)) == 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 24),
+    eps=st.sampled_from([0.3, 0.1, 0.05]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_random_costs(n, eps, seed):
+    """Bound + invariants + perfect matching on arbitrary random costs."""
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(size=(n, n)).astype(np.float32)
+    r = solve_assignment(jnp.asarray(c), eps)
+    opt = exact_assignment_cost(c)
+    assert float(r.cost) <= opt + 3 * eps * n * c.max() + 1e-4
+    m = np.asarray(r.matching)
+    assert (m >= 0).all() and len(np.unique(m)) == n
+    c_int = round_costs(jnp.asarray(c / c.max()), eps)
+    st_ = solve_assignment_int(c_int, eps)
+    checks = check_invariants(c_int, st_.y_b, st_.y_a, st_.match_ba, eps)
+    assert all(checks.values()), checks
+
+
+def test_duals_certify_weak_lower_bound():
+    """sum(y) - eps*n is a certified lower bound on OPT (rounded costs)."""
+    n, eps = 80, 0.05
+    c = _points_cost(n, seed=17)
+    scale = float(c.max())
+    c_int = round_costs(jnp.asarray(c / scale), eps)
+    st_ = solve_assignment_int(c_int, eps)
+    # Lemma 3.1 internals: sum of duals <= c_int(M_opt) + n (int units)
+    total_dual = int(jnp.sum(st_.y_b) + jnp.sum(st_.y_a))
+    opt_int = exact_assignment_cost(np.asarray(c_int))
+    assert total_dual <= opt_int + n

@@ -1,0 +1,156 @@
+"""Distributed push-relabel == single-device push-relabel, bit for bit.
+
+Runs in a subprocess with XLA_FLAGS forcing 8 host devices (the parent
+test process must keep seeing 1 device)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.pushrelabel import solve_assignment
+from repro.core.sharded import (
+    solve_assignment_sharded, solve_assignment_shardmap, lower_sharded_solver,
+)
+from repro.launch.mesh import make_small_mesh
+
+rng = np.random.default_rng(0)
+n = 96
+c = rng.uniform(size=(n, n)).astype(np.float32)
+mesh = make_small_mesh((2, 4), ("data", "model"))
+
+r_single = solve_assignment(jnp.asarray(c), 0.05)
+r_shard = solve_assignment_sharded(jnp.asarray(c), 0.05, mesh)
+r_manual = solve_assignment_shardmap(jnp.asarray(c), 0.05, mesh)
+
+out = {
+    "match_equal": bool(
+        (np.asarray(r_single.matching) == np.asarray(r_shard.matching)).all()
+    ),
+    "manual_equal": bool(
+        (np.asarray(r_single.matching)
+         == np.asarray(r_manual.matching)).all()
+    ) and int(r_manual.phases) == int(r_single.phases),
+    "cost_single": float(r_single.cost),
+    "cost_shard": float(r_shard.cost),
+    "phases_equal": int(r_single.phases) == int(r_shard.phases),
+}
+
+# AOT path: the solver lowers + compiles on the mesh without allocating C
+lowered = lower_sharded_solver(1024, 0.05, mesh)
+compiled = lowered.compile()
+hlo = compiled.as_text()
+out["has_collectives"] = any(
+    op in hlo for op in ("all-reduce", "all-gather", "collective-permute")
+)
+out["flops"] = compiled.cost_analysis().get("flops", 0)
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_solver_matches_single_device():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["match_equal"], out
+    assert out["manual_equal"], out   # explicit shard_map schedule too
+    assert out["phases_equal"], out
+    assert out["cost_single"] == pytest.approx(out["cost_shard"], rel=1e-6)
+    assert out["has_collectives"], "SPMD partition produced no collectives"
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_reshard(tmp_path):
+    """Checkpoint written on 1 device restores sharded onto an 8-device
+    mesh (elastic rescale) with identical values."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.checkpoint import checkpointing as ckpt
+
+    tree = {"w": jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),
+            "b": jnp.ones((16,), jnp.bfloat16)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, tree)
+
+    script = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=8'\n"
+        "import json\n"
+        "import numpy as np\n"
+        "import jax, jax.numpy as jnp\n"
+        "from jax.sharding import NamedSharding, PartitionSpec as P\n"
+        "from repro.checkpoint import checkpointing as ckpt\n"
+        "from repro.launch.mesh import make_small_mesh\n"
+        "mesh = make_small_mesh((2, 4), ('data', 'model'))\n"
+        "like = {'w': jnp.zeros((64, 32), jnp.float32),\n"
+        "        'b': jnp.zeros((16,), jnp.bfloat16)}\n"
+        "sh = {'w': NamedSharding(mesh, P('data', 'model')),\n"
+        "      'b': NamedSharding(mesh, P('model'))}\n"
+        f"out = ckpt.restore({d!r}, 3, like, shardings=sh)\n"
+        "ok_val = bool((np.asarray(out['w']) == "
+        "np.arange(64*32, dtype=np.float32).reshape(64, 32)).all())\n"
+        "n_shards = len(out['w'].sharding.device_set)\n"
+        "print('RESULT:' + json.dumps({'ok': ok_val, "
+        "'n_shards': n_shards}))\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["ok"] and out["n_shards"] == 8, out
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_cells():
+    """CI-scale dry-run: reduced configs on a 2x4 mesh must lower+compile
+    for one representative arch per family x kind."""
+    cells = [
+        ("qwen3-4b", "train_4k"),
+        ("deepseek-moe-16b", "train_4k"),
+        ("mamba2-2.7b", "decode_32k"),
+        ("seamless-m4t-medium", "prefill_32k"),
+        ("jamba-1.5-large-398b", "decode_32k"),
+        ("llava-next-mistral-7b", "train_4k"),
+    ]
+    script = (
+        "import json\n"
+        "from repro.launch.dryrun import run_cell\n"
+        f"cells = {cells!r}\n"
+        "outs = [run_cell(a, s, small=True, smoke=True, unroll=False)"
+        " for a, s in cells]\n"
+        "print('RESULT:' + json.dumps("
+        "[{'arch': o['arch'], 'ok': o['ok'], 'err': o.get('error')}"
+        " for o in outs]))\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    outs = json.loads(line[0][len("RESULT:"):])
+    for o in outs:
+        assert o["ok"], o

@@ -1,0 +1,118 @@
+"""Clustered OT solver: accuracy vs LP, equivalence-class vs explicit copies,
+marginal exactness, Lemma 4.1 invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transport import solve_ot, northwest_corner
+from repro.core.copies import solve_ot_via_copies
+from repro.core.exact import exact_ot_cost
+from repro.core.costs import build_cost_matrix
+from repro.core.feasibility import check_ot_invariants
+
+
+def _instance(n, seed=0, na=None):
+    rng = np.random.default_rng(seed)
+    na = na or n
+    x = rng.uniform(size=(n, 2))
+    y = rng.uniform(size=(na, 2))
+    c = np.asarray(build_cost_matrix(x, y, "euclidean"))
+    nu = rng.dirichlet(np.ones(n))
+    mu = rng.dirichlet(np.ones(na))
+    return c, nu, mu
+
+
+@pytest.mark.parametrize("n,eps", [(10, 0.1), (40, 0.1), (40, 0.03), (80, 0.05)])
+def test_additive_bound_vs_lp(n, eps):
+    c, nu, mu = _instance(n, seed=n)
+    opt = exact_ot_cost(c, nu, mu)
+    r = solve_ot(jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), eps)
+    assert float(r.cost) <= opt + 3 * eps * c.max() + 1e-4
+
+
+@pytest.mark.parametrize("n", [10, 50])
+def test_exact_marginals(n):
+    c, nu, mu = _instance(n, seed=n + 1)
+    r = solve_ot(jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), 0.05)
+    p = np.asarray(r.plan)
+    assert (p >= -1e-9).all()
+    np.testing.assert_allclose(p.sum(1), nu, atol=2e-6)
+    np.testing.assert_allclose(p.sum(0), mu, atol=2e-6)
+
+
+def test_matches_explicit_copies_reduction():
+    """The clustered solver and the literal Section-4 copies reduction must
+    both land within the same additive envelope of the LP optimum."""
+    c, nu, mu = _instance(12, seed=5)
+    eps, theta = 0.1, 160.0
+    opt = exact_ot_cost(c, nu, mu)
+    r = solve_ot(
+        jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), eps, theta=theta
+    )
+    plan_cp, cost_cp, _, _, _ = solve_ot_via_copies(c, nu, mu, eps, theta)
+    env = 3 * eps * c.max() + 2 * 12 / theta * c.max()
+    assert float(r.cost) <= opt + env + 1e-4
+    assert cost_cp <= opt + env + 1e-4
+
+
+@pytest.mark.parametrize("eps", [0.1, 0.03])
+def test_ot_invariants_at_termination(eps):
+    c, nu, mu = _instance(30, seed=23)
+    r = solve_ot(jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), eps)
+    scale = c.max()
+    c_int = np.floor(c / scale / eps).astype(np.int32)
+    checks = check_ot_invariants(c_int, r.state, r.s_int, r.d_int, eps)
+    assert all(checks.values()), checks
+
+
+def test_unbalanced_supports():
+    c, nu, mu = _instance(20, seed=31, na=35)
+    opt = exact_ot_cost(c, nu, mu)
+    r = solve_ot(jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), 0.05)
+    assert float(r.cost) <= opt + 3 * 0.05 * c.max() + 1e-4
+    np.testing.assert_allclose(np.asarray(r.plan).sum(1), nu, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(r.plan).sum(0), mu, atol=2e-6)
+
+
+def test_assignment_special_case_through_ot():
+    """Uniform masses 1/n: OT == assignment/n."""
+    n = 25
+    c, _, _ = _instance(n, seed=41)
+    u = np.full(n, 1.0 / n)
+    opt = exact_ot_cost(c, u, u)
+    r = solve_ot(jnp.asarray(c), jnp.asarray(u), jnp.asarray(u), 0.05)
+    assert float(r.cost) <= opt + 3 * 0.05 * c.max() + 1e-4
+
+
+def test_northwest_corner_marginals():
+    rng = np.random.default_rng(0)
+    r = rng.dirichlet(np.ones(17))
+    c = rng.dirichlet(np.ones(9))
+    p = np.asarray(northwest_corner(jnp.asarray(r), jnp.asarray(c)))
+    np.testing.assert_allclose(p.sum(1), r, atol=1e-6)
+    np.testing.assert_allclose(p.sum(0), c, atol=1e-6)
+    assert (p >= -1e-9).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 16),
+    eps=st.sampled_from([0.2, 0.08]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_random_ot(n, eps, seed):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(size=(n, n)).astype(np.float32)
+    nu = rng.dirichlet(np.ones(n))
+    mu = rng.dirichlet(np.ones(n))
+    opt = exact_ot_cost(c, nu, mu)
+    r = solve_ot(jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), eps)
+    assert float(r.cost) <= opt + 3 * eps * c.max() + 1e-4
+    p = np.asarray(r.plan)
+    np.testing.assert_allclose(p.sum(1), nu, atol=3e-6)
+    np.testing.assert_allclose(p.sum(0), mu, atol=3e-6)
+    scale = c.max()
+    c_int = np.floor(c / scale / eps).astype(np.int32)
+    checks = check_ot_invariants(c_int, r.state, r.s_int, r.d_int, eps)
+    assert all(checks.values()), checks

@@ -1,0 +1,146 @@
+"""Batched solver subsystem: throughput of B instances per dispatch.
+
+Three comparisons, honestly separated:
+
+  * ragged  - the serving scenario the subsystem exists for: B requests with
+    long-tail (m, n) shapes. The pre-PR path solves each at its native shape,
+    so every novel shape pays an XLA compile (~0.5 s for the solver loop);
+    the bucketed batched path pads to one bucket shape compiled once ever.
+    Loop timing INCLUDES its per-novel-shape compiles (that is its steady
+    state - fresh shapes keep arriving); batch timing is reported both warm
+    (bucket program already cached, the amortized steady state) and cold.
+  * fixed   - B identical-shape instances with a hot jit cache: isolates the
+    lockstep cost of vmapping the while_loop solver. On CPU this is ~parity
+    at best (finished instances ride along until the slowest converges); on
+    an accelerator the batch fills idle lanes instead.
+  * sinkhorn - batched log-domain Sinkhorn reference at matched accuracy.
+
+    PYTHONPATH=src python -m benchmarks.bench_batched [--full]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched import solve_assignment_batched, solve_ot_batched
+from repro.core.pushrelabel import solve_assignment
+from repro.core.sinkhorn import reg_for_additive_eps, sinkhorn
+from repro.core.transport import solve_ot
+from .common import emit, time_call, uniform_square_points
+
+
+def _instance(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(m, 2)).astype(np.float32)
+    y = rng.uniform(size=(n, 2)).astype(np.float32)
+    d = x[:, None, :] - y[None, :, :]
+    c = np.sqrt((d * d).sum(-1) + 1e-30)
+    nu = rng.dirichlet(np.ones(m)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(n)).astype(np.float32)
+    return c, nu, mu
+
+
+def _fixed_batch(b, n, seed):
+    c = np.zeros((b, n, n), np.float32)
+    nu = np.zeros((b, n), np.float32)
+    mu = np.zeros((b, n), np.float32)
+    for i in range(b):
+        c[i], nu[i], mu[i] = _instance(n, n, seed + 17 * i)
+    return jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu)
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def run_ragged(b, n, eps):
+    """Long-tail shapes in (n/2, n]: native-shape loop (per-shape compile)
+    vs one padded bucket dispatch."""
+    rng = np.random.default_rng(n * b)
+    insts = []
+    while len(insts) < b:
+        m1 = int(rng.integers(n // 2 + 1, n + 1))
+        n1 = int(rng.integers(n // 2 + 1, n + 1))
+        insts.append(_instance(m1, n1, seed=len(insts)))
+    c = np.zeros((b, n, n), np.float32)
+    nu = np.zeros((b, n), np.float32)
+    mu = np.zeros((b, n), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i, (ci, nui, mui) in enumerate(insts):
+        mi, ni = ci.shape
+        c[i, :mi, :ni] = ci
+        nu[i, :mi] = nui
+        mu[i, :ni] = mui
+        sizes[i] = (mi, ni)
+
+    # batched: cold (includes the one-off bucket compile), then warm
+    t_cold = _once(lambda: solve_ot_batched(c, nu, mu, eps, sizes=sizes).cost)
+    t_warm = _once(lambda: solve_ot_batched(c, nu, mu, eps, sizes=sizes).cost)
+
+    # looped at native shapes: every novel (m, n) pays its compile, exactly
+    # like the pre-batching service did on long-tail traffic
+    t_loop = _once(lambda: [
+        solve_ot(jnp.asarray(ci), jnp.asarray(nui), jnp.asarray(mui), eps).cost
+        for ci, nui, mui in insts
+    ])
+
+    emit(f"batched/ot_ragged/B={b}/bucket={n}", t_warm / b,
+         f"inst_per_s={b / t_warm:.1f};loop_native_inst_per_s={b / t_loop:.2f};"
+         f"speedup_vs_native_loop={t_loop / t_warm:.1f}x;"
+         f"cold_batch_s={t_cold:.2f}")
+    return t_loop / t_warm
+
+
+def run_fixed(b, n, eps):
+    c, nu, mu = _fixed_batch(b, n, seed=n + b)
+
+    t_batch = time_call(lambda: solve_assignment_batched(c, eps), repeats=2)
+    t_loop = time_call(
+        lambda: [solve_assignment(c[i], eps).cost for i in range(b)],
+        repeats=2,
+    )
+    emit(f"batched/assignment_fixed/B={b}/n={n}", t_batch / b,
+         f"inst_per_s={b / t_batch:.1f};loop_inst_per_s={b / t_loop:.1f};"
+         f"lockstep_ratio={t_loop / t_batch:.2f}x")
+
+    t_batch = time_call(lambda: solve_ot_batched(c, nu, mu, eps), repeats=2)
+    t_loop = time_call(
+        lambda: [solve_ot(c[i], nu[i], mu[i], eps).cost for i in range(b)],
+        repeats=2,
+    )
+    emit(f"batched/ot_fixed/B={b}/n={n}", t_batch / b,
+         f"inst_per_s={b / t_batch:.1f};loop_inst_per_s={b / t_loop:.1f};"
+         f"lockstep_ratio={t_loop / t_batch:.2f}x")
+
+    reg = reg_for_additive_eps(eps, n)
+    sk_batched = jax.jit(jax.vmap(
+        lambda ci, nui, mui: sinkhorn(ci, nui, mui, reg=reg,
+                                      tol=eps / 8.0, max_iters=2000).cost
+    ))
+    t_sk = time_call(lambda: sk_batched(c, nu, mu), repeats=2)
+    emit(f"batched/sinkhorn/B={b}/n={n}", t_sk / b,
+         f"inst_per_s={b / t_sk:.1f}")
+
+
+def run(full: bool = False):
+    eps = 0.1
+    run_ragged(8, 128, eps)
+    run_ragged(32, 256, eps)
+    for b, n in ([(8, 128), (32, 256)] if not full
+                 else [(8, 128), (32, 256), (64, 256), (32, 512)]):
+        run_fixed(b, n, eps)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full)

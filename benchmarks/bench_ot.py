@@ -12,8 +12,10 @@ from repro.core.exact import exact_ot_cost
 from .common import emit, time_call, uniform_square_points
 
 
-def run(full: bool = False):
+def run(full: bool = False, tiny: bool = False):
     ns = [128, 256] if not full else [256, 512, 1024]
+    if tiny:
+        ns = [64]      # CI smoke: one small grid, seconds on a CPU runner
     for n in ns:
         x, y = uniform_square_points(n, seed=n + 7)
         rng = np.random.default_rng(n)
@@ -38,3 +40,15 @@ def run(full: bool = False):
                 if opt else float("nan")
             emit(f"ot/sinkhorn/n={n}/eps={eps}", t_sk,
                  f"iters={int(rs.iters)};gap={gap_s:.5f}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: single n=64 grid")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, tiny=args.tiny)

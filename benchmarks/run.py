@@ -12,11 +12,11 @@ def main() -> None:
                     help="paper-scale grids (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: synthetic,mnist,phases,"
-                         "routing,ot")
+                         "routing,ot,batched")
     args = ap.parse_args()
 
     from . import bench_synthetic, bench_mnist, bench_phases, \
-        bench_routing, bench_ot
+        bench_routing, bench_ot, bench_batched
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
@@ -24,6 +24,7 @@ def main() -> None:
         "phases": bench_phases.run,         # Section 3.2 bounds
         "ot": bench_ot.run,                 # Section 4 clustered solver
         "routing": bench_routing.run,       # framework integration
+        "batched": bench_batched.run,       # batched serving subsystem
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     print("name,us_per_call,derived")

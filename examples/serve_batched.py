@@ -44,15 +44,32 @@ def main():
         print(f"  req{i}: prefill={o.prefill_len} "
               f"completion={o.tokens[:8]}...")
 
+    # OT endpoint, same submit/run_batch shape as the token engine: mixed-
+    # size distance requests are bucketed and each bucket dispatched as one
+    # XLA program through the batched solver subsystem.
     svc = OTService(eps=0.1)
+    for i in range(args.requests):
+        m = int(rng.integers(40, 160))
+        svc.submit(rng.uniform(size=(m, 2)).astype(np.float32),
+                   rng.uniform(size=(m, 2)).astype(np.float32))
+    t0 = time.perf_counter()
+    res = svc.run_batch()
+    dt = time.perf_counter() - t0
+    print(f"OT batch of {len(res)} served in {dt*1e3:.0f} ms "
+          f"({len(res) / dt:.1f} inst/s)")
+    for i, r in enumerate(res):
+        print(f"  ot{i}: cost={r['cost']:.4f} bucket={r['bucket']} "
+              f"batch_size={r['batch_size']} phases={r['phases']}")
+
+    # one-shot convenience path is unchanged
     x = rng.uniform(size=(128, 2)).astype(np.float32)
     y = rng.uniform(size=(128, 2)).astype(np.float32)
     t0 = time.perf_counter()
-    res = svc.distance(x, y)
-    print(f"OT service: distance={res['cost']:.4f} "
-          f"(dual lb={res['dual_lower_bound']:.4f}) "
+    res1 = svc.distance(x, y)
+    print(f"OT service: distance={res1['cost']:.4f} "
+          f"(dual lb={res1['dual_lower_bound']:.4f}) "
           f"in {(time.perf_counter()-t0)*1e3:.0f} ms, "
-          f"{res['phases']} phases")
+          f"{res1['phases']} phases")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,20 @@
 for assignment and optimal transport, integer-exact, jit-end-to-end."""
 from .pushrelabel import solve_assignment, solve_assignment_int, AssignmentResult
 from .transport import solve_ot, solve_ot_int, OTResult, northwest_corner
+from .batched import (
+    BatchedAssignmentResult,
+    solve_assignment_batched,
+    solve_assignment_ragged,
+    solve_ot_batched,
+    solve_ot_ragged,
+)
 from .costs import build_cost_matrix
 from .sinkhorn import sinkhorn
 
 __all__ = [
     "solve_assignment", "solve_assignment_int", "AssignmentResult",
     "solve_ot", "solve_ot_int", "OTResult", "northwest_corner",
+    "solve_assignment_batched", "solve_assignment_ragged",
+    "solve_ot_batched", "solve_ot_ragged", "BatchedAssignmentResult",
     "build_cost_matrix", "sinkhorn",
 ]

@@ -1,0 +1,293 @@
+"""Batched fixed-shape push-relabel solvers: B instances as one XLA program.
+
+The paper's headline bound is *parallel* time O(log n / eps^2); serving many
+small/medium OT instances means the win comes from amortizing one dispatch
+across a batch (cf. the matrix-batched formulations of Altschuler-Weed-
+Rigollet).  This module vmaps the existing single-instance ``lax.while_loop``
+solvers over a leading batch axis.  JAX's while-loop batching rule runs the
+lockstep loop until every instance's own predicate is false and select-masks
+the carries of finished instances, so each instance executes *exactly* the
+phase sequence it would have executed alone - results are bit-identical to
+unbatched solves (up to the static round cap, which is derived from the
+padded bucket shape and never binds in practice).
+
+Ragged batches are handled by a padding/bucketing layer:
+
+  * instances are padded up to a shape bucket (next power-of-two-ish size);
+  * padded supply rows get zero mass / are masked out of the free set B';
+  * padded demand columns get zero capacity (OT) or a cost so large that no
+    dual sum can ever make them admissible (assignment);
+
+so a padded instance walks the same admissible subgraph, with the same
+deterministic hash keys (keys depend only on *global* (row, col, salt), not
+on the matrix shape), as its unpadded original.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pushrelabel import assignment_pipeline
+from .transport import OTResult, ot_pipeline
+
+DEFAULT_BUCKETS: tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+def next_bucket(k: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket >= k (k itself if it exceeds every bucket)."""
+    for b in buckets:
+        if b >= k:
+            return b
+    return int(k)
+
+
+def _sizes_arrays(sizes, b, m, n):
+    """Host-side (B,) m_valid / n_valid arrays (full shape when sizes=None)."""
+    if sizes is None:
+        return (np.full((b,), m, np.int32), np.full((b,), n, np.int32))
+    sizes = np.asarray(sizes, np.int32)
+    if sizes.shape != (b, 2):
+        raise ValueError(f"sizes must be ({b}, 2), got {sizes.shape}")
+    if (sizes[:, 0] > m).any() or (sizes[:, 1] > n).any():
+        raise ValueError("instance size exceeds padded bucket shape")
+    return sizes[:, 0].copy(), sizes[:, 1].copy()
+
+
+# --------------------------------------------------------------------------
+# Assignment
+# --------------------------------------------------------------------------
+
+class BatchedAssignmentResult(NamedTuple):
+    matching: jnp.ndarray   # (B, M) int32, -1 beyond each instance's rows
+    cost: jnp.ndarray       # (B,) float32
+    y_b: jnp.ndarray        # (B, M) float32 scaled duals
+    y_a: jnp.ndarray        # (B, N) float32 scaled duals
+    phases: jnp.ndarray     # (B,) int32
+    rounds: jnp.ndarray     # (B,) int32
+    matched_before_completion: jnp.ndarray  # (B,) int32
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def _solve_assignment_batched(c, m_valid, n_valid, threshold, eps: float):
+    return jax.vmap(
+        lambda ci, mv, nv, th: assignment_pipeline(
+            ci, eps, m_valid=mv, n_valid=nv, threshold=th
+        )
+    )(c, m_valid, n_valid, threshold)
+
+
+def solve_assignment_batched(
+    c: jnp.ndarray,
+    eps: float,
+    *,
+    sizes=None,
+    guaranteed: bool = False,
+) -> BatchedAssignmentResult:
+    """Solve B assignment instances stacked as one (B, M, N) cost tensor.
+
+    Args:
+      c: (B, M, N) nonnegative float costs; instance i occupies the leading
+        ``sizes[i] = (m_i, n_i)`` block (m_i <= n_i), the rest is padding.
+      eps: additive error parameter (shared across the batch - bucket
+        dispatches share one compiled program per (shape, eps)).
+      sizes: optional host (B, 2) int array of true instance shapes.
+    """
+    if guaranteed:
+        eps = eps / 3.0
+    c = jnp.asarray(c, jnp.float32)
+    if c.ndim != 3:
+        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+    b, m, n = c.shape
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    # Termination thresholds in host float64, matching the unbatched
+    # int(eps * m) exactly (f32 rounding flips the floor for some eps).
+    threshold = np.asarray([int(eps * int(mi)) for mi in m_valid], np.int32)
+    r = _solve_assignment_batched(
+        c, jnp.asarray(m_valid), jnp.asarray(n_valid),
+        jnp.asarray(threshold), eps
+    )
+    return BatchedAssignmentResult(
+        matching=r.matching,
+        cost=r.cost,
+        y_b=r.y_b,
+        y_a=r.y_a,
+        phases=r.phases,
+        rounds=r.rounds,
+        matched_before_completion=r.matched_before_completion,
+    )
+
+
+# --------------------------------------------------------------------------
+# General OT
+# --------------------------------------------------------------------------
+
+def _theta_array(sizes_m, sizes_n, eps: float, theta) -> np.ndarray:
+    """Per-instance theta = 4*max(m, n)/eps, computed on host in float64 and
+    cast to f32 so it is bit-identical to the unbatched solve_ot default."""
+    if theta is not None:
+        return np.broadcast_to(
+            np.asarray(theta, np.float32), sizes_m.shape
+        ).copy()
+    return (4.0 * np.maximum(sizes_m, sizes_n) / eps).astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def _solve_ot_batched(c, nu, mu, theta, eps: float) -> OTResult:
+    return jax.vmap(
+        lambda ci, nui, mui, ti: ot_pipeline(ci, nui, mui, ti, eps)
+    )(c, nu, mu, theta)
+
+
+def solve_ot_batched(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps: float,
+    *,
+    sizes=None,
+    theta=None,
+    guaranteed: bool = False,
+) -> OTResult:
+    """Solve B general OT instances stacked as one (B, M, N) program.
+
+    Args:
+      c: (B, M, N) costs; nu: (B, M) supplies; mu: (B, N) demands. Instance i
+        occupies the leading ``sizes[i]`` block; padded rows/cols must carry
+        zero mass (they are zeroed defensively from ``sizes`` regardless).
+      eps: additive error parameter shared across the batch.
+      sizes: optional host (B, 2) int array of true instance shapes - also
+        sets the per-instance theta to the unbatched default 4*max(m,n)/eps.
+      theta: optional scalar or (B,) override of the mass scaling.
+
+    Returns an OTResult whose every leaf carries a leading batch axis.
+    """
+    if guaranteed:
+        eps = eps / 3.0
+    c = jnp.asarray(c, jnp.float32)
+    nu = jnp.asarray(nu, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    if c.ndim != 3:
+        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+    b, m, n = c.shape
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    th = _theta_array(m_valid, n_valid, eps, theta)
+    # Mask padding: zero mass and zero cost outside each instance's block.
+    row_ok = np.arange(m)[None, :] < m_valid[:, None]
+    col_ok = np.arange(n)[None, :] < n_valid[:, None]
+    mask = jnp.asarray(row_ok[:, :, None] & col_ok[:, None, :])
+    c = jnp.where(mask, c, 0.0)
+    nu = jnp.where(jnp.asarray(row_ok), nu, 0.0)
+    mu = jnp.where(jnp.asarray(col_ok), mu, 0.0)
+    return _solve_ot_batched(c, nu, mu, jnp.asarray(th), eps)
+
+
+# --------------------------------------------------------------------------
+# Ragged front end: bucket, pad, dispatch, unpad
+# --------------------------------------------------------------------------
+
+class _Bucketed(NamedTuple):
+    key: tuple            # bucket shape key
+    indices: list         # original instance positions
+    sizes: np.ndarray     # (Bg, 2)
+
+
+def bucket_instances(shapes, buckets: Sequence[int] = DEFAULT_BUCKETS):
+    """Group instance shapes [(m_i, n_i)] into shape buckets.
+
+    Returns a list of _Bucketed groups; every instance appears in exactly
+    one group and ``key = (M, N)`` is the padded dispatch shape."""
+    groups: dict = {}
+    for i, (mi, ni) in enumerate(shapes):
+        key = (next_bucket(int(mi), buckets), next_bucket(int(ni), buckets))
+        groups.setdefault(key, []).append(i)
+    out = []
+    for key, idx in sorted(groups.items()):
+        sizes = np.asarray([shapes[i] for i in idx], np.int32)
+        out.append(_Bucketed(key=key, indices=idx, sizes=sizes))
+    return out
+
+
+def pad_stack(arrays, shape) -> jnp.ndarray:
+    """Zero-pad each array up to ``shape`` and stack on a new batch axis."""
+    out = []
+    for a in arrays:
+        a = np.asarray(a, np.float32)
+        pad = [(0, s - d) for s, d in zip(shape, a.shape)]
+        out.append(np.pad(a, pad))
+    return jnp.asarray(np.stack(out))
+
+
+def solve_ot_ragged(
+    instances,
+    eps: float,
+    *,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    guaranteed: bool = False,
+):
+    """Solve a ragged list of ``(c, nu, mu)`` OT instances via bucketed
+    batched dispatch. Returns per-instance dicts (in input order) with the
+    unpadded plan and scalar diagnostics."""
+    shapes = [tuple(np.asarray(c).shape) for c, _, _ in instances]
+    results: list = [None] * len(instances)
+    for grp in bucket_instances(shapes, buckets):
+        mb, nb = grp.key
+        c = pad_stack([instances[i][0] for i in grp.indices], (mb, nb))
+        nu = pad_stack([instances[i][1] for i in grp.indices], (mb,))
+        mu = pad_stack([instances[i][2] for i in grp.indices], (nb,))
+        r = solve_ot_batched(c, nu, mu, eps, sizes=grp.sizes,
+                             guaranteed=guaranteed)
+        # one device->host fetch per result array, not per instance
+        plan, cost, phases, rounds, theta = (
+            np.asarray(r.plan), np.asarray(r.cost), np.asarray(r.phases),
+            np.asarray(r.rounds), np.asarray(r.theta),
+        )
+        for k, i in enumerate(grp.indices):
+            mi, ni = shapes[i]
+            results[i] = {
+                "plan": plan[k, :mi, :ni],
+                "cost": float(cost[k]),
+                "phases": int(phases[k]),
+                "rounds": int(rounds[k]),
+                "theta": float(theta[k]),
+                "batch_size": len(grp.indices),
+                "bucket": grp.key,
+            }
+    return results
+
+
+def solve_assignment_ragged(
+    cs,
+    eps: float,
+    *,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    guaranteed: bool = False,
+):
+    """Solve a ragged list of assignment cost matrices via bucketed batched
+    dispatch. Returns per-instance dicts (in input order)."""
+    shapes = [tuple(np.asarray(c).shape) for c in cs]
+    results: list = [None] * len(cs)
+    for grp in bucket_instances(shapes, buckets):
+        c = pad_stack([cs[i] for i in grp.indices], grp.key)
+        r = solve_assignment_batched(c, eps, sizes=grp.sizes,
+                                     guaranteed=guaranteed)
+        matching, cost, phases, rounds, y_b, y_a = (
+            np.asarray(r.matching), np.asarray(r.cost), np.asarray(r.phases),
+            np.asarray(r.rounds), np.asarray(r.y_b), np.asarray(r.y_a),
+        )
+        for k, i in enumerate(grp.indices):
+            mi, ni = shapes[i]
+            results[i] = {
+                "matching": matching[k, :mi],
+                "cost": float(cost[k]),
+                "phases": int(phases[k]),
+                "rounds": int(rounds[k]),
+                "y_b": y_b[k, :mi],
+                "y_a": y_a[k, :ni],
+                "batch_size": len(grp.indices),
+                "bucket": grp.key,
+            }
+    return results

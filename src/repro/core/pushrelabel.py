@@ -71,10 +71,29 @@ def solve_assignment_int(
     eps: float,
     propose_fn=None,
     track_stats: bool = True,
+    m_valid=None,
+    threshold=None,
 ) -> PushRelabelState:
-    """Run phases on integer costs until |B'| <= eps*m. No completion."""
+    """Run phases on integer costs until |B'| <= eps*m. No completion.
+
+    ``m_valid`` (optional traced () int32) restricts B' and the termination
+    count to the first ``m_valid`` rows — used by the batched solver, where
+    instances are padded to a bucket shape and padded rows must never enter
+    the free-supply set. Padded *columns* are excluded by the caller giving
+    them a cost no dual sum can reach (see assignment_pipeline). ``threshold``
+    (traced () int32) must accompany ``m_valid``: the caller computes
+    int(eps * m_valid) on the host in float64, exactly as the unbatched
+    default below, so batched and unbatched solves terminate identically
+    (f32(eps) * m_valid rounds the wrong way for some (eps, m) pairs)."""
     m, n = c_int.shape
-    threshold = jnp.int32(int(eps * m))
+    if m_valid is None:
+        threshold = jnp.int32(int(eps * m))
+        row_ok = jnp.ones((m,), bool)
+    else:
+        if threshold is None:
+            raise ValueError("m_valid requires a host-computed threshold")
+        threshold = jnp.asarray(threshold, jnp.int32)
+        row_ok = jnp.arange(m, dtype=jnp.int32) < m_valid
     max_phases = _max_phases(eps, m)
 
     init = PushRelabelState(
@@ -88,11 +107,11 @@ def solve_assignment_int(
     )
 
     def cond(s: PushRelabelState):
-        free = jnp.sum(s.match_ba < 0)
+        free = jnp.sum((s.match_ba < 0) & row_ok)
         return (free > threshold) & (s.phases < jnp.int32(max_phases))
 
     def body(s: PushRelabelState) -> PushRelabelState:
-        in_bprime = s.match_ba < 0
+        in_bprime = (s.match_ba < 0) & row_ok
         mm = greedy_maximal_matching(
             c_int, s.y_b, s.y_a, in_bprime, s.phases, propose_fn=propose_fn
         )
@@ -122,16 +141,24 @@ def solve_assignment_int(
     return jax.lax.while_loop(cond, body, init)
 
 
-def complete_matching(match_ba: jnp.ndarray, match_ab: jnp.ndarray):
+def complete_matching(match_ba: jnp.ndarray, match_ab: jnp.ndarray,
+                      valid_b: jnp.ndarray | None = None,
+                      valid_a: jnp.ndarray | None = None):
     """Arbitrarily match remaining free rows to free cols (rank-align).
 
     Costs are <= 1 after scaling, so this adds <= eps*n to the cost.
     Rows beyond the number of free columns (unbalanced case) stay -1.
+    ``valid_b``/``valid_a`` (optional bool masks) exclude padded rows/cols
+    of a bucketed batch instance from the completion; invalid rows stay -1.
     """
     m = match_ba.shape[0]
     n = match_ab.shape[0]
     free_b = match_ba < 0
     free_a = match_ab < 0
+    if valid_b is not None:
+        free_b = free_b & valid_b
+    if valid_a is not None:
+        free_a = free_a & valid_a
     # rank of each free row among free rows / each free col among free cols
     rank_b = jnp.cumsum(free_b.astype(jnp.int32)) - 1
     rank_a = jnp.cumsum(free_a.astype(jnp.int32)) - 1
@@ -143,6 +170,63 @@ def complete_matching(match_ba: jnp.ndarray, match_ab: jnp.ndarray):
     take = free_b & (rank_b < n_free_a)
     fill = jnp.where(take, free_cols[jnp.clip(rank_b, 0, n - 1)], -1)
     return jnp.where(free_b, fill, match_ba)
+
+
+# Sentinel cost for padded columns/rows in a bucketed batch instance.
+# Duals satisfy y_b + y_a <= max_phases + c_max << 2^26, so admissibility
+# (y_b + y_a == c + 1) can never hold on a padded edge.
+PAD_COST = 1 << 26
+
+
+def assignment_pipeline(
+    c: jnp.ndarray,
+    eps: float,
+    *,
+    m_valid=None,
+    n_valid=None,
+    threshold=None,
+    propose_fn=None,
+) -> AssignmentResult:
+    """Traceable solve pipeline: scaling -> rounding -> integer phases ->
+    completion -> cost/duals. The batched solver vmaps this function with
+    traced ``m_valid``/``n_valid``/``threshold`` (instances padded up to a
+    bucket shape: padded edges get ``PAD_COST``, padded rows leave B', and
+    the completion skips padding), which makes each padded solve identical
+    to its unpadded original."""
+    c = jnp.asarray(c, jnp.float32)
+    m, n = c.shape
+    if m_valid is None:
+        row_ok = col_ok = None
+        cm = c
+    else:
+        row_ok = jnp.arange(m, dtype=jnp.int32) < m_valid
+        col_ok = jnp.arange(n, dtype=jnp.int32) < n_valid
+        mask = row_ok[:, None] & col_ok[None, :]
+        cm = jnp.where(mask, c, 0.0)
+    scale = jnp.maximum(jnp.max(cm), 1e-30)
+    c_int = round_costs(cm / scale, eps)
+    if m_valid is not None:
+        c_int = jnp.where(mask, c_int, PAD_COST)
+    state = solve_assignment_int(c_int, eps, propose_fn=propose_fn,
+                                 m_valid=m_valid, threshold=threshold)
+    matched_before = jnp.sum(state.match_ba >= 0, dtype=jnp.int32)
+    matching = complete_matching(state.match_ba, state.match_ab,
+                                 row_ok, col_ok)
+    rows = jnp.arange(m)
+    valid = matching >= 0
+    cost = jnp.sum(
+        jnp.where(valid, cm[rows, jnp.clip(matching, 0, n - 1)], 0.0)
+    )
+    return AssignmentResult(
+        matching=matching,
+        cost=cost,
+        y_b=state.y_b.astype(jnp.float32) * eps * scale,
+        y_a=state.y_a.astype(jnp.float32) * eps * scale,
+        phases=state.phases,
+        rounds=state.rounds,
+        sum_ni=state.sum_ni,
+        matched_before_completion=matched_before,
+    )
 
 
 def solve_assignment(
@@ -163,26 +247,4 @@ def solve_assignment(
     """
     if guaranteed:
         eps = eps / 3.0
-    c = jnp.asarray(c, jnp.float32)
-    scale = jnp.maximum(jnp.max(c), 1e-30)
-    c_norm = c / scale
-    c_int = round_costs(c_norm, eps)
-    state = solve_assignment_int(c_int, eps, propose_fn=propose_fn)
-    matched_before = jnp.sum(state.match_ba >= 0, dtype=jnp.int32)
-    matching = complete_matching(state.match_ba, state.match_ab)
-    m = c.shape[0]
-    rows = jnp.arange(m)
-    valid = matching >= 0
-    cost = jnp.sum(
-        jnp.where(valid, c[rows, jnp.clip(matching, 0, c.shape[1] - 1)], 0.0)
-    )
-    return AssignmentResult(
-        matching=matching,
-        cost=cost,
-        y_b=state.y_b.astype(jnp.float32) * eps * scale,
-        y_a=state.y_a.astype(jnp.float32) * eps * scale,
-        phases=state.phases,
-        rounds=state.rounds,
-        sum_ni=state.sum_ni,
-        matched_before_completion=matched_before,
-    )
+    return assignment_pipeline(c, eps, propose_fn=propose_fn)

@@ -206,29 +206,21 @@ def northwest_corner(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     )
 
 
-def solve_ot(
+def ot_pipeline(
     c: jnp.ndarray,
     nu: jnp.ndarray,
     mu: jnp.ndarray,
+    theta,
     eps: float,
-    *,
-    theta: float | None = None,
-    guaranteed: bool = False,
 ) -> OTResult:
-    """epsilon-additive approximate OT (rows = supplies nu, cols = demands mu).
-
-    Cost error is measured against costs scaled to [0, 1] (paper convention):
-    w(plan) <= w(opt) + O(eps) * max(c). ``guaranteed=True`` runs at eps/3.
-    """
-    if guaranteed:
-        eps = eps / 3.0
+    """Traceable solve pipeline: rounding -> integer solve -> completion ->
+    marginal repair. ``theta`` may be a Python float or a traced f32 scalar
+    (the batched solver vmaps this function with a per-instance theta)."""
     c = jnp.asarray(c, jnp.float32)
     nu = jnp.asarray(nu, jnp.float32)
     mu = jnp.asarray(mu, jnp.float32)
     nb, na = c.shape
-    n = max(nb, na)
-    if theta is None:
-        theta = 4.0 * n / eps
+    theta = jnp.asarray(theta, jnp.float32)
     scale = jnp.maximum(jnp.max(c), 1e-30)
     c_int = jnp.floor(c / scale / eps).astype(jnp.int32)
     s_int = jnp.floor(nu * theta).astype(jnp.int32)          # round down
@@ -243,7 +235,7 @@ def solve_ot(
     comp = northwest_corner(
         state.free_b.astype(jnp.float32), state.free_a.astype(jnp.float32)
     )
-    plan = (flow + comp) / jnp.float32(theta)
+    plan = (flow + comp) / theta
     # Repair marginals to the *original* (nu, mu): demand round-up can
     # overshoot a column by < 1/theta; rescale columns then NW-fill residuals.
     colsum = jnp.sum(plan, axis=0)
@@ -266,7 +258,35 @@ def solve_ot(
         phases=state.phases,
         rounds=state.rounds,
         state=state,
-        theta=float(theta),
+        theta=theta,
         s_int=s_int,
         d_int=d_int,
     )
+
+
+def solve_ot(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps: float,
+    *,
+    theta: float | None = None,
+    guaranteed: bool = False,
+) -> OTResult:
+    """epsilon-additive approximate OT (rows = supplies nu, cols = demands mu).
+
+    Cost error is measured against costs scaled to [0, 1] (paper convention):
+    w(plan) <= w(opt) + O(eps) * max(c). ``guaranteed=True`` runs at eps/3.
+    """
+    if guaranteed:
+        eps = eps / 3.0
+    c = jnp.asarray(c, jnp.float32)
+    nb, na = c.shape
+    if theta is None:
+        theta = 4.0 * max(nb, na) / eps
+    res = ot_pipeline(c, nu, mu, theta, eps)
+    if not isinstance(res.theta, jax.core.Tracer):
+        # eager: keep the historical Python-float theta (and avoid forcing
+        # a device sync when called under jit/vmap, where this is a tracer)
+        res = res._replace(theta=float(res.theta))
+    return res

@@ -17,14 +17,26 @@ from . import sinkhorn_step as _ss
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # single source of truth for the backend->interpret policy
+    return _sp._resolve_interpret(None)
 
 
 @partial(jax.jit, static_argnames=("block_m", "block_n"))
 def slack_propose(c_int, y_b, y_a, avail_a, salt, *, block_m=128, block_n=128):
+    # interpret=None: resolved per-backend inside the kernel module
+    # (compiled Mosaic on TPU, interpret elsewhere).
     return _sp.slack_propose(
         c_int, y_b, y_a, avail_a, salt,
-        block_m=block_m, block_n=block_n, interpret=_interpret(),
+        block_m=block_m, block_n=block_n, interpret=None,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
+def slack_propose_batched(c_int, y_b, y_a, avail_a, salt, *,
+                          block_m=128, block_n=128):
+    return _sp.slack_propose_batched(
+        c_int, y_b, y_a, avail_a, salt,
+        block_m=block_m, block_n=block_n, interpret=None,
     )
 
 
@@ -53,7 +65,7 @@ def make_pallas_propose_fn(block_m: int = 128, block_n: int = 128):
     def propose(c_int, y_b, y_a, active_b, avail_a, salt_round):
         col, key = _sp.slack_propose(
             c_int, y_b, y_a, avail_a, salt_round,
-            block_m=block_m, block_n=block_n, interpret=_interpret(),
+            block_m=block_m, block_n=block_n, interpret=None,
         )
         found = key != jnp.uint32(0xFFFFFFFF)
         return jnp.where(active_b & found, col, jnp.int32(-1))

@@ -61,19 +61,28 @@ class Engine:
         caches, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
         caches = M.pad_caches(self.cfg, caches, self.max_len)
         max_new = max(r.max_new_tokens for r in reqs)
-        out = np.zeros((b, max_new), np.int32)
-        done = np.zeros((b,), bool)
+        out = np.zeros((b, max(max_new, 1)), np.int32)
+        # max_new_tokens=0 requests are complete before the first step
+        done = np.asarray([r.max_new_tokens <= 0 for r in reqs])
+        # Per-sequence accounting: the batch decodes in lockstep, but each
+        # request's tokens end at its own EOS / max_new_tokens, its
+        # decode_steps is the number of steps it was live, and its latency
+        # is the wall time until *its* completion (not the whole batch's).
+        steps_per_seq = np.zeros((b,), np.int32)
+        finish_time = np.full((b,), np.nan)
         cur = jnp.argmax(logits[:, : self.cfg.vocab_size], -1)[:, None]
         cur = cur.astype(jnp.int32)
-        steps = 0
         for t in range(max_new):
             out[:, t] = np.asarray(cur[:, 0])
+            now = time.perf_counter()
             for i, r in enumerate(reqs):
-                if r.eos_id is not None and out[i, t] == r.eos_id:
+                if done[i]:
+                    continue
+                steps_per_seq[i] = t + 1
+                hit_eos = r.eos_id is not None and out[i, t] == r.eos_id
+                if hit_eos or t + 1 >= r.max_new_tokens:
                     done[i] = True
-                if t + 1 >= r.max_new_tokens:
-                    done[i] = True
-            steps += 1
+                    finish_time[i] = now
             if done.all() or plen + t + 1 >= self.max_len:
                 break
             logits, caches = self._decode(
@@ -82,38 +91,149 @@ class Engine:
             cur = jnp.argmax(
                 logits[:, : self.cfg.vocab_size], -1
             )[:, None].astype(jnp.int32)
-        dt = time.perf_counter() - t0
+        t_end = time.perf_counter()
+        finish_time = np.where(np.isnan(finish_time), t_end, finish_time)
         return [
-            Completion(tokens=out[i, : min(reqs[i].max_new_tokens, steps)],
-                       prefill_len=plen, decode_steps=steps, latency_s=dt)
+            Completion(tokens=out[i, : steps_per_seq[i]],
+                       prefill_len=plen,
+                       decode_steps=int(steps_per_seq[i]),
+                       latency_s=float(finish_time[i] - t0))
             for i in range(b)
         ]
 
 
+@dataclass
+class OTRequest:
+    x: np.ndarray                      # (m, d) supply points
+    y: np.ndarray                      # (n, d) demand points
+    nu: Optional[np.ndarray] = None    # (m,) masses -> general-OT mode
+    mu: Optional[np.ndarray] = None    # (n,) masses
+
+
 class OTService:
-    """Batched OT-distance endpoint (the paper's solver as a service)."""
+    """Batched OT-distance endpoint (the paper's solver as a service).
+
+    Mirrors ``Engine``: ``submit()`` queues distance requests; ``run_batch()``
+    groups them into shape buckets, pads each bucket to a fixed shape, and
+    dispatches every bucket as ONE XLA program through the batched solver
+    subsystem (core/batched.py). Point-set requests (no masses) run the
+    assignment solver; requests with (nu, mu) run the general OT solver.
+    ``distance()`` stays as the one-shot convenience wrapper.
+    """
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
-                 use_pallas: bool = True):
-        from repro.core.pushrelabel import solve_assignment
-        from repro.core.costs import build_cost_matrix
+                 use_pallas: bool = True, buckets=None):
+        from repro.core import batched as B
+        from repro.core.costs import COSTS, build_cost_matrix
 
         self.eps = eps
         self.metric = metric
-        self.kernel = "pallas" if use_pallas else "jnp"
-        self._solve = solve_assignment
+        # Pallas cost kernels only where they compile (TPU); everywhere else
+        # they would run in interpret mode, i.e. a pure emulation tax.
+        self.kernel = ("pallas" if use_pallas
+                       and jax.default_backend() == "tpu" else "jnp")
+        self.buckets = tuple(buckets) if buckets else B.DEFAULT_BUCKETS
+        self.queue: List[OTRequest] = []
+        self._B = B
         self._cost = build_cost_matrix
+        self._cost_batched = jax.jit(jax.vmap(COSTS[metric]))
 
-    def distance(self, x: np.ndarray, y: np.ndarray) -> Dict[str, Any]:
-        c = self._cost(jnp.asarray(x), jnp.asarray(y), self.metric,
-                       kernel=self.kernel)
-        r = self._solve(c, self.eps)
-        n = x.shape[0]
-        return {
-            "cost": float(r.cost) / n,
-            "matching": np.asarray(r.matching),
-            "phases": int(r.phases),
-            "dual_lower_bound": float(
-                (jnp.sum(r.y_b) + jnp.sum(r.y_a)) / n
-            ),
-        }
+    def submit(self, x: np.ndarray, y: np.ndarray,
+               nu: Optional[np.ndarray] = None,
+               mu: Optional[np.ndarray] = None) -> int:
+        """Queue one distance request; returns its ticket (position in the
+        result list of the next run_batch)."""
+        if (nu is None) != (mu is None):
+            raise ValueError("provide both nu and mu (general OT) or "
+                             "neither (assignment distance)")
+        self.queue.append(OTRequest(x=np.asarray(x), y=np.asarray(y),
+                                    nu=nu, mu=mu))
+        return len(self.queue) - 1
+
+    def _batched_cost(self, xs, ys):
+        if self.kernel == "pallas":
+            # per-instance Pallas kernel calls (shapes are bucketed, so the
+            # jit cache stays small); batched cost kernel is a ROADMAP item
+            return jnp.stack([
+                self._cost(xs[k], ys[k], self.metric, kernel="pallas")
+                for k in range(xs.shape[0])
+            ])
+        return self._cost_batched(xs, ys)
+
+    def run_batch(self) -> List[Dict[str, Any]]:
+        """Solve all queued requests via bucketed batched dispatch; returns
+        results in submission order."""
+        if not self.queue:
+            return []
+        reqs, self.queue = self.queue, []
+        results: List[Optional[Dict[str, Any]]] = [None] * len(reqs)
+        # Split by point dim + solver mode, then reuse the core bucketing
+        # for the (m, n) shape grouping -- one compiled program per
+        # (bucket, d, mode), shared by later batches of the same key.
+        modes: Dict[tuple, List[int]] = {}
+        for i, r in enumerate(reqs):
+            modes.setdefault((r.x.shape[1], r.nu is not None), []).append(i)
+        for (d, has_mass), sub in sorted(modes.items()):
+            shapes = [(reqs[i].x.shape[0], reqs[i].y.shape[0]) for i in sub]
+            for grp in self._B.bucket_instances(shapes, self.buckets):
+                idx = [sub[j] for j in grp.indices]
+                (mb, nb), sizes = grp.key, grp.sizes
+                gt0 = time.perf_counter()
+                xs = self._B.pad_stack([reqs[i].x for i in idx], (mb, d))
+                ys = self._B.pad_stack([reqs[i].y for i in idx], (nb, d))
+                c = self._batched_cost(xs, ys)
+                if has_mass:
+                    nu = self._B.pad_stack([reqs[i].nu for i in idx], (mb,))
+                    mu = self._B.pad_stack([reqs[i].mu for i in idx], (nb,))
+                    r = self._B.solve_ot_batched(c, nu, mu, self.eps,
+                                                 sizes=sizes)
+                    plan, cost, phases = (np.asarray(r.plan),
+                                          np.asarray(r.cost),
+                                          np.asarray(r.phases))
+                    gdt = time.perf_counter() - gt0
+                    for k, i in enumerate(idx):
+                        m, n = sizes[k]
+                        results[i] = {
+                            "cost": float(cost[k]),
+                            "plan": plan[k, :m, :n],
+                            "phases": int(phases[k]),
+                            "batch_size": len(idx),
+                            "bucket": (mb, nb),
+                            "latency_s": gdt,
+                        }
+                else:
+                    r = self._B.solve_assignment_batched(c, self.eps,
+                                                         sizes=sizes)
+                    matching, cost, phases, y_b, y_a = (
+                        np.asarray(r.matching), np.asarray(r.cost),
+                        np.asarray(r.phases), np.asarray(r.y_b),
+                        np.asarray(r.y_a),
+                    )
+                    gdt = time.perf_counter() - gt0
+                    for k, i in enumerate(idx):
+                        m, n = sizes[k]
+                        results[i] = {
+                            "cost": float(cost[k]) / m,
+                            "matching": matching[k, :m],
+                            "phases": int(phases[k]),
+                            "dual_lower_bound": float(
+                                (y_b[k, :m].sum() + y_a[k, :n].sum()) / m
+                            ),
+                            "batch_size": len(idx),
+                            "bucket": (mb, nb),
+                            "latency_s": gdt,
+                        }
+        assert all(r is not None for r in results)
+        return results  # submission order
+
+    def distance(self, x: np.ndarray, y: np.ndarray,
+                 nu: Optional[np.ndarray] = None,
+                 mu: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """One-shot convenience: solve just this request. Queued requests
+        and their tickets are left untouched for the next run_batch()."""
+        held, self.queue = self.queue, []
+        try:
+            self.submit(x, y, nu=nu, mu=mu)
+            return self.run_batch()[0]
+        finally:
+            self.queue = held

@@ -1,6 +1,9 @@
 """Greedy maximal matching: validity, maximality, admissibility (hypothesis)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.matching import greedy_maximal_matching

@@ -11,6 +11,10 @@ from repro.models import model as M
 
 ALL_ARCHS = sorted(ARCHS.keys())
 
+# Minutes of compile+run across every architecture: out of the default
+# tier-1 loop (-m "not slow").
+pytestmark = pytest.mark.slow
+
 
 def _concretize(specs, seed=0):
     out = {}

@@ -3,6 +3,7 @@ all through the public APIs."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs.registry import ARCHS, reduced
 from repro.models import model as M
@@ -10,6 +11,7 @@ from repro.serve.engine import Engine, OTService, Request
 from repro.train.trainer import Trainer
 
 
+@pytest.mark.slow
 def test_train_then_serve_then_ot(tmp_path):
     cfg = reduced(ARCHS["deepseek-moe-16b"]).with_(
         num_layers=2, router="pushrelabel", remat=False

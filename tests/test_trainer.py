@@ -19,6 +19,7 @@ from repro.train.trainer import Trainer
 CFG = reduced(ARCHS["llama3.2-3b"]).with_(num_layers=2, remat=False)
 
 
+@pytest.mark.slow
 def test_loss_decreases(tmp_path):
     tr = Trainer(CFG, str(tmp_path / "w"), seq_len=32, batch_size=4,
                  lr=2e-3, warmup=5, ckpt_every=1000)
@@ -28,6 +29,7 @@ def test_loss_decreases(tmp_path):
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow
 def test_kill_and_resume_bitwise(tmp_path):
     w1, w2 = str(tmp_path / "a"), str(tmp_path / "b")
     # uninterrupted run: 8 steps
@@ -79,6 +81,7 @@ def test_data_pipeline_deterministic():
     assert not np.array_equal(a["tokens"], c["tokens"])
 
 
+@pytest.mark.slow
 def test_serving_engine_batched(tmp_path):
     from repro.serve.engine import Engine, Request
 

@@ -3,6 +3,8 @@ marginal exactness, Lemma 4.1 invariants."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.transport import solve_ot, northwest_corner

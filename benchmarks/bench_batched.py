@@ -1,24 +1,32 @@
 """Batched solver subsystem: throughput of B instances per dispatch.
 
-Three comparisons, honestly separated:
+Comparisons, honestly separated:
 
-  * ragged  - the serving scenario the subsystem exists for: B requests with
-    long-tail (m, n) shapes. The pre-PR path solves each at its native shape,
-    so every novel shape pays an XLA compile (~0.5 s for the solver loop);
-    the bucketed batched path pads to one bucket shape compiled once ever.
-    Loop timing INCLUDES its per-novel-shape compiles (that is its steady
-    state - fresh shapes keep arriving); batch timing is reported both warm
-    (bucket program already cached, the amortized steady state) and cold.
-  * fixed   - B identical-shape instances with a hot jit cache: isolates the
-    lockstep cost of vmapping the while_loop solver. On CPU this is ~parity
-    at best (finished instances ride along until the slowest converges); on
-    an accelerator the batch fills idle lanes instead.
+  * skewed  - the headline for PR 2: a convergence-skewed batch (mixed
+    sizes, an adversarial slow tail whose duals must climb ~1/eps steps
+    while the bulk converges in a phase or two). The lockstep vmapped
+    while_loop runs every instance until the slowest converges; the
+    compacting driver (core/compaction.py) retires converged instances
+    between k-phase dispatches. Same results, fewer executed phase-slots.
+  * mixed_eps - per-instance eps in ONE compacted dispatch (eps is data to
+    the chunked solver) vs the lockstep path's only option: one dispatch
+    per eps value (eps is a static jit argument there, so every new eps
+    also recompiles).
+  * ragged  - the PR-1 serving scenario: B requests with long-tail (m, n)
+    shapes; bucketed batch dispatch vs per-novel-shape compiles.
+  * fixed   - B identical-shape instances with a hot jit cache: isolates
+    lockstep cost of vmapping the while_loop solver.
   * sinkhorn - batched log-domain Sinkhorn reference at matched accuracy.
 
-    PYTHONPATH=src python -m benchmarks.bench_batched [--full]
+    PYTHONPATH=src python -m benchmarks.bench_batched [--full|--tiny]
+
+``--json OUT`` (and benchmarks/run.py) also writes the records to a
+machine-readable BENCH_batched.json: instances/sec, phases executed vs
+phases needed (lockstep-waste metric), and the compaction occupancy curve.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -26,10 +34,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batched import solve_assignment_batched, solve_ot_batched
+from repro.core.compaction import (
+    solve_assignment_batched_compacting,
+    solve_ot_batched_compacting,
+)
 from repro.core.pushrelabel import solve_assignment
 from repro.core.sinkhorn import reg_for_additive_eps, sinkhorn
 from repro.core.transport import solve_ot
-from .common import emit, time_call, uniform_square_points
+from .common import emit, time_call
+
+RECORDS: list = []
+
+
+def record(name, seconds, derived="", **extra):
+    emit(name, seconds, derived)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived, **extra})
+
+
+def write_json(path="BENCH_batched.json"):
+    payload = {
+        "schema": 1,
+        "bench": "batched",
+        "backend": jax.default_backend(),
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
 
 
 def _instance(m, n, seed):
@@ -52,15 +85,175 @@ def _fixed_batch(b, n, seed):
     return jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu)
 
 
+def _skewed_batch(b, nb, seed, n_slow):
+    """Convergence-skewed OT batch: ``n_slow`` adversarial instances
+    (uniform-random clouds + mismatched masses -> duals climb ~1/eps
+    steps) among a bulk of near-identity instances (demands are jittered
+    twins of the supplies carrying exactly the twin's mass -> one or two
+    phases). Sizes are mixed within the bucket."""
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, nb, nb), np.float32)
+    nu = np.zeros((b, nb), np.float32)
+    mu = np.zeros((b, nb), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i in range(b):
+        m = int(rng.integers(nb // 2 + 1, nb + 1))
+        x = rng.uniform(size=(m, 2))
+        nui = rng.dirichlet(np.ones(m)).astype(np.float32)
+        if i < n_slow:
+            y = rng.uniform(size=(m, 2))
+            mui = rng.dirichlet(np.ones(m)).astype(np.float32)
+        else:
+            perm = rng.permutation(m)
+            y = x[perm] + rng.normal(0.0, 0.003, size=(m, 2))
+            mui = nui[perm]
+        d = x[:, None, :] - y[None, :, :]
+        c[i, :m, :m] = np.sqrt((d * d).sum(-1) + 1e-30)
+        nu[i, :m] = nui
+        mu[i, :m] = mui
+        sizes[i] = (m, m)
+    return c, nu, mu, sizes
+
+
 def _once(fn):
     t0 = time.perf_counter()
     jax.block_until_ready(fn())
     return time.perf_counter() - t0
 
 
+def _best(fn, repeats=2):
+    _once(fn)  # warm / compile
+    return min(_once(fn) for _ in range(repeats))
+
+
+def run_skewed(b, n, eps, k=4, n_slow=3):
+    """Lockstep vs compaction on a convergence-skewed batch; results must
+    be identical (same plans, same phase counts)."""
+    c, nu, mu, sizes = _skewed_batch(b, n, seed=n + b, n_slow=n_slow)
+    t_lock = _best(lambda: solve_ot_batched(c, nu, mu, eps,
+                                            sizes=sizes).cost)
+    t_comp = _best(lambda: solve_ot_batched_compacting(
+        c, nu, mu, eps, sizes=sizes, k=k)[0].cost)
+
+    r0 = solve_ot_batched(c, nu, mu, eps, sizes=sizes)
+    r1, st = solve_ot_batched_compacting(c, nu, mu, eps, sizes=sizes, k=k)
+    assert np.array_equal(np.asarray(r0.plan), np.asarray(r1.plan)), \
+        "compaction must reproduce lockstep plans exactly"
+    assert np.array_equal(np.asarray(r0.phases), np.asarray(r1.phases))
+    ph = np.asarray(r0.phases)
+
+    speedup = t_lock / t_comp
+    waste = st.lockstep_slot_phases / max(st.phases_needed, 1)
+    record(
+        f"batched/ot_skewed/B={b}/n={n}/eps={eps}", t_comp / b,
+        f"inst_per_s={b / t_comp:.1f};lockstep_inst_per_s={b / t_lock:.1f};"
+        f"speedup_vs_lockstep={speedup:.2f}x;"
+        f"phase_skew={ph.max() / max(ph.min(), 1):.1f}x;"
+        f"slot_phases={st.slot_phases}/{st.lockstep_slot_phases}",
+        instances_per_s=b / t_comp,
+        lockstep_instances_per_s=b / t_lock,
+        speedup_vs_lockstep=speedup,
+        lockstep_waste=waste,
+        results_identical=True,
+        **st.as_dict(),
+    )
+    return speedup
+
+
+def run_skewed_assignment(b, n, eps, k=4, n_slow=3):
+    c, _, _, sizes = _skewed_batch(b, n, seed=3 * n + b, n_slow=n_slow)
+    t_lock = _best(lambda: solve_assignment_batched(c, eps,
+                                                    sizes=sizes).cost)
+    t_comp = _best(lambda: solve_assignment_batched_compacting(
+        c, eps, sizes=sizes, k=k)[0].cost)
+    r0 = solve_assignment_batched(c, eps, sizes=sizes)
+    r1, st = solve_assignment_batched_compacting(c, eps, sizes=sizes, k=k)
+    assert np.array_equal(np.asarray(r0.matching), np.asarray(r1.matching))
+    speedup = t_lock / t_comp
+    record(
+        f"batched/assignment_skewed/B={b}/n={n}/eps={eps}", t_comp / b,
+        f"inst_per_s={b / t_comp:.1f};lockstep_inst_per_s={b / t_lock:.1f};"
+        f"speedup_vs_lockstep={speedup:.2f}x",
+        instances_per_s=b / t_comp,
+        lockstep_instances_per_s=b / t_lock,
+        speedup_vs_lockstep=speedup,
+        results_identical=True,
+        **st.as_dict(),
+    )
+    return speedup
+
+
+def run_mixed_eps(b, n, eps_bulk=0.1, eps_tail=0.02, n_tail=3, k=4):
+    """Per-instance eps: one compacted dispatch vs the lockstep path's only
+    option, one dispatch per eps group (eps is a static jit arg there, so
+    novel eps values also recompile; compaction takes eps as data). The
+    fine-eps tail rides on adversarial instances, the realistic case of a
+    few high-accuracy stragglers in a bulk queue."""
+    c, nu, mu, sizes = _skewed_batch(b, n, seed=7 * n + b, n_slow=n_tail)
+    eps_arr = np.full((b,), eps_bulk)
+    eps_arr[:n_tail] = eps_tail
+
+    t_comp = _best(lambda: solve_ot_batched_compacting(
+        c, nu, mu, eps_arr, sizes=sizes, k=k)[0].cost)
+
+    groups = [(e, np.flatnonzero(eps_arr == e))
+              for e in np.unique(eps_arr)]
+
+    def lockstep_groups():
+        return [solve_ot_batched(c[idx], nu[idx], mu[idx], float(e),
+                                 sizes=sizes[idx]).cost
+                for e, idx in groups]
+
+    t_lock = _best(lockstep_groups)
+
+    # equality: each instance against its own-eps lockstep group result
+    r1, st = solve_ot_batched_compacting(c, nu, mu, eps_arr, sizes=sizes,
+                                         k=k)
+    for e, idx in groups:
+        r0 = solve_ot_batched(c[idx], nu[idx], mu[idx], float(e),
+                              sizes=sizes[idx])
+        np.testing.assert_allclose(np.asarray(r1.plan)[idx],
+                                   np.asarray(r0.plan), atol=1e-6)
+        assert np.array_equal(np.asarray(r1.phases)[idx],
+                              np.asarray(r0.phases))
+
+    # the serving reality: requests carry NOVEL eps values. eps is data to
+    # the compacted solver (programs reused); the lockstep path jits eps
+    # statically, so each fresh value pays a full solver compile.
+    novel = np.full((b,), eps_bulk * 0.93)
+    novel[:n_tail] = eps_tail * 1.7
+    t_comp_novel = _once(lambda: solve_ot_batched_compacting(
+        c, nu, mu, novel, sizes=sizes, k=k)[0].cost)
+    novel_groups = [(e, np.flatnonzero(novel == e))
+                    for e in np.unique(novel)]
+    t_lock_novel = _once(lambda: [
+        solve_ot_batched(c[idx], nu[idx], mu[idx], float(e),
+                         sizes=sizes[idx]).cost
+        for e, idx in novel_groups
+    ])
+
+    record(
+        f"batched/ot_mixed_eps/B={b}/n={n}/eps={eps_bulk}+{eps_tail}",
+        t_comp / b,
+        f"inst_per_s={b / t_comp:.1f};"
+        f"per_eps_lockstep_inst_per_s={b / t_lock:.1f};"
+        f"speedup_vs_eps_grouped_lockstep={t_lock / t_comp:.2f}x;"
+        f"novel_eps_dispatch_s={t_comp_novel:.2f}_vs_lockstep_"
+        f"{t_lock_novel:.2f}_(recompiles);"
+        f"dispatches={st.dispatches}",
+        instances_per_s=b / t_comp,
+        lockstep_instances_per_s=b / t_lock,
+        speedup_vs_lockstep=t_lock / t_comp,
+        novel_eps_dispatch_s=t_comp_novel,
+        novel_eps_lockstep_s=t_lock_novel,
+        results_identical=True,
+        **st.as_dict(),
+    )
+
+
 def run_ragged(b, n, eps):
     """Long-tail shapes in (n/2, n]: native-shape loop (per-shape compile)
-    vs one padded bucket dispatch."""
+    vs one padded bucket dispatch (compacting driver)."""
     rng = np.random.default_rng(n * b)
     insts = []
     while len(insts) < b:
@@ -79,8 +272,10 @@ def run_ragged(b, n, eps):
         sizes[i] = (mi, ni)
 
     # batched: cold (includes the one-off bucket compile), then warm
-    t_cold = _once(lambda: solve_ot_batched(c, nu, mu, eps, sizes=sizes).cost)
-    t_warm = _once(lambda: solve_ot_batched(c, nu, mu, eps, sizes=sizes).cost)
+    t_cold = _once(lambda: solve_ot_batched_compacting(
+        c, nu, mu, eps, sizes=sizes)[0].cost)
+    t_warm = _once(lambda: solve_ot_batched_compacting(
+        c, nu, mu, eps, sizes=sizes)[0].cost)
 
     # looped at native shapes: every novel (m, n) pays its compile, exactly
     # like the pre-batching service did on long-tail traffic
@@ -89,10 +284,11 @@ def run_ragged(b, n, eps):
         for ci, nui, mui in insts
     ])
 
-    emit(f"batched/ot_ragged/B={b}/bucket={n}", t_warm / b,
-         f"inst_per_s={b / t_warm:.1f};loop_native_inst_per_s={b / t_loop:.2f};"
-         f"speedup_vs_native_loop={t_loop / t_warm:.1f}x;"
-         f"cold_batch_s={t_cold:.2f}")
+    record(f"batched/ot_ragged/B={b}/bucket={n}", t_warm / b,
+           f"inst_per_s={b / t_warm:.1f};loop_native_inst_per_s={b / t_loop:.2f};"
+           f"speedup_vs_native_loop={t_loop / t_warm:.1f}x;"
+           f"cold_batch_s={t_cold:.2f}",
+           instances_per_s=b / t_warm)
     return t_loop / t_warm
 
 
@@ -104,18 +300,20 @@ def run_fixed(b, n, eps):
         lambda: [solve_assignment(c[i], eps).cost for i in range(b)],
         repeats=2,
     )
-    emit(f"batched/assignment_fixed/B={b}/n={n}", t_batch / b,
-         f"inst_per_s={b / t_batch:.1f};loop_inst_per_s={b / t_loop:.1f};"
-         f"lockstep_ratio={t_loop / t_batch:.2f}x")
+    record(f"batched/assignment_fixed/B={b}/n={n}", t_batch / b,
+           f"inst_per_s={b / t_batch:.1f};loop_inst_per_s={b / t_loop:.1f};"
+           f"lockstep_ratio={t_loop / t_batch:.2f}x",
+           instances_per_s=b / t_batch)
 
     t_batch = time_call(lambda: solve_ot_batched(c, nu, mu, eps), repeats=2)
     t_loop = time_call(
         lambda: [solve_ot(c[i], nu[i], mu[i], eps).cost for i in range(b)],
         repeats=2,
     )
-    emit(f"batched/ot_fixed/B={b}/n={n}", t_batch / b,
-         f"inst_per_s={b / t_batch:.1f};loop_inst_per_s={b / t_loop:.1f};"
-         f"lockstep_ratio={t_loop / t_batch:.2f}x")
+    record(f"batched/ot_fixed/B={b}/n={n}", t_batch / b,
+           f"inst_per_s={b / t_batch:.1f};loop_inst_per_s={b / t_loop:.1f};"
+           f"lockstep_ratio={t_loop / t_batch:.2f}x",
+           instances_per_s=b / t_batch)
 
     reg = reg_for_additive_eps(eps, n)
     sk_batched = jax.jit(jax.vmap(
@@ -123,17 +321,36 @@ def run_fixed(b, n, eps):
                                       tol=eps / 8.0, max_iters=2000).cost
     ))
     t_sk = time_call(lambda: sk_batched(c, nu, mu), repeats=2)
-    emit(f"batched/sinkhorn/B={b}/n={n}", t_sk / b,
-         f"inst_per_s={b / t_sk:.1f}")
+    record(f"batched/sinkhorn/B={b}/n={n}", t_sk / b,
+           f"inst_per_s={b / t_sk:.1f}",
+           instances_per_s=b / t_sk)
 
 
-def run(full: bool = False):
+def run(full: bool = False, tiny: bool = False):
+    """Returns the record list (also kept in RECORDS for write_json)."""
+    if tiny:
+        # CI smoke: the compaction path end to end in seconds on a CPU
+        # runner, equality asserts included.
+        run_skewed(8, 32, 0.1, k=2, n_slow=1)
+        run_skewed_assignment(8, 32, 0.1, k=2, n_slow=1)
+        run_mixed_eps(8, 32, eps_bulk=0.2, eps_tail=0.1, n_tail=2, k=2)
+        return RECORDS
     eps = 0.1
+    # headline: convergence-skewed batches, lockstep vs compaction
+    run_skewed(32, 64, 0.05, k=4)
+    run_skewed(32, 128, 0.05, k=4)
+    run_skewed(32, 64, 0.1, k=4)
+    run_skewed_assignment(32, 64, 0.05, k=4)
+    run_mixed_eps(32, 64)
     run_ragged(8, 128, eps)
     run_ragged(32, 256, eps)
     for b, n in ([(8, 128), (32, 256)] if not full
                  else [(8, 128), (32, 256), (64, 256), (32, 512)]):
         run_fixed(b, n, eps)
+    if full:
+        run_skewed(64, 64, 0.05, k=4)
+        run_skewed(64, 128, 0.05, k=8)
+    return RECORDS
 
 
 if __name__ == "__main__":
@@ -141,6 +358,15 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: seconds on a CPU runner")
+    ap.add_argument("--json", default="",
+                    help="machine-readable output path (off by default so "
+                         "ad-hoc/tiny runs don't overwrite the committed "
+                         "BENCH_batched.json baseline; benchmarks/run.py "
+                         "writes the canonical one)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(full=args.full)
+    run(full=args.full, tiny=args.tiny)
+    if args.json:
+        write_json(args.json)

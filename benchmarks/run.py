@@ -33,6 +33,11 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", file=sys.stderr, flush=True)
         fn(full=args.full)
+        if name == "batched":
+            # machine-readable perf trajectory: instances/sec, the
+            # lockstep-waste metric (phases executed vs needed), and the
+            # compaction occupancy curve, for future PRs to diff against
+            bench_batched.write_json("BENCH_batched.json")
 
 
 if __name__ == "__main__":

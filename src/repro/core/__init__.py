@@ -9,6 +9,11 @@ from .batched import (
     solve_ot_batched,
     solve_ot_ragged,
 )
+from .compaction import (
+    CompactionStats,
+    solve_assignment_batched_compacting,
+    solve_ot_batched_compacting,
+)
 from .costs import build_cost_matrix
 from .sinkhorn import sinkhorn
 
@@ -17,5 +22,7 @@ __all__ = [
     "solve_ot", "solve_ot_int", "OTResult", "northwest_corner",
     "solve_assignment_batched", "solve_assignment_ragged",
     "solve_ot_batched", "solve_ot_ragged", "BatchedAssignmentResult",
+    "CompactionStats", "solve_assignment_batched_compacting",
+    "solve_ot_batched_compacting",
     "build_cost_matrix", "sinkhorn",
 ]

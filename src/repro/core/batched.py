@@ -21,6 +21,13 @@ Ragged batches are handled by a padding/bucketing layer:
 so a padded instance walks the same admissible subgraph, with the same
 deterministic hash keys (keys depend only on *global* (row, col, salt), not
 on the matrix shape), as its unpadded original.
+
+The ragged front ends default to the convergence-compacting driver
+(core/compaction.py, ``compact=True``): each bucket is solved as a sequence
+of k-phase dispatches with converged instances retired between dispatches,
+rather than one lockstep loop that runs every instance until the slowest
+converges. Results are identical either way; the lockstep fixed-shape entry
+points below remain the single-dispatch building blocks.
 """
 from __future__ import annotations
 
@@ -125,21 +132,48 @@ def solve_assignment_batched(
 # General OT
 # --------------------------------------------------------------------------
 
-def _theta_array(sizes_m, sizes_n, eps: float, theta) -> np.ndarray:
+def _theta_array(sizes_m, sizes_n, eps, theta) -> np.ndarray:
     """Per-instance theta = 4*max(m, n)/eps, computed on host in float64 and
-    cast to f32 so it is bit-identical to the unbatched solve_ot default."""
+    cast to f32 so it is bit-identical to the unbatched solve_ot default.
+    ``eps`` may be a scalar or a (B,) array (compacting driver)."""
     if theta is not None:
         return np.broadcast_to(
             np.asarray(theta, np.float32), sizes_m.shape
         ).copy()
+    eps = np.asarray(eps, np.float64)
     return (4.0 * np.maximum(sizes_m, sizes_n) / eps).astype(np.float32)
 
 
+def _mask_ot_inputs(c, nu, mu, m_valid, n_valid, theta, eps):
+    """Zero mass/cost outside each instance's block and compute the
+    per-instance termination thresholds in host float64 from the masked
+    masses — identical to the unbatched solve_ot (the on-device f32
+    product rounds the wrong way for some (eps, total_mass) pairs).
+    Shared by the lockstep and compacting paths so the two can never
+    diverge on threshold/masking semantics. ``eps`` scalar or (B,)."""
+    b, m, n = c.shape
+    row_ok = np.arange(m)[None, :] < m_valid[:, None]
+    col_ok = np.arange(n)[None, :] < n_valid[:, None]
+    eps_b = np.broadcast_to(np.asarray(eps, np.float64), (b,))
+    nu_h = np.where(row_ok, np.asarray(nu, np.float32), np.float32(0.0))
+    # vectorized ot_termination_threshold: f32 floor(nu * theta) per entry
+    # (the device rounding), f64 row sums, f64 eps product, truncation
+    s_rows = np.floor(nu_h * np.asarray(theta, np.float32)[:, None])
+    thr = (eps_b * s_rows.sum(axis=1, dtype=np.float64)).astype(np.int64) \
+        .astype(np.int32)
+    mask = jnp.asarray(row_ok[:, :, None] & col_ok[:, None, :])
+    c = jnp.where(mask, c, 0.0)
+    nu = jnp.where(jnp.asarray(row_ok), nu, 0.0)
+    mu = jnp.where(jnp.asarray(col_ok), mu, 0.0)
+    return c, nu, mu, thr
+
+
 @partial(jax.jit, static_argnames=("eps",))
-def _solve_ot_batched(c, nu, mu, theta, eps: float) -> OTResult:
+def _solve_ot_batched(c, nu, mu, theta, threshold, eps: float) -> OTResult:
     return jax.vmap(
-        lambda ci, nui, mui, ti: ot_pipeline(ci, nui, mui, ti, eps)
-    )(c, nu, mu, theta)
+        lambda ci, nui, mui, ti, thi: ot_pipeline(ci, nui, mui, ti, eps,
+                                                  threshold=thi)
+    )(c, nu, mu, theta, threshold)
 
 
 def solve_ot_batched(
@@ -175,14 +209,9 @@ def solve_ot_batched(
     b, m, n = c.shape
     m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
     th = _theta_array(m_valid, n_valid, eps, theta)
-    # Mask padding: zero mass and zero cost outside each instance's block.
-    row_ok = np.arange(m)[None, :] < m_valid[:, None]
-    col_ok = np.arange(n)[None, :] < n_valid[:, None]
-    mask = jnp.asarray(row_ok[:, :, None] & col_ok[:, None, :])
-    c = jnp.where(mask, c, 0.0)
-    nu = jnp.where(jnp.asarray(row_ok), nu, 0.0)
-    mu = jnp.where(jnp.asarray(col_ok), mu, 0.0)
-    return _solve_ot_batched(c, nu, mu, jnp.asarray(th), eps)
+    c, nu, mu, thr = _mask_ot_inputs(c, nu, mu, m_valid, n_valid, th, eps)
+    return _solve_ot_batched(c, nu, mu, jnp.asarray(th), jnp.asarray(thr),
+                             eps)
 
 
 # --------------------------------------------------------------------------
@@ -223,23 +252,48 @@ def pad_stack(arrays, shape) -> jnp.ndarray:
 
 def solve_ot_ragged(
     instances,
-    eps: float,
+    eps,
     *,
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     guaranteed: bool = False,
+    compact: bool = True,
+    chunk: int | None = None,
 ):
     """Solve a ragged list of ``(c, nu, mu)`` OT instances via bucketed
     batched dispatch. Returns per-instance dicts (in input order) with the
-    unpadded plan and scalar diagnostics."""
+    unpadded plan and scalar diagnostics.
+
+    ``compact=True`` (default) routes each bucket through the convergence-
+    compacting driver (core/compaction.py): converged instances retire
+    between k-phase dispatches instead of riding lockstep until the slowest
+    one finishes, and ``eps`` may be a per-instance sequence. ``compact=
+    False`` restores the PR-1 lockstep dispatch (results are identical).
+    Tradeoff: compaction wins on convergence-skewed buckets (2-4x on the
+    in-repo bench) but its per-chunk converged-mask sync can lose ~20-50%
+    on tiny or convergence-uniform buckets — pass ``compact=False`` there."""
     shapes = [tuple(np.asarray(c).shape) for c, _, _ in instances]
+    eps_arr = np.broadcast_to(np.asarray(eps, np.float64),
+                              (len(instances),))
+    if not compact and np.unique(eps_arr).size > 1:
+        raise ValueError("per-instance eps requires compact=True")
     results: list = [None] * len(instances)
     for grp in bucket_instances(shapes, buckets):
         mb, nb = grp.key
         c = pad_stack([instances[i][0] for i in grp.indices], (mb, nb))
         nu = pad_stack([instances[i][1] for i in grp.indices], (mb,))
         mu = pad_stack([instances[i][2] for i in grp.indices], (nb,))
-        r = solve_ot_batched(c, nu, mu, eps, sizes=grp.sizes,
-                             guaranteed=guaranteed)
+        stats = None
+        if compact:
+            from .compaction import solve_ot_batched_compacting
+
+            kw = {} if chunk is None else {"k": chunk}
+            r, stats = solve_ot_batched_compacting(
+                c, nu, mu, eps_arr[grp.indices], sizes=grp.sizes,
+                guaranteed=guaranteed, **kw
+            )
+        else:
+            r = solve_ot_batched(c, nu, mu, float(eps_arr[0]),
+                                 sizes=grp.sizes, guaranteed=guaranteed)
         # one device->host fetch per result array, not per instance
         plan, cost, phases, rounds, theta = (
             np.asarray(r.plan), np.asarray(r.cost), np.asarray(r.phases),
@@ -256,24 +310,43 @@ def solve_ot_ragged(
                 "batch_size": len(grp.indices),
                 "bucket": grp.key,
             }
+            if stats is not None:
+                results[i]["dispatches"] = stats.dispatches
     return results
 
 
 def solve_assignment_ragged(
     cs,
-    eps: float,
+    eps,
     *,
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     guaranteed: bool = False,
+    compact: bool = True,
+    chunk: int | None = None,
 ):
     """Solve a ragged list of assignment cost matrices via bucketed batched
-    dispatch. Returns per-instance dicts (in input order)."""
+    dispatch. Returns per-instance dicts (in input order). ``compact`` as
+    in ``solve_ot_ragged``."""
     shapes = [tuple(np.asarray(c).shape) for c in cs]
+    eps_arr = np.broadcast_to(np.asarray(eps, np.float64), (len(cs),))
+    if not compact and np.unique(eps_arr).size > 1:
+        raise ValueError("per-instance eps requires compact=True")
     results: list = [None] * len(cs)
     for grp in bucket_instances(shapes, buckets):
         c = pad_stack([cs[i] for i in grp.indices], grp.key)
-        r = solve_assignment_batched(c, eps, sizes=grp.sizes,
-                                     guaranteed=guaranteed)
+        stats = None
+        if compact:
+            from .compaction import solve_assignment_batched_compacting
+
+            kw = {} if chunk is None else {"k": chunk}
+            r, stats = solve_assignment_batched_compacting(
+                c, eps_arr[grp.indices], sizes=grp.sizes,
+                guaranteed=guaranteed, **kw
+            )
+        else:
+            r = solve_assignment_batched(c, float(eps_arr[0]),
+                                         sizes=grp.sizes,
+                                         guaranteed=guaranteed)
         matching, cost, phases, rounds, y_b, y_a = (
             np.asarray(r.matching), np.asarray(r.cost), np.asarray(r.phases),
             np.asarray(r.rounds), np.asarray(r.y_b), np.asarray(r.y_a),
@@ -290,4 +363,6 @@ def solve_assignment_ragged(
                 "batch_size": len(grp.indices),
                 "bucket": grp.key,
             }
+            if stats is not None:
+                results[i]["dispatches"] = stats.dispatches
     return results

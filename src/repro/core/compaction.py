@@ -1,0 +1,414 @@
+"""Convergence-compacting chunked-phase batch driver.
+
+The lockstep batched solvers (core/batched.py) vmap one unbounded
+``lax.while_loop`` over the batch, so every instance in a bucket burns
+phase-iterations until the *slowest* instance converges — ROADMAP measured
+~3x max-phase skew at eps=0.1, i.e. most batched FLOPs were select-masked
+no-ops. This driver recovers the paper's per-instance O(log n / eps^2)
+parallel bound for a fleet of instances by retiring converged work early:
+
+  1. dispatch ``k`` phases to the whole bucket via the resumable stepped
+     cores (``run_assignment_phases`` / ``run_ot_phases``);
+  2. fetch the (B,) converged mask (one scalar-per-instance device->host
+     sync per chunk — the phase loops themselves never sync);
+  3. once occupancy has halved, scatter the bucket's states into a full-B
+     result buffer and gather the survivors into the next power-of-two
+     batch bucket (converged instances pad the gather; their termination
+     predicate is already false, so they add zero loop iterations);
+  4. when everyone has terminated, run the completion/cost epilogue ONCE,
+     in bulk, over the full-B buffer of retired states.
+
+Every dispatched program is keyed by (bucket shape, k, batch bucket), so
+the power-of-two descent B -> B/2 -> ... compiles each size once and
+reuses it for all future traffic. Per-instance state trajectories are
+bit-identical to the lockstep path (and hence to unbatched solves): the
+chunked loops share the exact phase body, vmap lanes never interact, and
+the deterministic proposal hash keys depend only on the within-instance
+(row, col, phase) — never on batch position. Retiring a neighbor cannot
+perturb a survivor.
+
+Unlike the lockstep path, ``eps`` may be a per-instance (B,) array here:
+the rounding prologue takes eps as a traced scalar and the termination
+threshold/phase cap are per-instance anyway, so one compacted dispatch can
+serve a mixed-accuracy batch (the skew such mixtures create is exactly
+what compaction absorbs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched import (
+    BatchedAssignmentResult,
+    _mask_ot_inputs,
+    _sizes_arrays,
+    _theta_array,
+)
+from .pushrelabel import (
+    _max_phases,
+    assignment_converged,
+    assignment_epilogue,
+    assignment_prologue,
+    init_assignment_state,
+    run_assignment_phases,
+)
+from .transport import (
+    init_ot_state,
+    ot_converged,
+    ot_epilogue,
+    ot_phase_cap,
+    ot_prologue,
+    run_ot_phases,
+)
+
+DEFAULT_CHUNK = 8
+
+
+@dataclass
+class CompactionStats:
+    """Occupancy/waste accounting for one compacted solve."""
+    batch: int                 # real instances
+    dispatched_batch: int      # power-of-two padded batch the driver ran
+    chunk: int                 # k, phases per dispatch
+    dispatches: int = 0
+    # (batch bucket, live instances) after each k-phase dispatch
+    occupancy: List[Tuple[int, int]] = field(default_factory=list)
+    slot_phases: int = 0       # phase-slots actually executed (all lanes)
+    phases_needed: int = 0     # sum of per-instance converged phase counts
+    lockstep_slot_phases: int = 0  # batch * max(phases): what lockstep burns
+
+    def as_dict(self) -> dict:
+        return {
+            "batch": self.batch,
+            "dispatched_batch": self.dispatched_batch,
+            "chunk": self.chunk,
+            "dispatches": self.dispatches,
+            "occupancy": [list(o) for o in self.occupancy],
+            "slot_phases": self.slot_phases,
+            "phases_needed": self.phases_needed,
+            "lockstep_slot_phases": self.lockstep_slot_phases,
+        }
+
+
+def pow2_at_least(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@jax.jit
+def _gather(tree, idx):
+    return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+
+@jax.jit
+def _scatter(buf, tree, idx):
+    return jax.tree_util.tree_map(lambda b, a: b.at[idx].set(a), buf, tree)
+
+
+def _drive(data, state, run_fn, conv_fn, max_chunks: int,
+           stats: CompactionStats):
+    """Generic compacting loop over a per-instance ``data`` pytree (solver
+    inputs: integer costs, thresholds, caps) and a solver-state pytree.
+
+    ``run_fn(data, state) -> state`` advances every lane by at most
+    ``stats.chunk`` phases (the chunk size is baked into ``run_fn``);
+    ``conv_fn(data, state) -> (B,) bool`` is the per-lane termination
+    predicate. Returns the full-size state pytree with every lane
+    terminated, in original batch order."""
+    idx = np.arange(stats.dispatched_batch)
+    buf = state
+    cur_d, cur_s = data, state
+    ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
+    for _ in range(max_chunks):
+        cur_s = run_fn(cur_d, cur_s)
+        stats.dispatches += 1
+        conv = np.asarray(conv_fn(cur_d, cur_s))
+        ph = np.asarray(cur_s.phases, np.int64)
+        bb = int(conv.shape[0])
+        # the vmapped while_loop runs every lane for the max phase delta
+        stats.slot_phases += bb * int((ph - ph_prev).max(initial=0))
+        ph_prev = ph
+        live = int((~conv).sum())
+        stats.occupancy.append((bb, live))
+        if live == 0:
+            buf = _scatter(buf, cur_s, jnp.asarray(idx))
+            break
+        nb = pow2_at_least(live)
+        if nb <= bb // 2:
+            # retire: flush ALL current lanes to the result buffer (the
+            # survivor writes are dead — overwritten by a later flush —
+            # but a full-lane scatter keeps the index vector at the fixed
+            # bucket length, so the program set stays one-per-(shape, B);
+            # scattering only the converged lanes would retrace per
+            # data-dependent lane count), then gather survivors (padded
+            # with one converged lane, which is inert — its predicate is
+            # already false) into the next bucket.
+            buf = _scatter(buf, cur_s, jnp.asarray(idx))
+            surv = np.flatnonzero(~conv)
+            fill = np.flatnonzero(conv)[:1]
+            sel = np.concatenate([surv, np.repeat(fill, nb - live)])
+            sel_j = jnp.asarray(sel)
+            cur_d = _gather(cur_d, sel_j)
+            cur_s = _gather(cur_s, sel_j)
+            idx = idx[sel]
+            ph_prev = ph[sel]
+    else:
+        # phase caps bound every lane, so the loop always breaks; flush
+        # defensively if a cap change ever violates that.
+        buf = _scatter(buf, cur_s, jnp.asarray(idx))
+    return buf
+
+
+def _eps_array(eps, b: int, guaranteed: bool) -> np.ndarray:
+    arr = np.broadcast_to(np.asarray(eps, np.float64), (b,)).copy()
+    if guaranteed:
+        arr = arr / 3.0
+    if (arr <= 0).any():
+        raise ValueError("eps must be positive")
+    return arr
+
+
+# --------------------------------------------------------------------------
+# Assignment
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _assign_prologue_b(c, eps, m_valid, n_valid):
+    return jax.vmap(assignment_prologue)(c, eps, m_valid, n_valid)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _assign_chunk(data, state, k: int):
+    return jax.vmap(
+        lambda d, s: run_assignment_phases(
+            d["c_int"], s, d["threshold"], d["phase_cap"], k,
+            m_valid=d["m_valid"],
+        )
+    )(data, state)
+
+
+@jax.jit
+def _assign_conv(data, state):
+    return jax.vmap(
+        lambda d, s: assignment_converged(
+            s, d["threshold"], d["phase_cap"], m_valid=d["m_valid"]
+        )
+    )(data, state)
+
+
+@jax.jit
+def _assign_epilogue_b(cm, scale, state, eps, row_ok, col_ok):
+    return jax.vmap(assignment_epilogue)(cm, scale, state, eps,
+                                         row_ok, col_ok)
+
+
+def solve_assignment_batched_compacting(
+    c: jnp.ndarray,
+    eps,
+    *,
+    sizes=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+):
+    """Compacting counterpart of ``solve_assignment_batched``.
+
+    Args:
+      c: (B, M, N) padded costs, as in the lockstep path.
+      eps: scalar, or (B,) per-instance array (mixed-accuracy batch — the
+        lockstep path cannot express this).
+      k: phases per dispatch; any value yields identical results.
+
+    Returns ``(BatchedAssignmentResult, CompactionStats)``; every result
+    leaf is bit-identical per instance to the lockstep path (and to the
+    unbatched solver) for a shared scalar eps.
+    """
+    c = jnp.asarray(c, jnp.float32)
+    if c.ndim != 3:
+        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+    b, m, n = c.shape
+    if b == 0:
+        z = lambda *s: jnp.zeros(s, jnp.float32)
+        out = BatchedAssignmentResult(
+            matching=jnp.zeros((0, m), jnp.int32), cost=z(0),
+            y_b=z(0, m), y_a=z(0, n),
+            phases=jnp.zeros((0,), jnp.int32),
+            rounds=jnp.zeros((0,), jnp.int32),
+            matched_before_completion=jnp.zeros((0,), jnp.int32),
+        )
+        return out, CompactionStats(batch=0, dispatched_batch=0, chunk=k)
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    eps_arr = _eps_array(eps, b, guaranteed)
+    threshold = np.asarray(
+        [int(e * int(mi)) for e, mi in zip(eps_arr, m_valid)], np.int32
+    )
+    phase_cap = np.asarray([_max_phases(float(e), m) for e in eps_arr],
+                           np.int32)
+
+    # Pad the batch to a power of two with born-converged empty instances
+    # (zero valid rows -> free supply 0 <= threshold 0), so the descent
+    # B -> B/2 -> ... visits only power-of-two program shapes.
+    bp = pow2_at_least(b)
+    if bp > b:
+        pad = bp - b
+        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
+        m_valid = np.concatenate([m_valid, np.zeros((pad,), np.int32)])
+        n_valid = np.concatenate([n_valid, np.zeros((pad,), np.int32)])
+        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
+        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
+        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
+
+    eps_j = jnp.asarray(eps_arr, jnp.float32)
+    mv_j = jnp.asarray(m_valid)
+    nv_j = jnp.asarray(n_valid)
+    cm, c_int, scale, row_ok, col_ok = _assign_prologue_b(c, eps_j, mv_j,
+                                                          nv_j)
+    data = {
+        "c_int": c_int,
+        "threshold": jnp.asarray(threshold),
+        "phase_cap": jnp.asarray(phase_cap),
+        "m_valid": mv_j,
+    }
+    state0 = jax.vmap(lambda _: init_assignment_state(m, n))(
+        jnp.zeros((bp,))
+    )
+    stats = CompactionStats(batch=b, dispatched_batch=bp, chunk=k)
+    max_chunks = -(-int(phase_cap.max(initial=1)) // max(k, 1)) + 2
+    final = _drive(data, state0, partial(_assign_chunk, k=k), _assign_conv,
+                   max_chunks, stats)
+    r = _assign_epilogue_b(cm, scale, final, eps_j, row_ok, col_ok)
+
+    phases = np.asarray(final.phases[:b], np.int64)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    out = BatchedAssignmentResult(
+        matching=r.matching[:b],
+        cost=r.cost[:b],
+        y_b=r.y_b[:b],
+        y_a=r.y_a[:b],
+        phases=r.phases[:b],
+        rounds=r.rounds[:b],
+        matched_before_completion=r.matched_before_completion[:b],
+    )
+    return out, stats
+
+
+# --------------------------------------------------------------------------
+# General OT
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _ot_prologue_b(c, nu, mu, theta, eps):
+    return jax.vmap(ot_prologue)(c, nu, mu, theta, eps)
+
+
+@partial(jax.jit, static_argnames=("k", "max_rounds"))
+def _ot_chunk(data, state, k: int, max_rounds: int):
+    return jax.vmap(
+        lambda d, s: run_ot_phases(d["c_int"], s, d["threshold"],
+                                   d["phase_cap"], k, max_rounds)
+    )(data, state)
+
+
+@jax.jit
+def _ot_conv(data, state):
+    return jax.vmap(
+        lambda d, s: ot_converged(s, d["threshold"], d["phase_cap"])
+    )(data, state)
+
+
+@jax.jit
+def _ot_epilogue_b(c, nu, mu, theta, eps, scale, s_int, d_int, state):
+    return jax.vmap(ot_epilogue)(c, nu, mu, theta, eps, scale, s_int,
+                                 d_int, state)
+
+
+def solve_ot_batched_compacting(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps,
+    *,
+    sizes=None,
+    theta=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+):
+    """Compacting counterpart of ``solve_ot_batched``.
+
+    Same contract as the lockstep path ((B, M, N) costs, (B, M)/(B, N)
+    masses, padding zeroed from ``sizes``), plus per-instance ``eps``
+    support. Returns ``(OTResult with leading batch axes, CompactionStats)``.
+    """
+    c = jnp.asarray(c, jnp.float32)
+    nu = jnp.asarray(nu, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    if c.ndim != 3:
+        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+    b, m, n = c.shape
+    if b == 0:
+        from .transport import OTResult, OTState
+
+        zf = lambda *s: jnp.zeros(s, jnp.float32)
+        zi = lambda *s: jnp.zeros(s, jnp.int32)
+        out = OTResult(
+            plan=zf(0, m, n), cost=zf(0), y_b=zf(0, m), y_a=zf(0, n),
+            phases=zi(0), rounds=zi(0),
+            state=OTState(y_b=zi(0, m), ya_hi=zi(0, n), free_b=zi(0, m),
+                          free_a=zi(0, n), f_hi=zi(0, m, n),
+                          f_lo=zi(0, m, n), phases=zi(0), rounds=zi(0)),
+            theta=zf(0), s_int=zi(0, m), d_int=zi(0, n),
+        )
+        return out, CompactionStats(batch=0, dispatched_batch=0, chunk=k)
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    eps_arr = _eps_array(eps, b, guaranteed)
+    th = _theta_array(m_valid, n_valid, eps_arr, theta)
+    phase_cap = np.asarray([ot_phase_cap(float(e)) for e in eps_arr],
+                           np.int32)
+    # padding masks + host-float64 thresholds, shared with the lockstep
+    # path so the two can never diverge
+    c, nu, mu, threshold = _mask_ot_inputs(c, nu, mu, m_valid, n_valid,
+                                           th, eps_arr)
+
+    # Power-of-two batch padding with born-converged empty instances
+    # (zero mass -> free supply 0 <= threshold 0).
+    bp = pow2_at_least(b)
+    if bp > b:
+        pad = bp - b
+        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
+        nu = jnp.concatenate([nu, jnp.zeros((pad, m), jnp.float32)])
+        mu = jnp.concatenate([mu, jnp.zeros((pad, n), jnp.float32)])
+        th = np.concatenate([th, np.ones((pad,), np.float32)])
+        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
+        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
+        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
+
+    eps_j = jnp.asarray(eps_arr, jnp.float32)
+    th_j = jnp.asarray(th)
+    c_int, s_int, d_int, scale = _ot_prologue_b(c, nu, mu, th_j, eps_j)
+    data = {
+        "c_int": c_int,
+        "threshold": jnp.asarray(threshold),
+        "phase_cap": jnp.asarray(phase_cap),
+    }
+    state0 = jax.vmap(init_ot_state)(s_int, d_int)
+    stats = CompactionStats(batch=b, dispatched_batch=bp, chunk=k)
+    max_rounds = int(m + n + 2)
+    max_chunks = -(-int(phase_cap.max(initial=1)) // max(k, 1)) + 2
+    final = _drive(data, state0,
+                   partial(_ot_chunk, k=k, max_rounds=max_rounds),
+                   _ot_conv, max_chunks, stats)
+    r = _ot_epilogue_b(c, nu, mu, th_j, eps_j, scale, s_int, d_int, final)
+
+    phases = np.asarray(final.phases[:b], np.int64)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    out = jax.tree_util.tree_map(lambda a: a[:b], r)
+    return out, stats

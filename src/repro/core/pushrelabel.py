@@ -19,6 +19,21 @@ eps-feasibility), per the paper's analysis; `guaranteed=True` runs with eps/3.
 The full solve - phases, rounds, completion - is one jitted XLA program with
 ``lax.while_loop``; there is no host round-trip per phase (the paper's CuPy
 implementation synchronizes every phase).
+
+The solve is also exposed as a *resumable stepped core* for the compacting
+batch driver (core/compaction.py):
+
+    state = init_assignment_state(m, n)
+    while not assignment_converged(state, threshold, phase_cap):
+        state = run_assignment_phases(c_int, state, threshold, phase_cap, k)
+
+``run_phases`` advances at most ``k`` phases of the identical phase body, so
+a solve becomes a sequence of fixed-size dispatches whose state trajectory is
+bit-identical to the one-shot ``solve_assignment_int`` for every ``k``.
+``assignment_prologue`` / ``assignment_epilogue`` factor the float scaling
+and the completion/cost steps of ``assignment_pipeline`` the same way; both
+accept ``eps`` as a Python float or a traced f32 scalar (the compaction
+driver vmaps them with a per-instance eps for mixed-accuracy batches).
 """
 from __future__ import annotations
 
@@ -65,6 +80,59 @@ def round_costs(c: jnp.ndarray, eps: float) -> jnp.ndarray:
     return jnp.floor(c / eps).astype(jnp.int32)
 
 
+def init_assignment_state(m: int, n: int) -> PushRelabelState:
+    """Paper initialization: everything free, y(b) = eps (1 unit), y(a) = 0."""
+    return PushRelabelState(
+        match_ba=jnp.full((m,), -1, jnp.int32),
+        match_ab=jnp.full((n,), -1, jnp.int32),
+        y_b=jnp.ones((m,), jnp.int32),   # y(b) = eps  -> 1 unit
+        y_a=jnp.zeros((n,), jnp.int32),  # y(a) = 0
+        phases=jnp.int32(0),
+        rounds=jnp.int32(0),
+        sum_ni=jnp.int32(0),
+    )
+
+
+def _row_mask(m: int, m_valid) -> jnp.ndarray:
+    if m_valid is None:
+        return jnp.ones((m,), bool)
+    return jnp.arange(m, dtype=jnp.int32) < m_valid
+
+
+def assignment_phase(c_int, s: PushRelabelState, row_ok, propose_fn=None
+                     ) -> PushRelabelState:
+    """One full phase: (I) greedy maximal matching M' on the admissible
+    subgraph, (II) push, (III) relabel. This is the single state-transition
+    shared by the one-shot loop and the chunked ``run_assignment_phases``."""
+    m, n = c_int.shape
+    in_bprime = (s.match_ba < 0) & row_ok
+    mm = greedy_maximal_matching(
+        c_int, s.y_b, s.y_a, in_bprime, s.phases, propose_fn=propose_fn
+    )
+    rows = jnp.arange(m, dtype=jnp.int32)
+    won = mm.mprime_b >= 0
+    tgt = jnp.where(won, mm.mprime_b, 0)
+    # (II) push: displace old partner of each column matched in M'.
+    old_partner = jnp.where(won, s.match_ab[tgt], -1)
+    displaced = jnp.where(old_partner >= 0, old_partner, m)  # sentinel m
+    match_ba = s.match_ba.at[displaced].set(-1, mode="drop")
+    match_ba = jnp.where(won, mm.mprime_b, match_ba)
+    match_ab = s.match_ab.at[jnp.where(won, tgt, n)].set(rows, mode="drop")
+    # (III) relabel.
+    y_a = s.y_a.at[jnp.where(won, tgt, n)].add(-1, mode="drop")
+    still_free = in_bprime & ~won
+    y_b = s.y_b + still_free.astype(jnp.int32)
+    return PushRelabelState(
+        match_ba=match_ba,
+        match_ab=match_ab,
+        y_b=y_b,
+        y_a=y_a,
+        phases=s.phases + 1,
+        rounds=s.rounds + mm.rounds,
+        sum_ni=s.sum_ni + jnp.sum(in_bprime, dtype=jnp.int32),
+    )
+
+
 @partial(jax.jit, static_argnames=("eps", "propose_fn", "track_stats"))
 def solve_assignment_int(
     c_int: jnp.ndarray,
@@ -88,57 +156,66 @@ def solve_assignment_int(
     m, n = c_int.shape
     if m_valid is None:
         threshold = jnp.int32(int(eps * m))
-        row_ok = jnp.ones((m,), bool)
+    elif threshold is None:
+        raise ValueError("m_valid requires a host-computed threshold")
     else:
-        if threshold is None:
-            raise ValueError("m_valid requires a host-computed threshold")
         threshold = jnp.asarray(threshold, jnp.int32)
-        row_ok = jnp.arange(m, dtype=jnp.int32) < m_valid
+    row_ok = _row_mask(m, m_valid)
     max_phases = _max_phases(eps, m)
-
-    init = PushRelabelState(
-        match_ba=jnp.full((m,), -1, jnp.int32),
-        match_ab=jnp.full((n,), -1, jnp.int32),
-        y_b=jnp.ones((m,), jnp.int32),   # y(b) = eps  -> 1 unit
-        y_a=jnp.zeros((n,), jnp.int32),  # y(a) = 0
-        phases=jnp.int32(0),
-        rounds=jnp.int32(0),
-        sum_ni=jnp.int32(0),
-    )
 
     def cond(s: PushRelabelState):
         free = jnp.sum((s.match_ba < 0) & row_ok)
         return (free > threshold) & (s.phases < jnp.int32(max_phases))
 
     def body(s: PushRelabelState) -> PushRelabelState:
-        in_bprime = (s.match_ba < 0) & row_ok
-        mm = greedy_maximal_matching(
-            c_int, s.y_b, s.y_a, in_bprime, s.phases, propose_fn=propose_fn
-        )
-        rows = jnp.arange(m, dtype=jnp.int32)
-        won = mm.mprime_b >= 0
-        tgt = jnp.where(won, mm.mprime_b, 0)
-        # (II) push: displace old partner of each column matched in M'.
-        old_partner = jnp.where(won, s.match_ab[tgt], -1)
-        displaced = jnp.where(old_partner >= 0, old_partner, m)  # sentinel m
-        match_ba = s.match_ba.at[displaced].set(-1, mode="drop")
-        match_ba = jnp.where(won, mm.mprime_b, match_ba)
-        match_ab = s.match_ab.at[jnp.where(won, tgt, n)].set(rows, mode="drop")
-        # (III) relabel.
-        y_a = s.y_a.at[jnp.where(won, tgt, n)].add(-1, mode="drop")
-        still_free = in_bprime & ~won
-        y_b = s.y_b + still_free.astype(jnp.int32)
-        return PushRelabelState(
-            match_ba=match_ba,
-            match_ab=match_ab,
-            y_b=y_b,
-            y_a=y_a,
-            phases=s.phases + 1,
-            rounds=s.rounds + mm.rounds,
-            sum_ni=s.sum_ni + jnp.sum(in_bprime, dtype=jnp.int32),
-        )
+        return assignment_phase(c_int, s, row_ok, propose_fn)
 
-    return jax.lax.while_loop(cond, body, init)
+    return jax.lax.while_loop(cond, body, init_assignment_state(m, n))
+
+
+@partial(jax.jit, static_argnames=("k", "propose_fn"))
+def run_assignment_phases(
+    c_int: jnp.ndarray,
+    state: PushRelabelState,
+    threshold,
+    phase_cap,
+    k: int,
+    m_valid=None,
+    propose_fn=None,
+) -> PushRelabelState:
+    """Advance the solve by at most ``k`` phases (fewer if it terminates).
+
+    The resumable half of the stepped core: ``threshold`` and ``phase_cap``
+    are traced () int32 (host-precomputed, per instance under vmap), ``k`` is
+    the static chunk size. Chaining calls for any ``k`` reproduces the
+    one-shot ``solve_assignment_int`` trajectory bit for bit, because the
+    phase body is the identical ``assignment_phase`` and the termination
+    predicate is evaluated on the same state."""
+    m, n = c_int.shape
+    row_ok = _row_mask(m, m_valid)
+    threshold = jnp.asarray(threshold, jnp.int32)
+    phase_cap = jnp.asarray(phase_cap, jnp.int32)
+    start = state.phases
+
+    def cond(s: PushRelabelState):
+        free = jnp.sum((s.match_ba < 0) & row_ok)
+        return ((free > threshold) & (s.phases < phase_cap)
+                & (s.phases - start < jnp.int32(k)))
+
+    def body(s: PushRelabelState) -> PushRelabelState:
+        return assignment_phase(c_int, s, row_ok, propose_fn)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def assignment_converged(state: PushRelabelState, threshold, phase_cap,
+                         m_valid=None) -> jnp.ndarray:
+    """() bool: the solve loop would not take another phase (free-supply
+    target reached, or the phase-cap safety bound hit)."""
+    row_ok = _row_mask(state.match_ba.shape[0], m_valid)
+    free = jnp.sum((state.match_ba < 0) & row_ok)
+    return ~((free > jnp.asarray(threshold, jnp.int32))
+             & (state.phases < jnp.asarray(phase_cap, jnp.int32)))
 
 
 def complete_matching(match_ba: jnp.ndarray, match_ab: jnp.ndarray,
@@ -178,21 +255,13 @@ def complete_matching(match_ba: jnp.ndarray, match_ab: jnp.ndarray,
 PAD_COST = 1 << 26
 
 
-def assignment_pipeline(
-    c: jnp.ndarray,
-    eps: float,
-    *,
-    m_valid=None,
-    n_valid=None,
-    threshold=None,
-    propose_fn=None,
-) -> AssignmentResult:
-    """Traceable solve pipeline: scaling -> rounding -> integer phases ->
-    completion -> cost/duals. The batched solver vmaps this function with
-    traced ``m_valid``/``n_valid``/``threshold`` (instances padded up to a
-    bucket shape: padded edges get ``PAD_COST``, padded rows leave B', and
-    the completion skips padding), which makes each padded solve identical
-    to its unpadded original."""
+def assignment_prologue(c: jnp.ndarray, eps, m_valid=None, n_valid=None):
+    """Scaling + rounding half of the pipeline, shared by the one-shot solve
+    and the chunked/compacting drivers. ``eps`` may be a Python float or a
+    traced f32 scalar (per-instance eps under vmap — f32(eps) division is
+    bit-identical to the static-eps division). Returns
+    ``(cm, c_int, scale, row_ok, col_ok)``; ``cm`` is the padding-masked
+    float cost matrix the epilogue prices the final matching against."""
     c = jnp.asarray(c, jnp.float32)
     m, n = c.shape
     if m_valid is None:
@@ -207,8 +276,15 @@ def assignment_pipeline(
     c_int = round_costs(cm / scale, eps)
     if m_valid is not None:
         c_int = jnp.where(mask, c_int, PAD_COST)
-    state = solve_assignment_int(c_int, eps, propose_fn=propose_fn,
-                                 m_valid=m_valid, threshold=threshold)
+    return cm, c_int, scale, row_ok, col_ok
+
+
+def assignment_epilogue(cm: jnp.ndarray, scale, state: PushRelabelState,
+                        eps, row_ok=None, col_ok=None) -> AssignmentResult:
+    """Completion + cost/dual half of the pipeline, applied to a terminated
+    integer state. The compacting driver runs this once, in bulk, over the
+    full batch of retired states."""
+    m, n = cm.shape
     matched_before = jnp.sum(state.match_ba >= 0, dtype=jnp.int32)
     matching = complete_matching(state.match_ba, state.match_ab,
                                  row_ok, col_ok)
@@ -227,6 +303,29 @@ def assignment_pipeline(
         sum_ni=state.sum_ni,
         matched_before_completion=matched_before,
     )
+
+
+def assignment_pipeline(
+    c: jnp.ndarray,
+    eps: float,
+    *,
+    m_valid=None,
+    n_valid=None,
+    threshold=None,
+    propose_fn=None,
+) -> AssignmentResult:
+    """Traceable solve pipeline: scaling -> rounding -> integer phases ->
+    completion -> cost/duals. The batched solver vmaps this function with
+    traced ``m_valid``/``n_valid``/``threshold`` (instances padded up to a
+    bucket shape: padded edges get ``PAD_COST``, padded rows leave B', and
+    the completion skips padding), which makes each padded solve identical
+    to its unpadded original."""
+    cm, c_int, scale, row_ok, col_ok = assignment_prologue(
+        c, eps, m_valid, n_valid
+    )
+    state = solve_assignment_int(c_int, eps, propose_fn=propose_fn,
+                                 m_valid=m_valid, threshold=threshold)
+    return assignment_epilogue(cm, scale, state, eps, row_ok, col_ok)
 
 
 def solve_assignment(

@@ -23,6 +23,12 @@ column's hi cluster is fully consumed by M', its value collapses one step down
 duals rise (paper invariant I2, case (ii)).
 
 All arithmetic is int32 in units of eps; the solve is one jitted XLA program.
+
+Like the assignment solver, the loop is also exposed as a resumable stepped
+core (``init_ot_state`` / ``run_ot_phases`` / ``ot_converged``) plus a
+``ot_prologue`` / ``ot_epilogue`` split of the float pipeline, so the
+compacting batch driver (core/compaction.py) can run a solve as a sequence
+of k-phase dispatches bit-identical to the one-shot ``solve_ot_int``.
 """
 from __future__ import annotations
 
@@ -31,6 +37,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .matching import proposal_keys
 
@@ -163,20 +170,11 @@ def _phase(c_int, s: OTState, max_rounds: int) -> OTState:
     )
 
 
-@partial(jax.jit, static_argnames=("eps", "max_phases", "max_rounds"))
-def solve_ot_int(
-    c_int: jnp.ndarray,
-    s_int: jnp.ndarray,
-    d_int: jnp.ndarray,
-    eps: float,
-    max_phases: int,
-    max_rounds: int,
-) -> OTState:
-    nb, na = c_int.shape
-    total_s = jnp.sum(s_int)
-    threshold = (jnp.float32(eps) * total_s.astype(jnp.float32)).astype(jnp.int32)
-
-    init = OTState(
+def init_ot_state(s_int: jnp.ndarray, d_int: jnp.ndarray) -> OTState:
+    """Paper initialization: all mass free, y(b) = eps (1 unit), y(a) = 0."""
+    nb = s_int.shape[0]
+    na = d_int.shape[0]
+    return OTState(
         y_b=jnp.ones((nb,), jnp.int32),
         ya_hi=jnp.zeros((na,), jnp.int32),
         free_b=s_int.astype(jnp.int32),
@@ -187,10 +185,81 @@ def solve_ot_int(
         rounds=jnp.int32(0),
     )
 
+
+def ot_termination_threshold(nu, theta, eps: float) -> int:
+    """Host-side float64 termination threshold ``int(eps * sum(s_int))``.
+
+    ``s_int = floor(f32(nu) * f32(theta))`` replicates the device rounding
+    exactly (a single correctly-rounded f32 multiply on either side); the
+    eps product is then taken in float64. Computing it on device as
+    ``f32(eps) * f32(total)`` rounds the wrong way for some (eps, total)
+    pairs — e.g. eps=0.3/3 (the guaranteed path), total=10: f32(0.1)*10 =
+    1.0000000149 -> 1, but float64 gives 0.999... -> 0 — the same bug PR 1
+    fixed for the assignment path's ``int(eps * m)``."""
+    s_int = np.floor(np.asarray(nu, np.float32) * np.float32(theta))
+    return int(float(eps) * int(s_int.sum(dtype=np.float64)))
+
+
+@partial(jax.jit, static_argnames=("eps", "max_phases", "max_rounds"))
+def solve_ot_int(
+    c_int: jnp.ndarray,
+    s_int: jnp.ndarray,
+    d_int: jnp.ndarray,
+    eps: float,
+    max_phases: int,
+    max_rounds: int,
+    threshold=None,
+) -> OTState:
+    """Run phases until free supply <= threshold. ``threshold`` (traced ()
+    int32) should be the host-computed ``ot_termination_threshold``; when
+    None (nu/theta unavailable on host, e.g. under a caller's jit) it falls
+    back to the on-device f32 product."""
+    if threshold is None:
+        total_s = jnp.sum(s_int)
+        threshold = (jnp.float32(eps)
+                     * total_s.astype(jnp.float32)).astype(jnp.int32)
+    else:
+        threshold = jnp.asarray(threshold, jnp.int32)
+
     def cond(s: OTState):
         return (jnp.sum(s.free_b) > threshold) & (s.phases < max_phases)
 
-    return jax.lax.while_loop(cond, lambda s: _phase(c_int, s, max_rounds), init)
+    return jax.lax.while_loop(cond, lambda s: _phase(c_int, s, max_rounds),
+                              init_ot_state(s_int, d_int))
+
+
+@partial(jax.jit, static_argnames=("k", "max_rounds"))
+def run_ot_phases(
+    c_int: jnp.ndarray,
+    state: OTState,
+    threshold,
+    phase_cap,
+    k: int,
+    max_rounds: int,
+) -> OTState:
+    """Advance the OT solve by at most ``k`` phases (fewer on termination).
+
+    ``threshold``/``phase_cap`` are traced () int32 (per instance under
+    vmap); ``k`` and ``max_rounds`` are static. Chaining calls reproduces
+    the one-shot ``solve_ot_int`` state trajectory bit for bit for any k:
+    the phase body is the identical ``_phase`` and the per-phase salt rides
+    in ``state.phases``."""
+    threshold = jnp.asarray(threshold, jnp.int32)
+    phase_cap = jnp.asarray(phase_cap, jnp.int32)
+    start = state.phases
+
+    def cond(s: OTState):
+        return ((jnp.sum(s.free_b) > threshold) & (s.phases < phase_cap)
+                & (s.phases - start < jnp.int32(k)))
+
+    return jax.lax.while_loop(cond, lambda s: _phase(c_int, s, max_rounds),
+                              state)
+
+
+def ot_converged(state: OTState, threshold, phase_cap) -> jnp.ndarray:
+    """() bool: the solve loop would not take another phase."""
+    return ~((jnp.sum(state.free_b) > jnp.asarray(threshold, jnp.int32))
+             & (state.phases < jnp.asarray(phase_cap, jnp.int32)))
 
 
 def northwest_corner(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -206,30 +275,59 @@ def northwest_corner(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def ot_phase_cap(eps: float) -> int:
+    """Static safety bound on the phase count (paper Lemma 4.2 analogue)."""
+    return int((1.0 + 2.0 * eps) / (eps * eps)) + 8
+
+
+def ot_prologue(c: jnp.ndarray, nu: jnp.ndarray, mu: jnp.ndarray, theta, eps):
+    """Rounding half of the pipeline: float costs/masses -> integer instance.
+    ``theta`` and ``eps`` may be Python floats or traced f32 scalars (the
+    batched/compacting drivers vmap with per-instance values). Returns
+    ``(c_int, s_int, d_int, scale)``."""
+    c = jnp.asarray(c, jnp.float32)
+    nu = jnp.asarray(nu, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    theta = jnp.asarray(theta, jnp.float32)
+    scale = jnp.maximum(jnp.max(c), 1e-30)
+    c_int = jnp.floor(c / scale / eps).astype(jnp.int32)
+    s_int = jnp.floor(nu * theta).astype(jnp.int32)          # round down
+    d_int = jnp.ceil(mu * theta).astype(jnp.int32)           # round up
+    return c_int, s_int, d_int, scale
+
+
 def ot_pipeline(
     c: jnp.ndarray,
     nu: jnp.ndarray,
     mu: jnp.ndarray,
     theta,
     eps: float,
+    threshold=None,
 ) -> OTResult:
     """Traceable solve pipeline: rounding -> integer solve -> completion ->
     marginal repair. ``theta`` may be a Python float or a traced f32 scalar
-    (the batched solver vmaps this function with a per-instance theta)."""
+    (the batched solver vmaps this function with a per-instance theta);
+    ``threshold`` the host-computed ``ot_termination_threshold`` (traced ()
+    int32, falls back to the on-device f32 product when None)."""
     c = jnp.asarray(c, jnp.float32)
     nu = jnp.asarray(nu, jnp.float32)
     mu = jnp.asarray(mu, jnp.float32)
     nb, na = c.shape
+    c_int, s_int, d_int, scale = ot_prologue(c, nu, mu, theta, eps)
     theta = jnp.asarray(theta, jnp.float32)
-    scale = jnp.maximum(jnp.max(c), 1e-30)
-    c_int = jnp.floor(c / scale / eps).astype(jnp.int32)
-    s_int = jnp.floor(nu * theta).astype(jnp.int32)          # round down
-    d_int = jnp.ceil(mu * theta).astype(jnp.int32)           # round up
-    max_phases = int((1.0 + 2.0 * eps) / (eps * eps)) + 8
     state = solve_ot_int(
-        c_int, s_int, d_int, eps, max_phases, max_rounds=int(nb + na + 2)
+        c_int, s_int, d_int, eps, ot_phase_cap(eps),
+        max_rounds=int(nb + na + 2), threshold=threshold,
     )
+    return ot_epilogue(c, nu, mu, theta, eps, scale, s_int, d_int, state)
 
+
+def ot_epilogue(c, nu, mu, theta, eps, scale, s_int, d_int,
+                state: OTState) -> OTResult:
+    """Completion + marginal-repair half of the pipeline, applied to a
+    terminated integer state. The compacting driver runs this once, in
+    bulk, over the full batch of retired states."""
+    theta = jnp.asarray(theta, jnp.float32)
     flow = (state.f_hi + state.f_lo).astype(jnp.float32)
     # Integer completion: leftover free supply -> leftover demand capacity.
     comp = northwest_corner(
@@ -284,7 +382,25 @@ def solve_ot(
     nb, na = c.shape
     if theta is None:
         theta = 4.0 * max(nb, na) / eps
-    res = ot_pipeline(c, nu, mu, theta, eps)
+    threshold = None
+    if not isinstance(nu, jax.core.Tracer) and \
+            not isinstance(theta, jax.core.Tracer):
+        # eager: exact float64 termination threshold (the on-device f32
+        # fallback inside solve_ot_int rounds wrong for some (eps, total))
+        threshold = ot_termination_threshold(np.asarray(nu), theta, eps)
+    else:
+        import warnings
+
+        warnings.warn(
+            "solve_ot traced under jit/vmap: the termination threshold "
+            "falls back to the on-device f32 product, which rounds "
+            "differently from the eager float64 path for rare "
+            "(eps, total_mass) pairs. Prefer eager solve_ot, or "
+            "solve_ot_batched / the compacting driver, which precompute "
+            "exact host thresholds.",
+            stacklevel=2,
+        )
+    res = ot_pipeline(c, nu, mu, theta, eps, threshold=threshold)
     if not isinstance(res.theta, jax.core.Tracer):
         # eager: keep the historical Python-float theta (and avoid forcing
         # a device sync when called under jit/vmap, where this is a tracer)

@@ -50,6 +50,18 @@ def cost_matrix(x, y, metric="sqeuclidean", *, block_m=128, block_n=128,
     )
 
 
+@partial(jax.jit, static_argnames=("metric", "block_m", "block_n", "block_k"))
+def cost_matrix_batched(x, y, metric="sqeuclidean", *, block_m=128,
+                        block_n=128, block_k=32):
+    """(B, m, d) x (B, n, d) -> (B, m, n) in one kernel launch; grid
+    (B, m/BM, n/BN), mirroring slack_propose_batched's layout."""
+    return _cm.cost_matrix_batched(
+        x, y, metric,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=_interpret(),
+    )
+
+
 @partial(jax.jit, static_argnames=("reg", "block_m", "block_n"))
 def sinkhorn_row_update(c, g, log_nu, reg, *, block_m=128, block_n=128):
     return _ss.sinkhorn_row_update(

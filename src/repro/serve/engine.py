@@ -115,15 +115,22 @@ class OTService:
 
     Mirrors ``Engine``: ``submit()`` queues distance requests; ``run_batch()``
     groups them into shape buckets, pads each bucket to a fixed shape, and
-    dispatches every bucket as ONE XLA program through the batched solver
-    subsystem (core/batched.py). Point-set requests (no masses) run the
+    dispatches every bucket through the batched solver subsystem. With
+    ``compact=True`` (default) a bucket is solved by the convergence-
+    compacting driver (core/compaction.py): converged requests retire
+    between k-phase dispatches instead of riding lockstep until the bucket's
+    slowest request finishes (a win on skewed traffic; pass compact=False
+    for tiny/uniform workloads where the per-chunk converged-mask sync
+    outweighs it). Point-set requests (no masses) run the
     assignment solver; requests with (nu, mu) run the general OT solver.
     ``distance()`` stays as the one-shot convenience wrapper.
     """
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
-                 use_pallas: bool = True, buckets=None):
+                 use_pallas: bool = True, buckets=None,
+                 compact: bool = True, chunk: Optional[int] = None):
         from repro.core import batched as B
+        from repro.core import compaction as C
         from repro.core.costs import COSTS, build_cost_matrix
 
         self.eps = eps
@@ -133,8 +140,11 @@ class OTService:
         self.kernel = ("pallas" if use_pallas
                        and jax.default_backend() == "tpu" else "jnp")
         self.buckets = tuple(buckets) if buckets else B.DEFAULT_BUCKETS
+        self.compact = compact
+        self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
         self.queue: List[OTRequest] = []
         self._B = B
+        self._C = C
         self._cost = build_cost_matrix
         self._cost_batched = jax.jit(jax.vmap(COSTS[metric]))
 
@@ -152,12 +162,11 @@ class OTService:
 
     def _batched_cost(self, xs, ys):
         if self.kernel == "pallas":
-            # per-instance Pallas kernel calls (shapes are bucketed, so the
-            # jit cache stays small); batched cost kernel is a ROADMAP item
-            return jnp.stack([
-                self._cost(xs[k], ys[k], self.metric, kernel="pallas")
-                for k in range(xs.shape[0])
-            ])
+            from repro.kernels import ops
+
+            # one kernel launch for the whole bucket: grid (B, m/BM, n/BN),
+            # each batch slice bit-identical to the per-instance kernel
+            return ops.cost_matrix_batched(xs, ys, metric=self.metric)
         return self._cost_batched(xs, ys)
 
     def run_batch(self) -> List[Dict[str, Any]]:
@@ -185,8 +194,12 @@ class OTService:
                 if has_mass:
                     nu = self._B.pad_stack([reqs[i].nu for i in idx], (mb,))
                     mu = self._B.pad_stack([reqs[i].mu for i in idx], (nb,))
-                    r = self._B.solve_ot_batched(c, nu, mu, self.eps,
-                                                 sizes=sizes)
+                    if self.compact:
+                        r, st = self._C.solve_ot_batched_compacting(
+                            c, nu, mu, self.eps, sizes=sizes, k=self.chunk)
+                    else:
+                        r, st = self._B.solve_ot_batched(
+                            c, nu, mu, self.eps, sizes=sizes), None
                     plan, cost, phases = (np.asarray(r.plan),
                                           np.asarray(r.cost),
                                           np.asarray(r.phases))
@@ -201,9 +214,15 @@ class OTService:
                             "bucket": (mb, nb),
                             "latency_s": gdt,
                         }
+                        if st is not None:
+                            results[i]["dispatches"] = st.dispatches
                 else:
-                    r = self._B.solve_assignment_batched(c, self.eps,
-                                                         sizes=sizes)
+                    if self.compact:
+                        r, st = self._C.solve_assignment_batched_compacting(
+                            c, self.eps, sizes=sizes, k=self.chunk)
+                    else:
+                        r, st = self._B.solve_assignment_batched(
+                            c, self.eps, sizes=sizes), None
                     matching, cost, phases, y_b, y_a = (
                         np.asarray(r.matching), np.asarray(r.cost),
                         np.asarray(r.phases), np.asarray(r.y_b),
@@ -223,6 +242,8 @@ class OTService:
                             "bucket": (mb, nb),
                             "latency_s": gdt,
                         }
+                        if st is not None:
+                            results[i]["dispatches"] = st.dispatches
         assert all(r is not None for r in results)
         return results  # submission order
 

@@ -1,0 +1,339 @@
+"""Resumable stepped cores + convergence-compacting batch driver.
+
+Invariants under test:
+  * chunked ``run_phases`` with ANY chunk size k reproduces the one-shot
+    while_loop solve bit for bit (assignment and OT, padded and unpadded);
+  * the compacting driver's per-instance results equal the PR-1 lockstep
+    batched path (and hence unbatched solves) on convergence-skewed batches;
+  * retiring an instance never perturbs a survivor (result hashes are
+    invariant to batch composition);
+  * the OT termination threshold is computed host-side in float64
+    (f32(eps) * total rounds the wrong way for some (eps, total) pairs).
+"""
+import hashlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.batched import solve_assignment_batched, solve_ot_batched, \
+    solve_assignment_ragged, solve_ot_ragged
+from repro.core.compaction import (
+    pow2_at_least,
+    solve_assignment_batched_compacting,
+    solve_ot_batched_compacting,
+)
+from repro.core.costs import build_cost_matrix
+from repro.core.pushrelabel import (
+    _max_phases,
+    assignment_converged,
+    assignment_prologue,
+    init_assignment_state,
+    run_assignment_phases,
+    solve_assignment,
+    solve_assignment_int,
+)
+from repro.core.transport import (
+    init_ot_state,
+    ot_converged,
+    ot_phase_cap,
+    ot_prologue,
+    ot_termination_threshold,
+    run_ot_phases,
+    solve_ot,
+    solve_ot_int,
+)
+
+
+def _points_cost(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(m, 2))
+    y = rng.uniform(size=(n, 2))
+    return np.asarray(build_cost_matrix(x, y, "euclidean"))
+
+
+def _skewed_batch(b, mb, nb, seed, n_slow=2):
+    """Padded batch with a convergence-skewed phase profile: most instances
+    are near-diagonal (few phases), ``n_slow`` have an expensive far
+    cluster (duals must climb ~1/eps steps)."""
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, mb, nb), np.float32)
+    nu = np.zeros((b, mb), np.float32)
+    mu = np.zeros((b, nb), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    insts = []
+    for i in range(b):
+        m = int(rng.integers(mb // 2 + 1, mb + 1))
+        n = int(rng.integers(m, nb + 1))
+        x = rng.uniform(size=(m, 2))
+        if i < n_slow:
+            # adversarial slow tail: half the demands sit across the square
+            y = np.where(np.arange(n)[:, None] % 2 == 0,
+                         x[np.arange(n) % m] * 0.02,
+                         1.0 - 0.02 * rng.uniform(size=(n, 2)))
+        else:
+            y = rng.uniform(size=(n, 2))
+        ci = np.asarray(build_cost_matrix(x, y, "euclidean"),
+                        np.float32)
+        c[i, :m, :n] = ci
+        nu[i, :m] = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu[i, :n] = rng.dirichlet(np.ones(n)).astype(np.float32)
+        sizes[i] = (m, n)
+        insts.append((ci, nu[i, :m].copy(), mu[i, :n].copy()))
+    return c, nu, mu, sizes, insts
+
+
+def _state_equal(a, b):
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --------------------------------------------------------------------------
+# Resumability: chunked == one-shot, bit for bit, for every k
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 3, 7, 1000])
+def test_assignment_chunked_equals_one_shot(k):
+    eps = 0.1
+    c = _points_cost(40, 56, seed=2)
+    cm, c_int, scale, _, _ = assignment_prologue(jnp.asarray(c), eps)
+    ref = solve_assignment_int(c_int, eps)
+
+    m, n = c.shape
+    threshold = int(eps * m)
+    cap = _max_phases(eps, m)
+    state = init_assignment_state(m, n)
+    steps = 0
+    while not bool(assignment_converged(state, threshold, cap)):
+        state = run_assignment_phases(c_int, state, threshold, cap, k)
+        steps += 1
+        assert steps < 1000
+    _state_equal(state, ref)
+    if k == 1:
+        assert steps == int(ref.phases)  # one dispatch per phase
+
+
+@pytest.mark.parametrize("k", [1, 5, 64])
+def test_assignment_chunked_equals_one_shot_padded(k):
+    """Padded instance (m_valid/n_valid masks) through the chunked core."""
+    eps = 0.05
+    mi, ni, mb, nb = 30, 37, 48, 48
+    c = np.zeros((mb, nb), np.float32)
+    c[:mi, :ni] = _points_cost(mi, ni, seed=5)
+    threshold = int(eps * mi)
+    cm, c_int, scale, row_ok, col_ok = assignment_prologue(
+        jnp.asarray(c), eps, jnp.int32(mi), jnp.int32(ni)
+    )
+    ref = solve_assignment_int(c_int, eps, m_valid=jnp.int32(mi),
+                               threshold=jnp.int32(threshold))
+    cap = _max_phases(eps, mb)
+    state = init_assignment_state(mb, nb)
+    while not bool(assignment_converged(state, threshold, cap,
+                                        m_valid=jnp.int32(mi))):
+        state = run_assignment_phases(c_int, state, threshold, cap, k,
+                                      m_valid=jnp.int32(mi))
+    _state_equal(state, ref)
+
+
+@pytest.mark.parametrize("k", [1, 4, 1000])
+def test_ot_chunked_equals_one_shot(k):
+    eps = 0.1
+    rng = np.random.default_rng(7)
+    m, n = 28, 35
+    c = _points_cost(m, n, seed=7)
+    nu = rng.dirichlet(np.ones(m)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(n)).astype(np.float32)
+    theta = 4.0 * max(m, n) / eps
+    c_int, s_int, d_int, scale = ot_prologue(
+        jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), theta, eps
+    )
+    threshold = ot_termination_threshold(nu, theta, eps)
+    cap = ot_phase_cap(eps)
+    max_rounds = int(m + n + 2)
+    ref = solve_ot_int(c_int, s_int, d_int, eps, cap, max_rounds,
+                       threshold=jnp.int32(threshold))
+
+    state = init_ot_state(s_int, d_int)
+    while not bool(ot_converged(state, threshold, cap)):
+        state = run_ot_phases(c_int, state, threshold, cap, k, max_rounds)
+    _state_equal(state, ref)
+
+
+# --------------------------------------------------------------------------
+# Compaction: driver results == lockstep results on skewed batches
+# --------------------------------------------------------------------------
+
+def test_compacting_assignment_matches_lockstep_skewed():
+    eps = 0.1
+    c, _, _, sizes, _ = _skewed_batch(6, 48, 64, seed=11)
+    r0 = solve_assignment_batched(c, eps, sizes=sizes)
+    r1, stats = solve_assignment_batched_compacting(c, eps, sizes=sizes,
+                                                    k=3)
+    np.testing.assert_array_equal(np.asarray(r0.matching),
+                                  np.asarray(r1.matching))
+    np.testing.assert_array_equal(np.asarray(r0.phases),
+                                  np.asarray(r1.phases))
+    np.testing.assert_array_equal(np.asarray(r0.cost), np.asarray(r1.cost))
+    # scaled duals: same integer state, but the standalone epilogue program
+    # may reassociate the f32 (y * eps * scale) product -> 1-ulp tolerance
+    np.testing.assert_allclose(np.asarray(r0.y_b), np.asarray(r1.y_b),
+                               rtol=2e-7, atol=0)
+    assert stats.dispatches >= 2
+    assert stats.occupancy[-1][1] == 0          # everyone terminated
+    # the skew is real: compaction executed fewer phase-slots than lockstep
+    assert stats.phases_needed < stats.lockstep_slot_phases
+
+
+def test_compacting_ot_matches_lockstep_skewed():
+    eps = 0.1
+    c, nu, mu, sizes, _ = _skewed_batch(6, 48, 48, seed=13)
+    r0 = solve_ot_batched(c, nu, mu, eps, sizes=sizes)
+    r1, stats = solve_ot_batched_compacting(c, nu, mu, eps, sizes=sizes,
+                                            k=4)
+    np.testing.assert_array_equal(np.asarray(r0.phases),
+                                  np.asarray(r1.phases))
+    np.testing.assert_array_equal(np.asarray(r0.plan), np.asarray(r1.plan))
+    np.testing.assert_array_equal(np.asarray(r0.cost), np.asarray(r1.cost))
+    np.testing.assert_array_equal(np.asarray(r0.state.f_hi),
+                                  np.asarray(r1.state.f_hi))
+    assert stats.occupancy[-1][1] == 0
+
+
+@pytest.mark.parametrize("k", [2, 8])
+def test_chunk_size_invariance_of_driver(k):
+    """Any k yields the same results — only the dispatch count changes."""
+    eps = 0.05
+    c, nu, mu, sizes, _ = _skewed_batch(5, 32, 32, seed=17)
+    r1, s1 = solve_ot_batched_compacting(c, nu, mu, eps, sizes=sizes, k=k)
+    r2, s2 = solve_ot_batched_compacting(c, nu, mu, eps, sizes=sizes, k=16)
+    np.testing.assert_array_equal(np.asarray(r1.plan), np.asarray(r2.plan))
+    np.testing.assert_array_equal(np.asarray(r1.phases),
+                                  np.asarray(r2.phases))
+    assert s1.dispatches >= s2.dispatches
+
+
+def test_ragged_compact_matches_lockstep():
+    rng = np.random.default_rng(19)
+    insts = []
+    for _ in range(5):
+        m = int(rng.integers(12, 60))
+        n = int(rng.integers(m, 60))
+        c = _points_cost(m, n, seed=m + n)
+        nu = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu = rng.dirichlet(np.ones(n)).astype(np.float32)
+        insts.append((c, nu, mu))
+    r_lock = solve_ot_ragged(insts, 0.1, compact=False)
+    r_comp = solve_ot_ragged(insts, 0.1, compact=True)
+    for a, b in zip(r_lock, r_comp):
+        np.testing.assert_array_equal(a["plan"], b["plan"])
+        assert a["cost"] == b["cost"]
+        assert a["phases"] == b["phases"]
+        assert "dispatches" in b and "dispatches" not in a
+
+    cs = [c for c, _, _ in insts]
+    a_lock = solve_assignment_ragged(cs, 0.1, compact=False)
+    a_comp = solve_assignment_ragged(cs, 0.1)
+    for a, b in zip(a_lock, a_comp):
+        np.testing.assert_array_equal(a["matching"], b["matching"])
+        assert a["cost"] == b["cost"]
+
+
+def test_mixed_eps_compacting_matches_solo():
+    """Per-instance eps (inexpressible in the lockstep path) must equal a
+    solo solve of each instance at its own eps."""
+    eps = np.asarray([0.2, 0.05, 0.1, 0.05])
+    c, nu, mu, sizes, insts = _skewed_batch(4, 40, 40, seed=23, n_slow=1)
+    r, _ = solve_ot_batched_compacting(c, nu, mu, eps, sizes=sizes, k=5)
+    for i, (ci, nui, mui) in enumerate(insts):
+        s = solve_ot(jnp.asarray(ci), jnp.asarray(nui), jnp.asarray(mui),
+                     float(eps[i]))
+        assert int(r.phases[i]) == int(s.phases)
+        m, n = ci.shape
+        np.testing.assert_allclose(np.asarray(r.plan)[i, :m, :n],
+                                   np.asarray(s.plan), atol=1e-6)
+        assert float(r.cost[i]) == pytest.approx(float(s.cost), abs=2e-6)
+
+
+# --------------------------------------------------------------------------
+# Retirement property: survivors' results are composition-invariant
+# --------------------------------------------------------------------------
+
+def _result_hash(matching, y_b, y_a):
+    h = hashlib.sha256()
+    for a in (matching, y_b, y_a):
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("seed", [29, 31, 37])
+def test_retiring_never_perturbs_survivors(seed):
+    """Property: each instance's result hash from a compacting batch equals
+    its hash from (a) a batch with different neighbors and (b) a solo
+    unbatched solve — i.e. retirement/compaction of other instances never
+    leaks into a survivor."""
+    eps = 0.1
+    c, _, _, sizes, insts = _skewed_batch(6, 32, 32, seed=seed)
+    r_full, _ = solve_assignment_batched_compacting(c, eps, sizes=sizes,
+                                                    k=2)
+    # drop the slow tail (indices 0..1): survivors must hash identically
+    keep = np.arange(2, 6)
+    r_sub, _ = solve_assignment_batched_compacting(
+        c[keep], eps, sizes=sizes[keep], k=2
+    )
+    for j, i in enumerate(keep):
+        m, n = sizes[i]
+        h_full = _result_hash(np.asarray(r_full.matching)[i, :m],
+                              np.asarray(r_full.y_b)[i, :m],
+                              np.asarray(r_full.y_a)[i, :n])
+        h_sub = _result_hash(np.asarray(r_sub.matching)[j, :m],
+                             np.asarray(r_sub.y_b)[j, :m],
+                             np.asarray(r_sub.y_a)[j, :n])
+        assert h_full == h_sub
+        # and equals the solo solve of the same instance
+        s = solve_assignment(jnp.asarray(insts[i][0]), eps)
+        np.testing.assert_array_equal(np.asarray(r_full.matching)[i, :m],
+                                      np.asarray(s.matching))
+
+
+# --------------------------------------------------------------------------
+# OT termination threshold (host float64)
+# --------------------------------------------------------------------------
+
+def test_ot_threshold_host_float64():
+    """eps=0.3 guaranteed (-> eps/3 = 0.0999...), total mass 10: the exact
+    threshold is int(0.0999... * 10) = 0, but the old on-device computation
+    f32(eps) * f32(total) = f32(0.1) * 10 = 1.0000000149 -> 1 terminated a
+    full free unit too early. The host float64 threshold must be 0, and
+    batched must agree with unbatched on exactly such an instance."""
+    eps3 = 0.3 / 3.0
+    nu = np.asarray([0.5, 0.5], np.float32)
+    assert ot_termination_threshold(nu, 10.0, eps3) == 0
+    assert int(np.float32(eps3) * np.float32(10.0)) == 1  # the replaced bug
+
+    rng = np.random.default_rng(41)
+    c = rng.uniform(0.2, 1.0, size=(2, 2)).astype(np.float32)
+    mu = np.asarray([0.25, 0.75], np.float32)
+    s = solve_ot(jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), 0.3,
+                 theta=10.0, guaranteed=True)
+    r = solve_ot_batched(c[None], nu[None], mu[None], 0.3, theta=10.0,
+                         guaranteed=True)
+    assert int(r.phases[0]) == int(s.phases)
+    np.testing.assert_array_equal(np.asarray(r.plan)[0],
+                                  np.asarray(s.plan))
+
+
+def test_pow2_descent_padding():
+    """B=5 pads to 8 with born-converged empties; results unaffected."""
+    assert pow2_at_least(5) == 8
+    assert pow2_at_least(8) == 8
+    assert pow2_at_least(1) == 1
+    eps = 0.1
+    c, _, _, sizes, insts = _skewed_batch(5, 24, 24, seed=43, n_slow=1)
+    r, stats = solve_assignment_batched_compacting(c, eps, sizes=sizes, k=2)
+    assert stats.dispatched_batch == 8 and stats.batch == 5
+    assert r.matching.shape[0] == 5
+    for i, (ci, _, _) in enumerate(insts):
+        s = solve_assignment(jnp.asarray(ci), eps)
+        m = ci.shape[0]
+        np.testing.assert_array_equal(np.asarray(r.matching)[i, :m],
+                                      np.asarray(s.matching))

@@ -1,0 +1,284 @@
+"""Mesh-distributed batch dispatch: instances/sec vs device count.
+
+The distributed compacting driver (core/distributed.py) shards the batch
+axis of a convergence-skewed OT/assignment bucket across a 1-D device
+mesh; this bench measures throughput against the single-device compacting
+dispatch (the PR-2 baseline) at matched chunk size, asserting bit-identical
+results along the way. Rows:
+
+  * ot_skewed / assignment_skewed - the headline: one skewed bucket solved
+    at devices = 1 (plain compacting driver), 2, 4, 8 (distributed).
+    Derived fields carry instances/sec, speedup vs the 1-device dispatch,
+    the occupancy (re-bucketing) curve, and the per-device slot-phase
+    accounting.
+  * ot_skewed with a larger chunk k - fewer converged-mask syncs per
+    solve; the distributed path benefits disproportionately (each sync is
+    a cross-mesh gather), at the cost of coarser retirement.
+
+Always runs in a SUBPROCESS with ``--xla_force_host_platform_device_count
+=8`` (the same forced-CPU harness as tests/test_sharded_ot.py), so it
+works from any parent process that already initialized jax on 1 device.
+
+CPU-noise caveats (same as BENCH_batched.json): the forced 8-device mesh
+multiplexes the host's physical cores (2 in CI), so absolute numbers are
+noisy run to run and device-count scaling saturates at the physical core
+count; the speedup floor asserted in CI (tiny mode) is only the
+equality/plumbing check, not a perf gate. The committed BENCH_sharded.json
+records one full run on the 2-core container for future PRs to diff
+against.
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--full|--tiny]
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+RECORDS: list = []
+_META: dict = {}
+
+FORCED_DEVICES = 8
+
+
+# --------------------------------------------------------------------------
+# Outer wrapper: re-exec under a forced multi-device CPU
+# --------------------------------------------------------------------------
+
+def run(full: bool = False, tiny: bool = False):
+    """Spawn the inner benchmark under XLA_FLAGS forcing 8 host devices,
+    stream its CSV output, and collect its records into RECORDS."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        tmp = f.name
+    args = [sys.executable, "-m", "benchmarks.bench_sharded", "--inner",
+            "--json", tmp]
+    if full:
+        args.append("--full")
+    if tiny:
+        args.append("--tiny")
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{FORCED_DEVICES}").strip()
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(args, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"inner bench_sharded failed with {proc.returncode}")
+    with open(tmp) as fh:
+        payload = json.load(fh)
+    os.unlink(tmp)
+    RECORDS.extend(payload["records"])
+    _META.update(payload.get("meta", {}))
+    return RECORDS
+
+
+def write_json(path="BENCH_sharded.json"):
+    payload = {
+        "schema": 1,
+        "bench": "sharded",
+        "meta": _META,
+        "caveats": (
+            "forced multi-device CPU: 8 XLA host devices multiplexed onto "
+            f"{os.cpu_count()} physical cores, so absolute numbers are "
+            "noisy run to run and scaling saturates at the core count; "
+            "results are asserted bit-identical to the single-device "
+            "compacting dispatch inside the bench"
+        ),
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
+
+
+# --------------------------------------------------------------------------
+# Inner benchmark (runs with 8 forced devices)
+# --------------------------------------------------------------------------
+
+def _skewed_batch(b, nb, seed, n_slow):
+    """Convergence-skewed OT batch (mixed sizes, adversarial slow tail),
+    shuffled so slow lanes spread across mesh shards - as real bucketed
+    traffic would arrive."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, nb, nb), np.float32)
+    nu = np.zeros((b, nb), np.float32)
+    mu = np.zeros((b, nb), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i in range(b):
+        m = int(rng.integers(nb // 2 + 1, nb + 1))
+        x = rng.uniform(size=(m, 2))
+        nui = rng.dirichlet(np.ones(m)).astype(np.float32)
+        if i < n_slow:
+            y = rng.uniform(size=(m, 2))
+            mui = rng.dirichlet(np.ones(m)).astype(np.float32)
+        else:
+            perm = rng.permutation(m)
+            y = x[perm] + rng.normal(0.0, 0.003, size=(m, 2))
+            mui = nui[perm]
+        d = x[:, None, :] - y[None, :, :]
+        c[i, :m, :m] = np.sqrt((d * d).sum(-1) + 1e-30)
+        nu[i, :m] = nui
+        mu[i, :m] = mui
+        sizes[i] = (m, m)
+    perm = rng.permutation(b)
+    return c[perm], nu[perm], mu[perm], sizes[perm]
+
+
+def _inner(full: bool, tiny: bool, json_path: str):
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.compaction import (
+        solve_assignment_batched_compacting,
+        solve_ot_batched_compacting,
+    )
+    from repro.core.distributed import (
+        solve_assignment_distributed,
+        solve_ot_distributed,
+    )
+    from repro.launch.mesh import make_batch_mesh
+
+    from .common import emit
+
+    records = []
+    n_dev = len(jax.devices())
+
+    def record(name, seconds, derived="", **extra):
+        emit(name, seconds, derived)
+        records.append({"name": name, "us_per_call": seconds * 1e6,
+                        "derived": derived, **extra})
+
+    def best(fn, repeats):
+        """(min seconds, last (result, stats)) — reuses the final timed
+        run's output instead of paying an extra solve for it."""
+        out = fn()  # warm / compile
+        jax.block_until_ready(out[0].cost)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out[0].cost)
+            ts.append(time.perf_counter() - t0)
+        return min(ts), out
+
+    def row(kind, b, n, eps, k, n_slow, devices_list, repeats=2):
+        c, nu, mu, sizes = _skewed_batch(b, n, seed=b + n, n_slow=n_slow)
+        if kind == "ot":
+            base_fn = lambda: solve_ot_batched_compacting(
+                c, nu, mu, eps, sizes=sizes, k=k)
+        else:
+            base_fn = lambda: solve_assignment_batched_compacting(
+                c, eps, sizes=sizes, k=k)
+        t1, (r_base, _) = best(base_fn, repeats)
+        base_ips = b / t1
+        record(
+            f"sharded/{kind}_skewed/B={b}/n={n}/eps={eps}/k={k}/devices=1",
+            t1 / b, f"inst_per_s={base_ips:.1f};single_device_compacting",
+            instances_per_s=base_ips, devices=1, speedup_vs_1dev=1.0,
+            results_identical=True,
+        )
+        for d in devices_list:
+            mesh = make_batch_mesh(d)
+            if kind == "ot":
+                fn = lambda: solve_ot_distributed(
+                    c, nu, mu, eps, mesh, sizes=sizes, k=k)
+            else:
+                fn = lambda: solve_assignment_distributed(
+                    c, eps, mesh, sizes=sizes, k=k)
+            t, (r, st) = best(fn, repeats)
+            if kind == "ot":
+                ident = (np.array_equal(np.asarray(r_base.plan),
+                                        np.asarray(r.plan))
+                         and np.array_equal(np.asarray(r_base.cost),
+                                            np.asarray(r.cost))
+                         and np.array_equal(np.asarray(r_base.phases),
+                                            np.asarray(r.phases)))
+            else:
+                ident = (np.array_equal(np.asarray(r_base.matching),
+                                        np.asarray(r.matching))
+                         and np.array_equal(np.asarray(r_base.cost),
+                                            np.asarray(r.cost)))
+            assert ident, ("distributed dispatch must reproduce the "
+                           "single-device compacting results exactly")
+            ips = b / t
+            record(
+                f"sharded/{kind}_skewed/B={b}/n={n}/eps={eps}/k={k}"
+                f"/devices={d}",
+                t / b,
+                f"inst_per_s={ips:.1f};speedup_vs_1dev={t1 / t:.2f}x;"
+                f"collapsed_at={st.collapsed_at}",
+                instances_per_s=ips, devices=d,
+                speedup_vs_1dev=t1 / t, results_identical=True,
+                occupancy=[list(o) for o in st.occupancy],
+                devices_per_dispatch=list(st.devices_per_dispatch),
+                slot_phases=st.slot_phases,
+                phases_needed=st.phases_needed,
+                collapsed_at=st.collapsed_at,
+            )
+        return records[-1]
+
+    if tiny:
+        # CI smoke: plumbing + bit-identity across the mesh in seconds
+        row("ot", 8, 32, 0.1, 2, 2, [n_dev], repeats=1)
+        row("assignment", 8, 32, 0.1, 2, 2, [n_dev], repeats=1)
+    else:
+        # headline: device-count scaling on the skewed OT bucket
+        row("ot", 32, 128, 0.1, 8, 8, [2, 4, 8])
+        # larger chunk: fewer cross-mesh syncs, better parallel grain
+        row("ot", 32, 128, 0.1, 16, 8, [8])
+        # tighter accuracy: k=8 is sync-bound on 2 cores (honest row),
+        # k=16 recovers the scaling
+        row("ot", 32, 128, 0.05, 8, 8, [8])
+        row("ot", 32, 128, 0.05, 16, 8, [8])
+        # assignment phases are lighter than OT (no flow matrices), so
+        # the mesh needs bigger instances to amortize dispatch overhead
+        row("assignment", 32, 192, 0.05, 16, 8, [8])
+        if full:
+            row("ot", 64, 128, 0.1, 16, 16, [2, 4, 8])
+            row("ot", 64, 96, 0.05, 8, 16, [8])
+
+    meta = {
+        "backend": jax.default_backend(),
+        "forced_host_devices": n_dev,
+        "physical_cores": os.cpu_count(),
+        "mesh": {"axes": ["data"], "shape": [n_dev],
+                 "builder": "launch.mesh.make_batch_mesh"},
+    }
+    with open(json_path, "w") as f:
+        json.dump({"records": records, "meta": meta}, f, indent=2)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: seconds on a CPU runner")
+    ap.add_argument("--inner", action="store_true",
+                    help="internal: already running under forced devices")
+    ap.add_argument("--json", default="",
+                    help="records output path (inner mode: raw records; "
+                         "outer mode: BENCH_sharded.json payload)")
+    args = ap.parse_args()
+    if args.inner:
+        _inner(args.full, args.tiny, args.json)
+        return
+    print("name,us_per_call,derived")
+    run(full=args.full, tiny=args.tiny)
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

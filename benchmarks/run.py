@@ -12,11 +12,11 @@ def main() -> None:
                     help="paper-scale grids (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: synthetic,mnist,phases,"
-                         "routing,ot,batched")
+                         "routing,ot,batched,sharded")
     args = ap.parse_args()
 
     from . import bench_synthetic, bench_mnist, bench_phases, \
-        bench_routing, bench_ot, bench_batched
+        bench_routing, bench_ot, bench_batched, bench_sharded
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
@@ -25,6 +25,7 @@ def main() -> None:
         "ot": bench_ot.run,                 # Section 4 clustered solver
         "routing": bench_routing.run,       # framework integration
         "batched": bench_batched.run,       # batched serving subsystem
+        "sharded": bench_sharded.run,       # mesh-distributed dispatch
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     print("name,us_per_call,derived")
@@ -38,6 +39,10 @@ def main() -> None:
             # lockstep-waste metric (phases executed vs needed), and the
             # compaction occupancy curve, for future PRs to diff against
             bench_batched.write_json("BENCH_batched.json")
+        if name == "sharded":
+            # instances/sec vs device count + occupancy + mesh topology
+            # (the bench re-execs itself under a forced 8-device CPU)
+            bench_sharded.write_json("BENCH_sharded.json")
 
 
 if __name__ == "__main__":

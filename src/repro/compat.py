@@ -1,0 +1,38 @@
+"""jax API-drift shims, shared by every layer (core, models, launch).
+
+Covers the surface this repo needs across the jax versions it runs on:
+
+  * ``shard_map`` left ``jax.experimental`` (and gained a while_loop
+    replication rule) on newer jax; older releases need the experimental
+    import with ``check_rep=False`` for while_loop-carrying bodies.
+  * ``pvary`` only exists where the varying-axes checker does; older jax
+    accepts the pmax'd outputs without it.
+  * ``Compiled.cost_analysis()`` returns a dict on newer jax, a
+    one-element list of dicts on older releases.
+"""
+from __future__ import annotations
+
+import jax
+
+_raw_shard_map = getattr(jax, "shard_map", None)
+if _raw_shard_map is None:
+    from jax.experimental.shard_map import shard_map as _raw_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _raw_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+else:
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _raw_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
+
+
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

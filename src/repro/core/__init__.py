@@ -14,6 +14,12 @@ from .compaction import (
     solve_assignment_batched_compacting,
     solve_ot_batched_compacting,
 )
+from .distributed import (
+    DistributedStats,
+    choose_placement,
+    solve_assignment_distributed,
+    solve_ot_distributed,
+)
 from .costs import build_cost_matrix
 from .sinkhorn import sinkhorn
 
@@ -24,5 +30,7 @@ __all__ = [
     "solve_ot_batched", "solve_ot_ragged", "BatchedAssignmentResult",
     "CompactionStats", "solve_assignment_batched_compacting",
     "solve_ot_batched_compacting",
+    "DistributedStats", "choose_placement",
+    "solve_assignment_distributed", "solve_ot_distributed",
     "build_cost_matrix", "sinkhorn",
 ]

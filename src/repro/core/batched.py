@@ -258,6 +258,7 @@ def solve_ot_ragged(
     guaranteed: bool = False,
     compact: bool = True,
     chunk: int | None = None,
+    mesh=None,
 ):
     """Solve a ragged list of ``(c, nu, mu)`` OT instances via bucketed
     batched dispatch. Returns per-instance dicts (in input order) with the
@@ -270,7 +271,15 @@ def solve_ot_ragged(
     False`` restores the PR-1 lockstep dispatch (results are identical).
     Tradeoff: compaction wins on convergence-skewed buckets (2-4x on the
     in-repo bench) but its per-chunk converged-mask sync can lose ~20-50%
-    on tiny or convergence-uniform buckets — pass ``compact=False`` there."""
+    on tiny or convergence-uniform buckets — pass ``compact=False`` there.
+
+    ``mesh`` (a 1-D batch mesh, see ``launch.mesh.make_batch_mesh``)
+    dispatches each bucket through the mesh-distributed compacting driver
+    (core/distributed.py) — same results, batch axis sharded across
+    devices. Requires ``compact=True``."""
+    if mesh is not None and not compact:
+        raise ValueError("mesh dispatch requires compact=True (the "
+                         "distributed driver is the compacting driver)")
     shapes = [tuple(np.asarray(c).shape) for c, _, _ in instances]
     eps_arr = np.broadcast_to(np.asarray(eps, np.float64),
                               (len(instances),))
@@ -283,7 +292,15 @@ def solve_ot_ragged(
         nu = pad_stack([instances[i][1] for i in grp.indices], (mb,))
         mu = pad_stack([instances[i][2] for i in grp.indices], (nb,))
         stats = None
-        if compact:
+        if mesh is not None:
+            from .distributed import solve_ot_distributed
+
+            kw = {} if chunk is None else {"k": chunk}
+            r, stats = solve_ot_distributed(
+                c, nu, mu, eps_arr[grp.indices], mesh, sizes=grp.sizes,
+                guaranteed=guaranteed, **kw
+            )
+        elif compact:
             from .compaction import solve_ot_batched_compacting
 
             kw = {} if chunk is None else {"k": chunk}
@@ -312,6 +329,8 @@ def solve_ot_ragged(
             }
             if stats is not None:
                 results[i]["dispatches"] = stats.dispatches
+                if hasattr(stats, "devices"):
+                    results[i]["devices"] = stats.devices
     return results
 
 
@@ -323,10 +342,14 @@ def solve_assignment_ragged(
     guaranteed: bool = False,
     compact: bool = True,
     chunk: int | None = None,
+    mesh=None,
 ):
     """Solve a ragged list of assignment cost matrices via bucketed batched
-    dispatch. Returns per-instance dicts (in input order). ``compact`` as
-    in ``solve_ot_ragged``."""
+    dispatch. Returns per-instance dicts (in input order). ``compact`` and
+    ``mesh`` as in ``solve_ot_ragged``."""
+    if mesh is not None and not compact:
+        raise ValueError("mesh dispatch requires compact=True (the "
+                         "distributed driver is the compacting driver)")
     shapes = [tuple(np.asarray(c).shape) for c in cs]
     eps_arr = np.broadcast_to(np.asarray(eps, np.float64), (len(cs),))
     if not compact and np.unique(eps_arr).size > 1:
@@ -335,7 +358,15 @@ def solve_assignment_ragged(
     for grp in bucket_instances(shapes, buckets):
         c = pad_stack([cs[i] for i in grp.indices], grp.key)
         stats = None
-        if compact:
+        if mesh is not None:
+            from .distributed import solve_assignment_distributed
+
+            kw = {} if chunk is None else {"k": chunk}
+            r, stats = solve_assignment_distributed(
+                c, eps_arr[grp.indices], mesh, sizes=grp.sizes,
+                guaranteed=guaranteed, **kw
+            )
+        elif compact:
             from .compaction import solve_assignment_batched_compacting
 
             kw = {} if chunk is None else {"k": chunk}
@@ -365,4 +396,6 @@ def solve_assignment_ragged(
             }
             if stats is not None:
                 results[i]["dispatches"] = stats.dispatches
+                if hasattr(stats, "devices"):
+                    results[i]["devices"] = stats.devices
     return results

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import List, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,12 @@ class CompactionStats:
     slot_phases: int = 0       # phase-slots actually executed (all lanes)
     phases_needed: int = 0     # sum of per-instance converged phase counts
     lockstep_slot_phases: int = 0  # batch * max(phases): what lockstep burns
+    # final integer ASSIGNMENT state (trimmed to the real batch), stashed
+    # only when the solver is called with ``keep_state=True`` so the
+    # feasibility certificates (core/feasibility.py) can run on the exact
+    # pre-completion state (BatchedAssignmentResult carries no state; the
+    # OT result's ``state`` field already does). Not serialized.
+    final_state: Optional[Any] = None
 
     def as_dict(self) -> dict:
         return {
@@ -119,12 +125,17 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     inputs: integer costs, thresholds, caps) and a solver-state pytree.
 
     ``run_fn(data, state) -> state`` advances every lane by at most
-    ``stats.chunk`` phases (the chunk size is baked into ``run_fn``);
-    ``conv_fn(data, state) -> (B,) bool`` is the per-lane termination
-    predicate. Returns the full-size state pytree with every lane
-    terminated, in original batch order."""
+    ``stats.chunk`` phases (the chunk size is baked into ``run_fn``) and
+    DONATES the state buffers (re-dispatch never holds two copies of the
+    solver state in device memory); ``conv_fn(data, state) -> (B,) bool``
+    is the per-lane termination predicate. Returns the full-size state
+    pytree with every lane terminated, in original batch order."""
     idx = np.arange(stats.dispatched_batch)
-    buf = state
+    # The result buffer is born at the FIRST flush (where ``idx`` is still
+    # the identity, so the flush is just the current state) rather than
+    # aliasing the initial state: run_fn donates its state argument, and a
+    # buffer that aliased the donated initial state would be dead here.
+    buf = None
     cur_d, cur_s = data, state
     ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
     for _ in range(max_chunks):
@@ -139,7 +150,8 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
         live = int((~conv).sum())
         stats.occupancy.append((bb, live))
         if live == 0:
-            buf = _scatter(buf, cur_s, jnp.asarray(idx))
+            buf = cur_s if buf is None else _scatter(buf, cur_s,
+                                                     jnp.asarray(idx))
             break
         nb = pow2_at_least(live)
         if nb <= bb // 2:
@@ -151,7 +163,8 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
             # data-dependent lane count), then gather survivors (padded
             # with one converged lane, which is inert — its predicate is
             # already false) into the next bucket.
-            buf = _scatter(buf, cur_s, jnp.asarray(idx))
+            buf = cur_s if buf is None else _scatter(buf, cur_s,
+                                                     jnp.asarray(idx))
             surv = np.flatnonzero(~conv)
             fill = np.flatnonzero(conv)[:1]
             sel = np.concatenate([surv, np.repeat(fill, nb - live)])
@@ -163,7 +176,8 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     else:
         # phase caps bound every lane, so the loop always breaks; flush
         # defensively if a cap change ever violates that.
-        buf = _scatter(buf, cur_s, jnp.asarray(idx))
+        buf = cur_s if buf is None else _scatter(buf, cur_s,
+                                                 jnp.asarray(idx))
     return buf
 
 
@@ -176,6 +190,88 @@ def _eps_array(eps, b: int, guaranteed: bool) -> np.ndarray:
     return arr
 
 
+class PreparedAssignment(NamedTuple):
+    """Host-side prep shared by the single-device compacting driver and the
+    mesh-distributed driver (core/distributed.py): padded inputs, per-lane
+    host-float64 thresholds/caps, and the dispatched (power-of-two) batch."""
+    c: jnp.ndarray            # (bp, M, N) padded costs
+    eps_arr: np.ndarray       # (bp,) float64 per-lane eps
+    m_valid: np.ndarray       # (bp,) int32
+    n_valid: np.ndarray       # (bp,) int32
+    threshold: np.ndarray     # (bp,) int32
+    phase_cap: np.ndarray     # (bp,) int32
+    bp: int                   # dispatched batch (power of two >= min_batch)
+
+
+def prepare_assignment_batch(c, eps, sizes, guaranteed: bool,
+                             min_batch: int = 1) -> PreparedAssignment:
+    """Masking/threshold/padding half of the compacting assignment solve.
+
+    Pads the batch to ``max(pow2_at_least(B), min_batch)`` with
+    born-converged empty instances (zero valid rows -> free supply 0 <=
+    threshold 0): the distributed driver passes ``min_batch = device
+    count`` so the batch axis starts divisible by the mesh. Thresholds are
+    host float64, identical to the unbatched ``int(eps * m)``."""
+    b, m, n = c.shape
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    eps_arr = _eps_array(eps, b, guaranteed)
+    threshold = np.asarray(
+        [int(e * int(mi)) for e, mi in zip(eps_arr, m_valid)], np.int32
+    )
+    phase_cap = np.asarray([_max_phases(float(e), m) for e in eps_arr],
+                           np.int32)
+    bp = max(pow2_at_least(b), pow2_at_least(min_batch))
+    if bp > b:
+        pad = bp - b
+        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
+        m_valid = np.concatenate([m_valid, np.zeros((pad,), np.int32)])
+        n_valid = np.concatenate([n_valid, np.zeros((pad,), np.int32)])
+        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
+        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
+        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
+    return PreparedAssignment(c, eps_arr, m_valid, n_valid, threshold,
+                              phase_cap, bp)
+
+
+class PreparedOT(NamedTuple):
+    """OT counterpart of :class:`PreparedAssignment`."""
+    c: jnp.ndarray            # (bp, M, N) masked+padded costs
+    nu: jnp.ndarray           # (bp, M)
+    mu: jnp.ndarray           # (bp, N)
+    eps_arr: np.ndarray       # (bp,) float64
+    th: np.ndarray            # (bp,) float32 per-lane theta
+    threshold: np.ndarray     # (bp,) int32 host-float64 termination
+    phase_cap: np.ndarray     # (bp,) int32
+    bp: int
+
+
+def prepare_ot_batch(c, nu, mu, eps, sizes, theta, guaranteed: bool,
+                     min_batch: int = 1) -> PreparedOT:
+    """Masking/threshold/padding half of the compacting OT solve; shares the
+    padding-mask + host-float64 threshold code with the lockstep path
+    (``_mask_ot_inputs``) so the code paths can never diverge. Batch padding
+    is born-converged (zero mass -> free supply 0 <= threshold 0)."""
+    b, m, n = c.shape
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    eps_arr = _eps_array(eps, b, guaranteed)
+    th = _theta_array(m_valid, n_valid, eps_arr, theta)
+    phase_cap = np.asarray([ot_phase_cap(float(e)) for e in eps_arr],
+                           np.int32)
+    c, nu, mu, threshold = _mask_ot_inputs(c, nu, mu, m_valid, n_valid,
+                                           th, eps_arr)
+    bp = max(pow2_at_least(b), pow2_at_least(min_batch))
+    if bp > b:
+        pad = bp - b
+        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
+        nu = jnp.concatenate([nu, jnp.zeros((pad, m), jnp.float32)])
+        mu = jnp.concatenate([mu, jnp.zeros((pad, n), jnp.float32)])
+        th = np.concatenate([th, np.ones((pad,), np.float32)])
+        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
+        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
+        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
+    return PreparedOT(c, nu, mu, eps_arr, th, threshold, phase_cap, bp)
+
+
 # --------------------------------------------------------------------------
 # Assignment
 # --------------------------------------------------------------------------
@@ -185,7 +281,7 @@ def _assign_prologue_b(c, eps, m_valid, n_valid):
     return jax.vmap(assignment_prologue)(c, eps, m_valid, n_valid)
 
 
-@partial(jax.jit, static_argnames=("k",))
+@partial(jax.jit, static_argnames=("k",), donate_argnums=(1,))
 def _assign_chunk(data, state, k: int):
     return jax.vmap(
         lambda d, s: run_assignment_phases(
@@ -217,6 +313,7 @@ def solve_assignment_batched_compacting(
     sizes=None,
     k: int = DEFAULT_CHUNK,
     guaranteed: bool = False,
+    keep_state: bool = False,
 ):
     """Compacting counterpart of ``solve_assignment_batched``.
 
@@ -225,6 +322,9 @@ def solve_assignment_batched_compacting(
       eps: scalar, or (B,) per-instance array (mixed-accuracy batch — the
         lockstep path cannot express this).
       k: phases per dispatch; any value yields identical results.
+      keep_state: stash the final pre-completion integer state on the
+        returned stats (``final_state``) for feasibility certificates;
+        off by default so serving paths don't retain an extra state copy.
 
     Returns ``(BatchedAssignmentResult, CompactionStats)``; every result
     leaf is bit-identical per instance to the lockstep path (and to the
@@ -244,30 +344,15 @@ def solve_assignment_batched_compacting(
             matched_before_completion=jnp.zeros((0,), jnp.int32),
         )
         return out, CompactionStats(batch=0, dispatched_batch=0, chunk=k)
-    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
-    eps_arr = _eps_array(eps, b, guaranteed)
-    threshold = np.asarray(
-        [int(e * int(mi)) for e, mi in zip(eps_arr, m_valid)], np.int32
-    )
-    phase_cap = np.asarray([_max_phases(float(e), m) for e in eps_arr],
-                           np.int32)
-
-    # Pad the batch to a power of two with born-converged empty instances
-    # (zero valid rows -> free supply 0 <= threshold 0), so the descent
-    # B -> B/2 -> ... visits only power-of-two program shapes.
-    bp = pow2_at_least(b)
-    if bp > b:
-        pad = bp - b
-        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
-        m_valid = np.concatenate([m_valid, np.zeros((pad,), np.int32)])
-        n_valid = np.concatenate([n_valid, np.zeros((pad,), np.int32)])
-        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
-        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
-        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
+    # Pad the batch to a power of two with born-converged empty instances,
+    # so the descent B -> B/2 -> ... visits only power-of-two shapes.
+    p = prepare_assignment_batch(c, eps, sizes, guaranteed)
+    c, eps_arr, bp = p.c, p.eps_arr, p.bp
+    threshold, phase_cap = p.threshold, p.phase_cap
 
     eps_j = jnp.asarray(eps_arr, jnp.float32)
-    mv_j = jnp.asarray(m_valid)
-    nv_j = jnp.asarray(n_valid)
+    mv_j = jnp.asarray(p.m_valid)
+    nv_j = jnp.asarray(p.n_valid)
     cm, c_int, scale, row_ok, col_ok = _assign_prologue_b(c, eps_j, mv_j,
                                                           nv_j)
     data = {
@@ -288,6 +373,8 @@ def solve_assignment_batched_compacting(
     phases = np.asarray(final.phases[:b], np.int64)
     stats.phases_needed = int(phases.sum())
     stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    if keep_state:
+        stats.final_state = jax.tree_util.tree_map(lambda a: a[:b], final)
     out = BatchedAssignmentResult(
         matching=r.matching[:b],
         cost=r.cost[:b],
@@ -309,7 +396,7 @@ def _ot_prologue_b(c, nu, mu, theta, eps):
     return jax.vmap(ot_prologue)(c, nu, mu, theta, eps)
 
 
-@partial(jax.jit, static_argnames=("k", "max_rounds"))
+@partial(jax.jit, static_argnames=("k", "max_rounds"), donate_argnums=(1,))
 def _ot_chunk(data, state, k: int, max_rounds: int):
     return jax.vmap(
         lambda d, s: run_ot_phases(d["c_int"], s, d["threshold"],
@@ -367,28 +454,12 @@ def solve_ot_batched_compacting(
             theta=zf(0), s_int=zi(0, m), d_int=zi(0, n),
         )
         return out, CompactionStats(batch=0, dispatched_batch=0, chunk=k)
-    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
-    eps_arr = _eps_array(eps, b, guaranteed)
-    th = _theta_array(m_valid, n_valid, eps_arr, theta)
-    phase_cap = np.asarray([ot_phase_cap(float(e)) for e in eps_arr],
-                           np.int32)
-    # padding masks + host-float64 thresholds, shared with the lockstep
-    # path so the two can never diverge
-    c, nu, mu, threshold = _mask_ot_inputs(c, nu, mu, m_valid, n_valid,
-                                           th, eps_arr)
-
-    # Power-of-two batch padding with born-converged empty instances
-    # (zero mass -> free supply 0 <= threshold 0).
-    bp = pow2_at_least(b)
-    if bp > b:
-        pad = bp - b
-        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
-        nu = jnp.concatenate([nu, jnp.zeros((pad, m), jnp.float32)])
-        mu = jnp.concatenate([mu, jnp.zeros((pad, n), jnp.float32)])
-        th = np.concatenate([th, np.ones((pad,), np.float32)])
-        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
-        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
-        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
+    # Padding masks + host-float64 thresholds shared with the lockstep
+    # path (so the two can never diverge), power-of-two batch padding with
+    # born-converged empty instances.
+    p = prepare_ot_batch(c, nu, mu, eps, sizes, theta, guaranteed)
+    c, nu, mu, eps_arr, bp = p.c, p.nu, p.mu, p.eps_arr, p.bp
+    th, threshold, phase_cap = p.th, p.threshold, p.phase_cap
 
     eps_j = jnp.asarray(eps_arr, jnp.float32)
     th_j = jnp.asarray(th)

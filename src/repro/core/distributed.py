@@ -1,0 +1,686 @@
+"""Mesh-distributed convergence-compacting batch dispatch.
+
+The paper's bound is *parallel* time O(log n / eps^2); PR 1/2 exploited it
+within one device (vmapped batches, compacting phase dispatch) while
+core/sharded.py exploited it across devices for ONE instance (row/col
+matrix sharding). This module unifies the two: a fleet of instances is
+sharded along the BATCH axis of a 1-D device mesh, each k-phase dispatch
+runs the resumable stepped cores (``init_* / run_*_phases / *_converged``)
+under ``shard_map`` with every operand placed ``NamedSharding(P(batch_
+axis))``, and the compacting driver retires converged instances across the
+global batch between dispatches. Each device runs its own vmapped phase
+loop over its local lanes — no cross-device traffic inside a dispatch, so
+per-device lockstep waste is bounded by the LOCAL max phase count, not the
+global one.
+
+Device-put / re-bucketing policy (the distributed analogue of the
+power-of-two bucket descent in core/compaction.py):
+
+  * the dispatched batch starts at ``max(pow2_at_least(B), D)`` where
+    ``D`` is the (power-of-two) device count along the batch axis, so the
+    batch axis is always divisible by the mesh;
+  * between dispatches the (B,) converged mask is fetched with one global
+    gather; when occupancy has halved, ALL lanes are flushed into the
+    full-size sharded result buffer and the survivors are gathered and
+    EXPLICITLY ``device_put`` onto the next power-of-two bucket's
+    ``NamedSharding(P(batch_axis))`` — re-bucketing is a host-driven
+    re-shard, never an implicit layout change;
+  * once the next bucket would drop below the device count
+    (``pow2_at_least(live) < D``), the surviving lanes are collapsed onto
+    a single device (replicated single-device dispatch) and the remaining
+    descent continues exactly as the single-device compacting driver —
+    a 2-lane tail is latency-bound, not throughput-bound, and spreading
+    it over the mesh would only add dispatch overhead;
+  * batches smaller than the mesh floor to begin with skip the mesh
+    entirely and run the single-device driver.
+
+A placement policy (``choose_placement``) picks per bucket between this
+batch-axis sharding (many small instances) and the row/col MATRIX sharding
+of core/sharded.py (few large instances, where batch sharding would leave
+most of the mesh idle): ``solve_assignment_distributed`` /
+``solve_ot_distributed`` are the unified entry points over both.
+
+Under batch placement, per-lane results are BIT-IDENTICAL to the
+single-device compacting driver (and hence to lockstep batched and
+unbatched solves): shard_map lanes never interact, the proposal hash keys
+depend only on the within-instance (row, col, phase), and
+retirement/re-sharding of a neighbor cannot perturb a survivor. ``eps``
+may be a per-instance (B,) array, as in the compacting driver. Under
+matrix placement each instance solves at its own mesh-divisible padded
+shape, so the INTEGER state (matching, duals, flows, phase counts) is
+bit-identical but the float epilogue (plan/cost sums) may differ from the
+batch-placement value by reassociation ulps (~1e-9 relative) — the same
+caveat as any shape change of an XLA float reduction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache, partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .batched import BatchedAssignmentResult, _sizes_arrays
+from .compaction import (
+    DEFAULT_CHUNK,
+    CompactionStats,
+    _assign_chunk,
+    _assign_conv,
+    _eps_array,
+    _gather,
+    _ot_chunk,
+    _ot_conv,
+    pow2_at_least,
+    prepare_assignment_batch,
+    prepare_ot_batch,
+)
+from .pushrelabel import (
+    assignment_converged,
+    assignment_epilogue,
+    assignment_prologue,
+    init_assignment_state,
+    run_assignment_phases,
+)
+from ..compat import shard_map as _shard_map
+from .sharded import solve_assignment_sharded, solve_ot_sharded
+from .transport import (
+    init_ot_state,
+    ot_converged,
+    ot_epilogue,
+    ot_prologue,
+    run_ot_phases,
+)
+
+
+@dataclass
+class DistributedStats(CompactionStats):
+    """CompactionStats plus mesh/placement accounting.
+
+    ``slot_phases`` counts PER-DEVICE lockstep slots (each device's local
+    vmapped loop runs its local lanes for the local max phase delta), so
+    it is directly comparable with the single-device driver's number —
+    the difference is the waste sharding itself removes."""
+    devices: int = 1
+    batch_axis: str = "data"
+    placement: str = "batch"
+    collapsed_at: Optional[int] = None      # bucket size at 1-device collapse
+    devices_per_dispatch: List[int] = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        d = super().as_dict()
+        d.update({
+            "devices": self.devices,
+            "batch_axis": self.batch_axis,
+            "placement": self.placement,
+            "collapsed_at": self.collapsed_at,
+            "devices_per_dispatch": list(self.devices_per_dispatch),
+        })
+        return d
+
+
+def choose_placement(b: int, m: int, n: int, n_devices: int,
+                     *, matrix_min_size: int = 128) -> str:
+    """Placement policy for one bucket: ``"batch"`` (shard the batch axis)
+    vs ``"matrix"`` (row/col-shard each cost matrix, core/sharded.py).
+
+    Batch sharding wins whenever there are enough instances to occupy the
+    mesh (b >= devices) or the instances are too small for per-matrix
+    collectives to pay off; matrix sharding wins for a few large
+    instances, where batch sharding would leave most devices idle."""
+    if n_devices <= 1 or b >= n_devices:
+        return "batch"
+    if min(m, n) >= matrix_min_size:
+        return "matrix"
+    return "batch"
+
+
+def _require_pow2(d: int) -> None:
+    if d & (d - 1):
+        raise ValueError(
+            f"batch-axis device count must be a power of two (got {d}); "
+            "build the mesh with launch.mesh.make_batch_mesh"
+        )
+
+
+@lru_cache(maxsize=None)
+def _matrix_mesh(mesh: Mesh) -> Tuple[Mesh, str, str]:
+    """(mesh, row_axis, col_axis) for matrix placement: reuse a 2-D mesh's
+    leading axes, or fold a 1-D batch mesh into the squarest (r, c) grid."""
+    if len(mesh.axis_names) >= 2:
+        return mesh, mesh.axis_names[0], mesh.axis_names[1]
+    from ..launch.mesh import _make_mesh
+
+    devs = list(mesh.devices.flat)
+    d = len(devs)
+    r = 1
+    while r * 2 * r * 2 <= d:
+        r *= 2
+    return _make_mesh((r, d // r), ("data", "model"), devs), "data", "model"
+
+
+# --------------------------------------------------------------------------
+# shard_map-wrapped stepped cores (one cache entry per (mesh, axis, k))
+# --------------------------------------------------------------------------
+
+def _wrap(mesh: Mesh, axis: str, fn, donate=()):
+    spec = P(axis)
+    return jax.jit(
+        _shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec),
+        donate_argnums=donate,
+    )
+
+
+@lru_cache(maxsize=None)
+def _assign_fns(mesh: Mesh, axis: str, k: int):
+    def prologue(c, eps, mv, nv):
+        return jax.vmap(assignment_prologue)(c, eps, mv, nv)
+
+    def chunk(data, state):
+        return jax.vmap(
+            lambda d, s: run_assignment_phases(
+                d["c_int"], s, d["threshold"], d["phase_cap"], k,
+                m_valid=d["m_valid"],
+            )
+        )(data, state)
+
+    def conv(data, state):
+        return jax.vmap(
+            lambda d, s: assignment_converged(
+                s, d["threshold"], d["phase_cap"], m_valid=d["m_valid"]
+            )
+        )(data, state)
+
+    def epilogue(cm, scale, state, eps, row_ok, col_ok):
+        return jax.vmap(assignment_epilogue)(cm, scale, state, eps,
+                                             row_ok, col_ok)
+
+    return (_wrap(mesh, axis, prologue), _wrap(mesh, axis, chunk, (1,)),
+            _wrap(mesh, axis, conv), _wrap(mesh, axis, epilogue))
+
+
+@lru_cache(maxsize=None)
+def _assign_init_fn(mesh: Mesh, axis: str, m: int, n: int):
+    return jax.jit(jax.vmap(lambda _: init_assignment_state(m, n)),
+                   out_shardings=NamedSharding(mesh, P(axis)))
+
+
+@lru_cache(maxsize=None)
+def _ot_fns(mesh: Mesh, axis: str, k: int, max_rounds: int):
+    def prologue(c, nu, mu, th, eps):
+        return jax.vmap(ot_prologue)(c, nu, mu, th, eps)
+
+    def chunk(data, state):
+        return jax.vmap(
+            lambda d, s: run_ot_phases(d["c_int"], s, d["threshold"],
+                                       d["phase_cap"], k, max_rounds)
+        )(data, state)
+
+    def conv(data, state):
+        return jax.vmap(
+            lambda d, s: ot_converged(s, d["threshold"], d["phase_cap"])
+        )(data, state)
+
+    def epilogue(c, nu, mu, th, eps, scale, s_int, d_int, state):
+        return jax.vmap(ot_epilogue)(c, nu, mu, th, eps, scale, s_int,
+                                     d_int, state)
+
+    return (_wrap(mesh, axis, prologue), _wrap(mesh, axis, chunk, (1,)),
+            _wrap(mesh, axis, conv), _wrap(mesh, axis, epilogue))
+
+
+@lru_cache(maxsize=None)
+def _ot_init_fn(mesh: Mesh, axis: str):
+    return jax.jit(jax.vmap(init_ot_state),
+                   out_shardings=NamedSharding(mesh, P(axis)))
+
+
+@lru_cache(maxsize=None)
+def _scatter_to(sh):
+    """Scatter ``tree`` into ``buf`` at rows ``idx`` with the result pinned
+    to ``sh`` (the full-size buffer keeps its batch sharding even when the
+    incoming lanes live on a single collapsed device)."""
+    return jax.jit(
+        lambda buf, tree, idx: jax.tree_util.tree_map(
+            lambda b, a: b.at[idx].set(a), buf, tree
+        ),
+        out_shardings=sh,
+    )
+
+
+def _put(tree, target):
+    return jax.tree_util.tree_map(lambda a: jax.device_put(a, target), tree)
+
+
+# --------------------------------------------------------------------------
+# The distributed compacting drive
+# --------------------------------------------------------------------------
+
+def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
+                       max_chunks: int, stats: DistributedStats,
+                       mesh: Mesh, axis: str):
+    """Mesh counterpart of compaction._drive. ``data``/``state`` arrive
+    device_put onto ``NamedSharding(mesh, P(axis))``; ``run_s``/``conv_s``
+    are the shard_map'ed chunk/converged dispatches and ``run_1``/``conv_1``
+    the single-device ones used after the collapse. Chunk dispatches donate
+    the state buffers (one copy of solver state per bucket, not two)."""
+    d0 = int(mesh.shape[axis])
+    sh = NamedSharding(mesh, P(axis))
+    sh_rep = NamedSharding(mesh, P())
+    dev0 = next(iter(mesh.devices.flat))
+    idx = np.arange(stats.dispatched_batch)
+    buf = None          # born at the first flush (state is donated; see
+                        # compaction._drive for the aliasing argument)
+    cur_d, cur_s = data, state
+    sharded = d0 > 1
+
+    def flush(buf, tree, idx, sharded):
+        if buf is None:
+            # first flush: idx is still the identity, buf IS the state
+            return tree
+        if not sharded:
+            # collapsed lanes live on one device; replicate them onto the
+            # mesh so the scatter into the still-sharded buffer is one
+            # mesh-wide program
+            tree = _put(tree, sh_rep)
+        return _scatter_to(sh)(buf, tree, jnp.asarray(idx))
+
+    ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
+    for _ in range(max_chunks):
+        cur_s = (run_s if sharded else run_1)(cur_d, cur_s)
+        stats.dispatches += 1
+        # global converged-mask gather: ONE (B,) device->host sync per chunk
+        conv = np.asarray((conv_s if sharded else conv_1)(cur_d, cur_s))
+        ph = np.asarray(cur_s.phases, np.int64)
+        bb = int(conv.shape[0])
+        d_now = d0 if sharded else 1
+        stats.devices_per_dispatch.append(d_now)
+        # per-device lockstep accounting: each device's vmapped while_loop
+        # runs its local lanes for the LOCAL max phase delta
+        per_dev = (ph - ph_prev).reshape(d_now, bb // d_now)
+        stats.slot_phases += int(
+            (per_dev.max(axis=1) * (bb // d_now)).sum()
+        )
+        ph_prev = ph
+        live = int((~conv).sum())
+        stats.occupancy.append((bb, live))
+        if live == 0:
+            buf = flush(buf, cur_s, idx, sharded)
+            break
+        nb = pow2_at_least(live)
+        if nb <= bb // 2:
+            # flush ALL lanes (fixed-length scatter; see compaction._drive),
+            # then gather survivors + one inert converged filler lane and
+            # re-bucket under the explicit device-put policy.
+            buf = flush(buf, cur_s, idx, sharded)
+            surv = np.flatnonzero(~conv)
+            fill = np.flatnonzero(conv)[:1]
+            sel = np.concatenate([surv, np.repeat(fill, nb - live)])
+            sel_j = jnp.asarray(sel)
+            cur_d = _gather(cur_d, sel_j)
+            cur_s = _gather(cur_s, sel_j)
+            if sharded and nb < d0:
+                # below the mesh floor: replicated single-device dispatch
+                cur_d = _put(cur_d, dev0)
+                cur_s = _put(cur_s, dev0)
+                sharded = False
+                stats.collapsed_at = nb
+            elif sharded:
+                # explicit re-shard of the shrunken bucket across the mesh
+                cur_d = _put(cur_d, sh)
+                cur_s = _put(cur_s, sh)
+            idx = idx[sel]
+            ph_prev = ph[sel]
+    else:
+        buf = flush(buf, cur_s, idx, sharded)
+    return buf
+
+
+# --------------------------------------------------------------------------
+# Unified entry points
+# --------------------------------------------------------------------------
+
+def _resolve_mesh(mesh, batch_axis):
+    if mesh is None:
+        from ..launch.mesh import make_batch_mesh
+
+        mesh = make_batch_mesh(axis=batch_axis)
+    d = int(mesh.shape[batch_axis])
+    _require_pow2(d)
+    return mesh, d
+
+
+def solve_assignment_distributed(
+    c: jnp.ndarray,
+    eps,
+    mesh: Mesh | None = None,
+    *,
+    sizes=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+    batch_axis: str = "data",
+    placement: str = "auto",
+    keep_state: bool = False,
+):
+    """Mesh-distributed counterpart of
+    ``solve_assignment_batched_compacting`` — same contract ((B, M, N)
+    padded costs, scalar or (B,) eps), same bit-identical per-instance
+    results, with the batch axis sharded across ``mesh`` (built by
+    ``launch.mesh.make_batch_mesh`` when None). ``placement`` is "auto"
+    (``choose_placement``), "batch", or "matrix". ``keep_state`` stashes
+    the pre-completion integer state on the stats for feasibility
+    certificates (batch placement only — the matrix path's epilogue
+    consumes the state, so the combination raises).
+
+    Returns ``(BatchedAssignmentResult, DistributedStats)``."""
+    c = jnp.asarray(c, jnp.float32)
+    if c.ndim != 3:
+        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+    b, m, n = c.shape
+    mesh, d = _resolve_mesh(mesh, batch_axis)
+    mode = (choose_placement(b, m, n, d) if placement == "auto"
+            else placement)
+    if mode == "matrix" and b > 0:
+        if keep_state:
+            # the matrix path discards the per-instance integer state
+            # (solve_assignment_sharded's epilogue consumes it); fail
+            # loudly rather than hand back final_state=None
+            raise ValueError("keep_state=True requires batch placement "
+                             "(pass placement='batch')")
+        return _solve_assignment_matrix(c, eps, mesh, sizes, guaranteed,
+                                        k, batch_axis)
+    if b == 0 or pow2_at_least(b) < d:
+        # below the mesh floor from the start: single-device dispatch
+        from .compaction import solve_assignment_batched_compacting
+
+        out, cst = solve_assignment_batched_compacting(
+            c, eps, sizes=sizes, k=k, guaranteed=guaranteed,
+            keep_state=keep_state)
+        stats = _wrap_stats(cst, d, batch_axis, collapsed_at=cst.
+                            dispatched_batch or None)
+        return out, stats
+
+    p = prepare_assignment_batch(c, eps, sizes, guaranteed, min_batch=d)
+    sh = NamedSharding(mesh, P(batch_axis))
+    prologue_s, chunk_s, conv_s, epilogue_s = _assign_fns(mesh, batch_axis,
+                                                          k)
+    eps_j = jax.device_put(jnp.asarray(p.eps_arr, jnp.float32), sh)
+    mv_j = jax.device_put(jnp.asarray(p.m_valid), sh)
+    nv_j = jax.device_put(jnp.asarray(p.n_valid), sh)
+    c_s = jax.device_put(p.c, sh)
+    cm, c_int, scale, row_ok, col_ok = prologue_s(c_s, eps_j, mv_j, nv_j)
+    data = {
+        "c_int": c_int,
+        "threshold": jax.device_put(jnp.asarray(p.threshold), sh),
+        "phase_cap": jax.device_put(jnp.asarray(p.phase_cap), sh),
+        "m_valid": mv_j,
+    }
+    state0 = _assign_init_fn(mesh, batch_axis, m, n)(
+        jax.device_put(jnp.zeros((p.bp,), jnp.float32), sh)
+    )
+    stats = DistributedStats(batch=b, dispatched_batch=p.bp, chunk=k,
+                             devices=d, batch_axis=batch_axis,
+                             placement="batch")
+    max_chunks = -(-int(p.phase_cap.max(initial=1)) // max(k, 1)) + 2
+    final = _drive_distributed(
+        data, state0, chunk_s, conv_s,
+        partial(_assign_chunk, k=k), _assign_conv,
+        max_chunks, stats, mesh, batch_axis,
+    )
+    r = epilogue_s(cm, scale, final, eps_j, row_ok, col_ok)
+
+    phases = np.asarray(final.phases[:b], np.int64)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    if keep_state:
+        stats.final_state = jax.tree_util.tree_map(lambda a: a[:b], final)
+    out = BatchedAssignmentResult(
+        matching=r.matching[:b],
+        cost=r.cost[:b],
+        y_b=r.y_b[:b],
+        y_a=r.y_a[:b],
+        phases=r.phases[:b],
+        rounds=r.rounds[:b],
+        matched_before_completion=r.matched_before_completion[:b],
+    )
+    return out, stats
+
+
+def solve_ot_distributed(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps,
+    mesh: Mesh | None = None,
+    *,
+    sizes=None,
+    theta=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+    batch_axis: str = "data",
+    placement: str = "auto",
+):
+    """Mesh-distributed counterpart of ``solve_ot_batched_compacting``;
+    same contract and bit-identical per-instance results. Returns
+    ``(OTResult with leading batch axes, DistributedStats)``."""
+    c = jnp.asarray(c, jnp.float32)
+    nu = jnp.asarray(nu, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    if c.ndim != 3:
+        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+    b, m, n = c.shape
+    mesh, d = _resolve_mesh(mesh, batch_axis)
+    mode = (choose_placement(b, m, n, d) if placement == "auto"
+            else placement)
+    if mode == "matrix" and b > 0:
+        return _solve_ot_matrix(c, nu, mu, eps, mesh, sizes, theta,
+                                guaranteed, k, batch_axis)
+    if b == 0 or pow2_at_least(b) < d:
+        from .compaction import solve_ot_batched_compacting
+
+        out, cst = solve_ot_batched_compacting(
+            c, nu, mu, eps, sizes=sizes, theta=theta, k=k,
+            guaranteed=guaranteed)
+        stats = _wrap_stats(cst, d, batch_axis, collapsed_at=cst.
+                            dispatched_batch or None)
+        return out, stats
+
+    p = prepare_ot_batch(c, nu, mu, eps, sizes, theta, guaranteed,
+                         min_batch=d)
+    sh = NamedSharding(mesh, P(batch_axis))
+    max_rounds = int(m + n + 2)
+    prologue_s, chunk_s, conv_s, epilogue_s = _ot_fns(mesh, batch_axis, k,
+                                                      max_rounds)
+    eps_j = jax.device_put(jnp.asarray(p.eps_arr, jnp.float32), sh)
+    th_j = jax.device_put(jnp.asarray(p.th), sh)
+    c_s = jax.device_put(p.c, sh)
+    nu_s = jax.device_put(p.nu, sh)
+    mu_s = jax.device_put(p.mu, sh)
+    c_int, s_int, d_int, scale = prologue_s(c_s, nu_s, mu_s, th_j, eps_j)
+    data = {
+        "c_int": c_int,
+        "threshold": jax.device_put(jnp.asarray(p.threshold), sh),
+        "phase_cap": jax.device_put(jnp.asarray(p.phase_cap), sh),
+    }
+    state0 = _ot_init_fn(mesh, batch_axis)(s_int, d_int)
+    stats = DistributedStats(batch=b, dispatched_batch=p.bp, chunk=k,
+                             devices=d, batch_axis=batch_axis,
+                             placement="batch")
+    max_chunks = -(-int(p.phase_cap.max(initial=1)) // max(k, 1)) + 2
+    final = _drive_distributed(
+        data, state0, chunk_s, conv_s,
+        partial(_ot_chunk, k=k, max_rounds=max_rounds), _ot_conv,
+        max_chunks, stats, mesh, batch_axis,
+    )
+    r = epilogue_s(c_s, nu_s, mu_s, th_j, eps_j, scale, s_int, d_int,
+                   final)
+
+    phases = np.asarray(final.phases[:b], np.int64)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    out = jax.tree_util.tree_map(lambda a: a[:b], r)
+    return out, stats
+
+
+def _wrap_stats(cst: CompactionStats, devices: int, batch_axis: str,
+                collapsed_at=None) -> DistributedStats:
+    """Lift a single-device CompactionStats into DistributedStats (used
+    when the whole solve ran below the mesh floor)."""
+    st = DistributedStats(
+        batch=cst.batch, dispatched_batch=cst.dispatched_batch,
+        chunk=cst.chunk, dispatches=cst.dispatches,
+        occupancy=cst.occupancy, slot_phases=cst.slot_phases,
+        phases_needed=cst.phases_needed,
+        lockstep_slot_phases=cst.lockstep_slot_phases,
+        final_state=cst.final_state,
+        devices=devices, batch_axis=batch_axis, placement="batch",
+        collapsed_at=collapsed_at,
+        devices_per_dispatch=[1] * cst.dispatches,
+    )
+    return st
+
+
+# --------------------------------------------------------------------------
+# Matrix placement: few large instances, row/col sharding per instance
+# --------------------------------------------------------------------------
+
+def _solve_assignment_matrix(c, eps, mesh, sizes, guaranteed, k,
+                             batch_axis):
+    b, m, n = c.shape
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    eps_arr = _eps_array(eps, b, guaranteed)
+    mesh2, row_axis, col_axis = _matrix_mesh(mesh)
+    matching = np.full((b, m), -1, np.int32)
+    cost = np.zeros((b,), np.float32)
+    y_b = np.zeros((b, m), np.float32)
+    y_a = np.zeros((b, n), np.float32)
+    phases = np.zeros((b,), np.int32)
+    rounds = np.zeros((b,), np.int32)
+    mbc = np.zeros((b,), np.int32)
+    stats = DistributedStats(batch=b, dispatched_batch=b, chunk=k,
+                             devices=int(np.prod(list(mesh2.shape.values()))),
+                             batch_axis=batch_axis, placement="matrix",
+                             dispatches=b)
+    rdiv = int(mesh2.shape[row_axis])
+    cdiv = int(mesh2.shape[col_axis])
+    c_h = np.asarray(c)
+    for i in range(b):
+        mi, ni = int(m_valid[i]), int(n_valid[i])
+        # pad each instance up to mesh-divisible dims (sharded dims must
+        # divide the mesh); the PAD_COST/masked-completion machinery makes
+        # the padded solve equal the unpadded one
+        mp = -(-mi // rdiv) * rdiv
+        npad = -(-ni // cdiv) * cdiv
+        ci = np.zeros((mp, npad), np.float32)
+        ci[:mi, :ni] = c_h[i, :mi, :ni]
+        r = solve_assignment_sharded(
+            ci, float(eps_arr[i]), mesh2, row_axis=row_axis,
+            col_axis=col_axis, m_valid=mi, n_valid=ni,
+        )
+        matching[i, :mi] = np.asarray(r.matching)[:mi]
+        cost[i] = float(r.cost)
+        y_b[i, :mi] = np.asarray(r.y_b)[:mi]
+        y_a[i, :ni] = np.asarray(r.y_a)[:ni]
+        phases[i] = int(r.phases)
+        rounds[i] = int(r.rounds)
+        mbc[i] = int(r.matched_before_completion)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    out = BatchedAssignmentResult(
+        matching=jnp.asarray(matching), cost=jnp.asarray(cost),
+        y_b=jnp.asarray(y_b), y_a=jnp.asarray(y_a),
+        phases=jnp.asarray(phases), rounds=jnp.asarray(rounds),
+        matched_before_completion=jnp.asarray(mbc),
+    )
+    return out, stats
+
+
+def _solve_ot_matrix(c, nu, mu, eps, mesh, sizes, theta, guaranteed, k,
+                     batch_axis):
+    from .transport import OTResult, OTState
+
+    b, m, n = c.shape
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    eps_arr = _eps_array(eps, b, guaranteed)
+    mesh2, row_axis, col_axis = _matrix_mesh(mesh)
+    plan = np.zeros((b, m, n), np.float32)
+    cost = np.zeros((b,), np.float32)
+    y_b = np.zeros((b, m), np.float32)
+    y_a = np.zeros((b, n), np.float32)
+    phases = np.zeros((b,), np.int32)
+    rounds = np.zeros((b,), np.int32)
+    thetas = np.zeros((b,), np.float32)
+    s_int = np.zeros((b, m), np.int32)
+    d_int = np.zeros((b, n), np.int32)
+    st_leaves = {
+        "y_b": np.zeros((b, m), np.int32),
+        "ya_hi": np.zeros((b, n), np.int32),
+        "free_b": np.zeros((b, m), np.int32),
+        "free_a": np.zeros((b, n), np.int32),
+        "f_hi": np.zeros((b, m, n), np.int32),
+        "f_lo": np.zeros((b, m, n), np.int32),
+        "phases": np.zeros((b,), np.int32),
+        "rounds": np.zeros((b,), np.int32),
+    }
+    stats = DistributedStats(batch=b, dispatched_batch=b, chunk=k,
+                             devices=int(np.prod(list(mesh2.shape.values()))),
+                             batch_axis=batch_axis, placement="matrix",
+                             dispatches=b)
+    th_b = (None if theta is None
+            else np.broadcast_to(np.asarray(theta, np.float32), (b,)))
+    rdiv = int(mesh2.shape[row_axis])
+    cdiv = int(mesh2.shape[col_axis])
+    c_h, nu_h, mu_h = np.asarray(c), np.asarray(nu), np.asarray(mu)
+    for i in range(b):
+        mi, ni = int(m_valid[i]), int(n_valid[i])
+        # pad to mesh-divisible dims with zero mass/cost (inert lanes:
+        # zero supply never proposes, zero demand grants nothing); theta
+        # comes from the TRUE size so the trajectory equals the unpadded
+        # solve's (host float64 -> f32, as _theta_array)
+        mp = -(-mi // rdiv) * rdiv
+        npad = -(-ni // cdiv) * cdiv
+        ci = np.zeros((mp, npad), np.float32)
+        ci[:mi, :ni] = c_h[i, :mi, :ni]
+        nui = np.zeros((mp,), np.float32)
+        nui[:mi] = nu_h[i, :mi]
+        mui = np.zeros((npad,), np.float32)
+        mui[:ni] = mu_h[i, :ni]
+        if th_b is None:
+            th_i = float(np.float32(4.0 * max(mi, ni)
+                                    / np.float64(eps_arr[i])))
+        else:
+            th_i = float(th_b[i])
+        r = solve_ot_sharded(
+            ci, nui, mui, float(eps_arr[i]),
+            mesh2, row_axis=row_axis, col_axis=col_axis, theta=th_i,
+        )
+        plan[i, :mi, :ni] = np.asarray(r.plan)[:mi, :ni]
+        cost[i] = float(r.cost)
+        y_b[i, :mi] = np.asarray(r.y_b)[:mi]
+        y_a[i, :ni] = np.asarray(r.y_a)[:ni]
+        phases[i] = int(r.phases)
+        rounds[i] = int(r.rounds)
+        thetas[i] = float(r.theta)
+        s_int[i, :mi] = np.asarray(r.s_int)[:mi]
+        d_int[i, :ni] = np.asarray(r.d_int)[:ni]
+        st_leaves["y_b"][i, :mi] = np.asarray(r.state.y_b)[:mi]
+        st_leaves["ya_hi"][i, :ni] = np.asarray(r.state.ya_hi)[:ni]
+        st_leaves["free_b"][i, :mi] = np.asarray(r.state.free_b)[:mi]
+        st_leaves["free_a"][i, :ni] = np.asarray(r.state.free_a)[:ni]
+        st_leaves["f_hi"][i, :mi, :ni] = np.asarray(r.state.f_hi)[:mi, :ni]
+        st_leaves["f_lo"][i, :mi, :ni] = np.asarray(r.state.f_lo)[:mi, :ni]
+        st_leaves["phases"][i] = int(r.state.phases)
+        st_leaves["rounds"][i] = int(r.state.rounds)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    state = OTState(**{k2: jnp.asarray(v) for k2, v in st_leaves.items()})
+    out = OTResult(
+        plan=jnp.asarray(plan), cost=jnp.asarray(cost),
+        y_b=jnp.asarray(y_b), y_a=jnp.asarray(y_a),
+        phases=jnp.asarray(phases), rounds=jnp.asarray(rounds),
+        state=state, theta=jnp.asarray(thetas),
+        s_int=jnp.asarray(s_int), d_int=jnp.asarray(d_int),
+    )
+    return out, stats

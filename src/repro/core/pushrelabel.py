@@ -173,7 +173,7 @@ def solve_assignment_int(
     return jax.lax.while_loop(cond, body, init_assignment_state(m, n))
 
 
-@partial(jax.jit, static_argnames=("k", "propose_fn"))
+@partial(jax.jit, static_argnames=("k", "propose_fn"), donate_argnums=(1,))
 def run_assignment_phases(
     c_int: jnp.ndarray,
     state: PushRelabelState,
@@ -190,7 +190,12 @@ def run_assignment_phases(
     the static chunk size. Chaining calls for any ``k`` reproduces the
     one-shot ``solve_assignment_int`` trajectory bit for bit, because the
     phase body is the identical ``assignment_phase`` and the termination
-    predicate is evaluated on the same state."""
+    predicate is evaluated on the same state.
+
+    ``state`` is DONATED: the output state reuses the input buffers, so a
+    chunked solve holds one copy of the solver state, not two. Callers must
+    rebind (``state = run_assignment_phases(..., state, ...)``) and never
+    touch the old reference afterwards."""
     m, n = c_int.shape
     row_ok = _row_mask(m, m_valid)
     threshold = jnp.asarray(threshold, jnp.int32)

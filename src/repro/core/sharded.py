@@ -10,16 +10,19 @@ the distributed solve is BIT-IDENTICAL to the single-device solve (tested on
 a forced multi-device CPU in tests/test_sharded_ot.py)."""
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .pushrelabel import (
     AssignmentResult, complete_matching, round_costs, solve_assignment_int,
 )
+
+from ..compat import pvary as _pvary, shard_map as _shard_map
 
 
 def solve_assignment_sharded(
@@ -30,43 +33,134 @@ def solve_assignment_sharded(
     row_axis: str = "data",
     col_axis: str = "model",
     guaranteed: bool = False,
+    m_valid: int | None = None,
+    n_valid: int | None = None,
 ) -> AssignmentResult:
     """Assignment solve with the cost matrix sharded across `mesh`.
 
     The input matrix is placed sharded; all phase state (duals, matchings)
     stays 1-D sharded along its natural axis. Output matches the
-    single-device `solve_assignment` bit for bit."""
+    single-device `solve_assignment` bit for bit.
+
+    ``m_valid``/``n_valid`` mark the input as padded: only the leading
+    (m_valid, n_valid) block is the real instance (padded edges get the
+    batched solver's PAD_COST / masked-completion treatment, so the result
+    equals the unpadded solve). The distributed matrix placement
+    (core/distributed.py) uses this to pad instances up to mesh-divisible
+    shapes — this jax requires sharded dims divisible by the mesh."""
+    from .pushrelabel import assignment_epilogue, assignment_prologue
+
     if guaranteed:
         eps = eps / 3.0
     c = jnp.asarray(c, jnp.float32)
-    scale = jnp.maximum(jnp.max(c), 1e-30)
-    c_int = round_costs(c / scale, eps)
+    m = c.shape[0]
+    if m_valid is None:
+        mv = nv = None
+        threshold = None
+        cm, c_int, scale, row_ok, col_ok = assignment_prologue(c, eps)
+    else:
+        mv = jnp.int32(int(m_valid))
+        nv = jnp.int32(int(n_valid))
+        threshold = jnp.int32(int(eps * int(m_valid)))
+        cm, c_int, scale, row_ok, col_ok = assignment_prologue(
+            c, eps, mv, nv)
     c_sharded = jax.device_put(
         c_int, NamedSharding(mesh, P(row_axis, col_axis))
     )
+    state = _assign_solve_fn(mesh, row_axis, col_axis, float(eps))(
+        c_sharded, mv, threshold)
+    return assignment_epilogue(cm, scale, state, eps, row_ok, col_ok)
 
-    solve = jax.jit(
-        partial(solve_assignment_int, eps=eps),
-        in_shardings=(NamedSharding(mesh, P(row_axis, col_axis)),),
+
+@lru_cache(maxsize=None)
+def _assign_solve_fn(mesh: Mesh, row_axis: str, col_axis: str, eps: float):
+    """One jitted sharded phase-loop per (mesh, axes, eps) — repeat calls
+    (the distributed matrix placement loops over instances) hit the jit
+    cache instead of re-tracing per call."""
+    def _solve(ci, mv_, th_):
+        return solve_assignment_int(ci, eps, m_valid=mv_, threshold=th_)
+
+    return jax.jit(
+        _solve,
+        in_shardings=(NamedSharding(mesh, P(row_axis, col_axis)),
+                      None, None),
     )
-    state = solve(c_sharded)
-    matching = complete_matching(state.match_ba, state.match_ab)
-    m = c.shape[0]
-    rows = jnp.arange(m)
-    valid = matching >= 0
-    cost = jnp.sum(
-        jnp.where(valid, c[rows, jnp.clip(matching, 0, c.shape[1] - 1)], 0.0)
+
+
+def solve_ot_sharded(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps: float,
+    mesh: Mesh,
+    *,
+    row_axis: str = "data",
+    col_axis: str = "model",
+    theta: float | None = None,
+    guaranteed: bool = False,
+):
+    """General-OT solve with the cost matrix (and both flow matrices of the
+    solver state) sharded across ``mesh`` - the GSPMD-auto counterpart of
+    ``solve_assignment_sharded`` for the transport solver.
+
+    The integer phase loop (``solve_ot_int``) is jitted with the cost
+    matrix placed ``P(row_axis, col_axis)`` and masses placed along their
+    natural axes; the SPMD partitioner turns the row-local grant rounds
+    into per-shard work plus min/sum cross-shard reductions. All phase
+    arithmetic is int32 in units of eps, so the distributed integer state
+    is BIT-IDENTICAL to the single-device ``solve_ot`` state; the float
+    epilogue then runs on the gathered state with the same eager op
+    sequence as ``solve_ot``, so the plan/cost match bit for bit too."""
+    from .transport import (
+        ot_epilogue, ot_phase_cap, ot_prologue, ot_termination_threshold,
+        solve_ot_int,
     )
-    matched_before = jnp.sum(state.match_ba >= 0, dtype=jnp.int32)
-    return AssignmentResult(
-        matching=matching,
-        cost=cost,
-        y_b=state.y_b.astype(jnp.float32) * eps * scale,
-        y_a=state.y_a.astype(jnp.float32) * eps * scale,
-        phases=state.phases,
-        rounds=state.rounds,
-        sum_ni=state.sum_ni,
-        matched_before_completion=matched_before,
+
+    if guaranteed:
+        eps = eps / 3.0
+    c = jnp.asarray(c, jnp.float32)
+    nu = jnp.asarray(nu, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    nb, na = c.shape
+    if theta is None:
+        theta = 4.0 * max(nb, na) / eps
+    threshold = ot_termination_threshold(np.asarray(nu), theta, eps)
+    c_int, s_int, d_int, scale = ot_prologue(c, nu, mu, theta, eps)
+
+    sh_mat = NamedSharding(mesh, P(row_axis, col_axis))
+    sh_row = NamedSharding(mesh, P(row_axis))
+    sh_col = NamedSharding(mesh, P(col_axis))
+    solve = _ot_solve_fn(mesh, row_axis, col_axis, float(eps),
+                         int(nb + na + 2))
+    state = solve(
+        jax.device_put(c_int, sh_mat),
+        jax.device_put(s_int, sh_row),
+        jax.device_put(d_int, sh_col),
+        jnp.int32(threshold),
+    )
+    # epilogue on the gathered state, op-for-op the eager solve_ot path
+    state = jax.device_get(state)
+    state = jax.tree_util.tree_map(jnp.asarray, state)
+    res = ot_epilogue(c, nu, mu, theta, eps, scale, s_int, d_int, state)
+    return res._replace(theta=float(res.theta))
+
+
+@lru_cache(maxsize=None)
+def _ot_solve_fn(mesh: Mesh, row_axis: str, col_axis: str, eps: float,
+                 max_rounds: int):
+    """One jitted sharded OT phase-loop per (mesh, axes, eps, round cap),
+    mirroring ``_assign_solve_fn``."""
+    from .transport import ot_phase_cap, solve_ot_int
+
+    def _solve(ci, si, di, th):
+        return solve_ot_int(ci, si, di, eps, ot_phase_cap(eps),
+                            max_rounds, threshold=th)
+
+    return jax.jit(
+        _solve,
+        in_shardings=(NamedSharding(mesh, P(row_axis, col_axis)),
+                      NamedSharding(mesh, P(row_axis)),
+                      NamedSharding(mesh, P(col_axis)), None),
     )
 
 
@@ -168,7 +262,7 @@ def _phase_shardmap(c_blk, carry, salt0, row_axis, col_axis, m, n,
         active_b = active_b & ~won
         any_prop = jax.lax.pmax(
             jnp.any(prop >= 0).astype(jnp.int32), (row_axis, col_axis))
-        done = jax.lax.pvary(any_prop == 0, (row_axis, col_axis))
+        done = _pvary(any_prop == 0, (row_axis, col_axis))
         return (mprime_b, mprime_a, avail_blk, active_b, rounds + 1, done)
 
     init = (jnp.full((m_loc,), -1) + zero, jnp.full((n_loc,), _BIG32) + zero,
@@ -254,7 +348,7 @@ def solve_assignment_shardmap(
             jax.lax.pmax(rd, (row_axis, col_axis)),
         )
 
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(_shard_map(
         body, mesh=mesh,
         in_specs=P(row_axis, col_axis),
         out_specs=(P(row_axis), P(col_axis), P(row_axis), P(col_axis),

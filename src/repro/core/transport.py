@@ -171,14 +171,19 @@ def _phase(c_int, s: OTState, max_rounds: int) -> OTState:
 
 
 def init_ot_state(s_int: jnp.ndarray, d_int: jnp.ndarray) -> OTState:
-    """Paper initialization: all mass free, y(b) = eps (1 unit), y(a) = 0."""
+    """Paper initialization: all mass free, y(b) = eps (1 unit), y(a) = 0.
+
+    ``free_b``/``free_a`` are forced to FRESH buffers (``copy=True``): an
+    eager int32 ``astype`` would alias the caller's ``s_int``/``d_int``,
+    and the chunked ``run_ot_phases`` donates the state — an aliased init
+    would delete the caller's rounded masses out from under the epilogue."""
     nb = s_int.shape[0]
     na = d_int.shape[0]
     return OTState(
         y_b=jnp.ones((nb,), jnp.int32),
         ya_hi=jnp.zeros((na,), jnp.int32),
-        free_b=s_int.astype(jnp.int32),
-        free_a=d_int.astype(jnp.int32),
+        free_b=jnp.array(s_int, dtype=jnp.int32, copy=True),
+        free_a=jnp.array(d_int, dtype=jnp.int32, copy=True),
         f_hi=jnp.zeros((nb, na), jnp.int32),
         f_lo=jnp.zeros((nb, na), jnp.int32),
         phases=jnp.int32(0),
@@ -228,7 +233,7 @@ def solve_ot_int(
                               init_ot_state(s_int, d_int))
 
 
-@partial(jax.jit, static_argnames=("k", "max_rounds"))
+@partial(jax.jit, static_argnames=("k", "max_rounds"), donate_argnums=(1,))
 def run_ot_phases(
     c_int: jnp.ndarray,
     state: OTState,
@@ -243,7 +248,11 @@ def run_ot_phases(
     vmap); ``k`` and ``max_rounds`` are static. Chaining calls reproduces
     the one-shot ``solve_ot_int`` state trajectory bit for bit for any k:
     the phase body is the identical ``_phase`` and the per-phase salt rides
-    in ``state.phases``."""
+    in ``state.phases``.
+
+    ``state`` is DONATED (the dominant buffers are the two (nb, na) flow
+    matrices): a chunked solve updates them in place instead of holding
+    two copies. Callers must rebind and drop the old reference."""
     threshold = jnp.asarray(threshold, jnp.int32)
     phase_cap = jnp.asarray(phase_cap, jnp.int32)
     start = state.phases

@@ -1,10 +1,24 @@
-"""Production mesh builders. A FUNCTION (not module constant) so importing
-never touches jax device state."""
+"""Production mesh builders. FUNCTIONS (not module constants) so importing
+never touches jax device state.
+
+``_make_mesh`` papers over jax API drift: ``axis_types=`` (and
+``jax.sharding.AxisType``) only exist on newer jax; older releases build
+the same Auto-axis mesh without the kwarg.
+"""
 from __future__ import annotations
 
+import inspect
 import math
 
 import jax
+
+
+def _make_mesh(shape, axes, devices):
+    kwargs = {}
+    if (hasattr(jax.sharding, "AxisType")
+            and "axis_types" in inspect.signature(jax.make_mesh).parameters):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devices, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,16 +32,31 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"{len(jax.devices())} - run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes, devices)
 
 
 def make_small_mesh(shape=(2, 4), axes=("data", "model")):
     """CI-scale mesh for dry-run smoke tests (8 forced host devices)."""
     n = math.prod(shape)
-    return jax.make_mesh(
-        shape, axes, devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes, jax.devices()[:n])
+
+
+def largest_pow2_at_most(x: int) -> int:
+    """Largest power of two <= max(x, 1)."""
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+def make_batch_mesh(n_devices: int | None = None, axis: str = "data"):
+    """1-D mesh for batch-axis sharding (core/distributed.py).
+
+    Uses the largest power-of-two prefix of the host's devices: the
+    distributed compacting driver keeps batch buckets divisible by the
+    device count, and its power-of-two bucket descent only stays divisible
+    when the device count is itself a power of two."""
+    avail = len(jax.devices())
+    n = avail if n_devices is None else min(int(n_devices), avail)
+    p = largest_pow2_at_most(n)
+    return _make_mesh((p,), (axis,), jax.devices()[:p])

@@ -128,7 +128,8 @@ class OTService:
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
                  use_pallas: bool = True, buckets=None,
-                 compact: bool = True, chunk: Optional[int] = None):
+                 compact: bool = True, chunk: Optional[int] = None,
+                 mesh=None):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core.costs import COSTS, build_cost_matrix
@@ -142,6 +143,14 @@ class OTService:
         self.buckets = tuple(buckets) if buckets else B.DEFAULT_BUCKETS
         self.compact = compact
         self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
+        # mesh != None routes every bucket through the mesh-distributed
+        # compacting driver (core/distributed.py): batch axis sharded
+        # across devices, same per-request results.
+        if mesh is not None and not compact:
+            raise ValueError("mesh dispatch requires compact=True (the "
+                             "distributed driver is the compacting "
+                             "driver)")  # same rule as solve_*_ragged
+        self.mesh = mesh
         self.queue: List[OTRequest] = []
         self._B = B
         self._C = C
@@ -194,7 +203,13 @@ class OTService:
                 if has_mass:
                     nu = self._B.pad_stack([reqs[i].nu for i in idx], (mb,))
                     mu = self._B.pad_stack([reqs[i].mu for i in idx], (nb,))
-                    if self.compact:
+                    if self.mesh is not None:
+                        from repro.core import distributed as D
+
+                        r, st = D.solve_ot_distributed(
+                            c, nu, mu, self.eps, self.mesh, sizes=sizes,
+                            k=self.chunk)
+                    elif self.compact:
                         r, st = self._C.solve_ot_batched_compacting(
                             c, nu, mu, self.eps, sizes=sizes, k=self.chunk)
                     else:
@@ -216,8 +231,16 @@ class OTService:
                         }
                         if st is not None:
                             results[i]["dispatches"] = st.dispatches
+                            if hasattr(st, "devices"):
+                                results[i]["devices"] = st.devices
                 else:
-                    if self.compact:
+                    if self.mesh is not None:
+                        from repro.core import distributed as D
+
+                        r, st = D.solve_assignment_distributed(
+                            c, self.eps, self.mesh, sizes=sizes,
+                            k=self.chunk)
+                    elif self.compact:
                         r, st = self._C.solve_assignment_batched_compacting(
                             c, self.eps, sizes=sizes, k=self.chunk)
                     else:
@@ -244,6 +267,8 @@ class OTService:
                         }
                         if st is not None:
                             results[i]["dispatches"] = st.dispatches
+                            if hasattr(st, "devices"):
+                                results[i]["devices"] = st.devices
         assert all(r is not None for r in results)
         return results  # submission order
 

@@ -1,0 +1,363 @@
+"""Async multi-tenant front end for the OT service: queues -> shape
+buckets -> mesh dispatch, with host-side batch preparation overlapping
+in-flight device work.
+
+``OTService`` (serve/engine.py) is synchronous: callers submit, then one
+``run_batch()`` call blocks while it buckets, pads, builds cost matrices,
+and solves. ``AsyncOTScheduler`` splits that into a two-stage pipeline:
+
+  submit(x, y[, nu, mu][, eps]) -> Future     (any thread, any tenant)
+      |
+  [collate worker]  drains the request queue (draining whatever is queued,
+      up to ``max_batch``, after an optional ``linger_ms`` batching
+      window), groups by (point-dim, solver mode) and shape bucket, pads,
+      and computes the batched cost matrices
+      |
+  [dispatch worker] feeds prepared buckets to the mesh through the
+      distributed compacting driver (core/distributed.py) and resolves
+      the per-request Futures
+
+with a bounded handoff queue between the stages: while the dispatch
+worker is blocked inside a solve (device work + the driver's per-chunk
+converged-mask syncs), the collate worker is already padding/bucketing
+the NEXT batch — host-side compaction/bucketing overlaps with in-flight
+device dispatches. (The overlap is thread-level: numpy padding and jax
+dispatch release the GIL while device work runs.)
+
+Each resolved Future carries the same result dict as
+``OTService.run_batch`` plus scheduling stats: ``wait_s`` (submit ->
+dispatch start), ``solve_s`` (bucket solve wall time), ``devices``,
+``dispatches``, ``occupancy`` (the compaction curve of its bucket), and
+``batch_size``/``bucket``. Per-request ``eps`` is supported (eps is data
+to the compacting driver — mixed-accuracy tenants share one dispatch).
+
+Results are identical to the synchronous service regardless of how
+requests happen to be batched: the distributed driver's per-lane results
+are composition-invariant (retiring or re-sharding a neighbor never
+perturbs a survivor — the property tests in tests/test_compaction.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class _Pending:
+    x: np.ndarray
+    y: np.ndarray
+    nu: Optional[np.ndarray]
+    mu: Optional[np.ndarray]
+    eps: float
+    future: Future
+    t_submit: float
+
+
+@dataclass
+class _WorkItem:
+    has_mass: bool
+    c: Any                      # (B, M, N) batched cost matrix (device)
+    nu: Any                     # (B, M) or None
+    mu: Any                     # (B, N) or None
+    sizes: np.ndarray           # (B, 2)
+    eps: np.ndarray             # (B,) per-request eps
+    reqs: List[_Pending]
+    bucket: tuple
+    t_prepared: float
+
+
+@dataclass
+class SchedulerStats:
+    """Aggregate accounting across all dispatched buckets. ``occupancy``
+    keeps only the most recent curves (bounded: a long-lived scheduler
+    must not grow a list forever)."""
+    requests: int = 0
+    batches: int = 0
+    total_wait_s: float = 0.0
+    total_solve_s: float = 0.0
+    dispatches: int = 0
+    occupancy: "deque" = field(
+        default_factory=lambda: deque(maxlen=64))
+
+    def as_dict(self) -> dict:
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "mean_wait_s": (self.total_wait_s / self.requests
+                            if self.requests else 0.0),
+            "total_solve_s": self.total_solve_s,
+            "dispatches": self.dispatches,
+        }
+
+
+class AsyncOTScheduler:
+    """Asynchronous bucket scheduler over the distributed OT solvers.
+
+    Args:
+      eps: default additive error (per-request override via ``submit``).
+      metric: point-cloud cost metric.
+      mesh: 1-D batch mesh (``launch.mesh.make_batch_mesh()`` when None);
+        on a single-device host this degrades gracefully to the plain
+        compacting driver.
+      buckets: shape-bucket boundaries (core/batched.py defaults).
+      chunk: k, phases per dispatch of the compacting driver.
+      max_batch: max requests drained into one collate round.
+      linger_ms: optional batching window — after the first request of a
+        round arrives, keep draining for this long so co-tenant requests
+        share a dispatch. 0 dispatches whatever is instantaneously queued.
+      placement: "auto" | "batch" | "matrix" (core/distributed.py policy).
+    """
+
+    def __init__(self, eps: float = 0.05, metric: str = "euclidean",
+                 mesh=None, buckets=None, chunk: Optional[int] = None,
+                 max_batch: int = 256, linger_ms: float = 0.0,
+                 use_pallas: bool = True, placement: str = "auto"):
+        from repro.core import batched as B
+        from repro.core import compaction as C
+        from repro.core.costs import COSTS
+
+        if mesh is None:
+            from repro.launch.mesh import make_batch_mesh
+
+            mesh = make_batch_mesh()
+        self.eps = float(eps)
+        self.metric = metric
+        self.mesh = mesh
+        self.buckets = tuple(buckets) if buckets else B.DEFAULT_BUCKETS
+        self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
+        self.max_batch = int(max_batch)
+        self.linger_s = float(linger_ms) / 1e3
+        self.placement = placement
+        self.kernel = ("pallas" if use_pallas
+                       and jax.default_backend() == "tpu" else "jnp")
+        self._B = B
+        self._cost_batched = jax.jit(jax.vmap(COSTS[metric]))
+        self.stats = SchedulerStats()
+
+        self._submit_q: "queue.Queue" = queue.Queue()
+        # bounded handoff: collate may run at most this many batches ahead
+        # of the dispatcher (backpressure, and the overlap window)
+        self._work_q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._outstanding = 0
+        self._lock = threading.Condition()
+        self._closed = False
+        self._collate_t = threading.Thread(target=self._collate_loop,
+                                           name="ot-collate", daemon=True)
+        self._dispatch_t = threading.Thread(target=self._dispatch_loop,
+                                            name="ot-dispatch", daemon=True)
+        self._collate_t.start()
+        self._dispatch_t.start()
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit(self, x, y, nu=None, mu=None,
+               eps: Optional[float] = None) -> Future:
+        """Queue one distance request; returns a Future resolving to the
+        result dict. (nu, mu) both present -> general OT; both absent ->
+        assignment distance."""
+        if (nu is None) != (mu is None):
+            raise ValueError("provide both nu and mu (general OT) or "
+                             "neither (assignment distance)")
+        fut: Future = Future()
+        req = _Pending(x=np.asarray(x), y=np.asarray(y),
+                       nu=None if nu is None else np.asarray(nu),
+                       mu=None if mu is None else np.asarray(mu),
+                       eps=self.eps if eps is None else float(eps),
+                       future=fut, t_submit=time.perf_counter())
+        # closed-check and outstanding-increment share the lock close()
+        # takes to flip _closed, so a submit can never slip in after the
+        # shutdown sentinel and strand its Future
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._outstanding += 1
+        self._submit_q.put(req)
+        return fut
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted request has resolved. Returns False
+        on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._outstanding > 0:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._lock.wait(timeout=remaining)
+        return True
+
+    def close(self):
+        """Stop accepting work, drain what was submitted, stop workers."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True          # no new submits past this point
+        self.flush()
+        self._submit_q.put(None)          # collate sentinel
+        self._collate_t.join(timeout=30)
+        self._dispatch_t.join(timeout=30)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
+    # workers
+    # ------------------------------------------------------------------
+
+    def _drain(self) -> Optional[List[_Pending]]:
+        """Block for the first request, then drain whatever else is queued
+        (up to max_batch, within the linger window). None on shutdown."""
+        first = self._submit_q.get()
+        if first is None:
+            return None
+        batch = [first]
+        deadline = time.monotonic() + self.linger_s
+        while len(batch) < self.max_batch:
+            timeout = deadline - time.monotonic()
+            try:
+                nxt = (self._submit_q.get_nowait() if timeout <= 0
+                       else self._submit_q.get(timeout=timeout))
+            except queue.Empty:
+                break
+            if nxt is None:               # propagate shutdown after batch
+                self._submit_q.put(None)
+                break
+            batch.append(nxt)
+        return batch
+
+    def _batched_cost(self, xs, ys):
+        if self.kernel == "pallas":
+            from repro.kernels import ops
+
+            return ops.cost_matrix_batched(xs, ys, metric=self.metric)
+        return self._cost_batched(xs, ys)
+
+    def _collate_loop(self):
+        B = self._B
+        while True:
+            batch = self._drain()
+            if batch is None:
+                self._work_q.put(None)
+                return
+            packaged: set = set()
+            try:
+                modes: Dict[tuple, List[_Pending]] = {}
+                for r in batch:
+                    key = (r.x.shape[1], r.nu is not None)
+                    modes.setdefault(key, []).append(r)
+                for (dim, has_mass), sub in sorted(modes.items()):
+                    shapes = [(r.x.shape[0], r.y.shape[0]) for r in sub]
+                    for grp in B.bucket_instances(shapes, self.buckets):
+                        reqs = [sub[j] for j in grp.indices]
+                        (mb, nb) = grp.key
+                        xs = B.pad_stack([r.x for r in reqs], (mb, dim))
+                        ys = B.pad_stack([r.y for r in reqs], (nb, dim))
+                        c = self._batched_cost(xs, ys)
+                        nu = mu = None
+                        if has_mass:
+                            nu = B.pad_stack([r.nu for r in reqs], (mb,))
+                            mu = B.pad_stack([r.mu for r in reqs], (nb,))
+                        item = _WorkItem(
+                            has_mass=has_mass, c=c, nu=nu, mu=mu,
+                            sizes=grp.sizes,
+                            eps=np.asarray([r.eps for r in reqs]),
+                            reqs=reqs, bucket=grp.key,
+                            t_prepared=time.perf_counter(),
+                        )
+                        self._work_q.put(item)   # blocks: backpressure
+                        packaged.update(id(r) for r in reqs)
+            except Exception as e:
+                # fail only the requests that never made it into a work
+                # item; packaged ones are resolved by the dispatcher
+                missed = [r for r in batch if id(r) not in packaged
+                          and not r.future.done()]
+                for r in missed:
+                    r.future.set_exception(e)
+                self._done(len(missed))
+
+    def _dispatch_loop(self):
+        from repro.core.distributed import (
+            solve_assignment_distributed, solve_ot_distributed,
+        )
+
+        while True:
+            item = self._work_q.get()
+            if item is None:
+                return
+            t0 = time.perf_counter()
+            try:
+                if item.has_mass:
+                    r, st = solve_ot_distributed(
+                        item.c, item.nu, item.mu, item.eps, self.mesh,
+                        sizes=item.sizes, k=self.chunk,
+                        placement=self.placement,
+                    )
+                    plan = np.asarray(r.plan)
+                else:
+                    r, st = solve_assignment_distributed(
+                        item.c, item.eps, self.mesh, sizes=item.sizes,
+                        k=self.chunk, placement=self.placement,
+                    )
+                    matching = np.asarray(r.matching)
+                    y_b, y_a = np.asarray(r.y_b), np.asarray(r.y_a)
+                cost = np.asarray(r.cost)
+                phases = np.asarray(r.phases)
+                solve_s = time.perf_counter() - t0
+                # one shared (read-only) occupancy curve for the whole
+                # batch, not a copy per request
+                occupancy = tuple(tuple(o) for o in st.occupancy)
+                self.stats.batches += 1
+                self.stats.total_solve_s += solve_s
+                self.stats.dispatches += st.dispatches
+                self.stats.occupancy.append(occupancy)
+                for i, req in enumerate(item.reqs):
+                    m, n = item.sizes[i]
+                    out: Dict[str, Any] = {
+                        "phases": int(phases[i]),
+                        "batch_size": len(item.reqs),
+                        "bucket": item.bucket,
+                        "wait_s": t0 - req.t_submit,
+                        "solve_s": solve_s,
+                        "devices": st.devices,
+                        "dispatches": st.dispatches,
+                        "occupancy": occupancy,
+                        "eps": float(item.eps[i]),
+                    }
+                    if item.has_mass:
+                        out["cost"] = float(cost[i])
+                        out["plan"] = plan[i, :m, :n]
+                    else:
+                        out["cost"] = float(cost[i]) / m
+                        out["matching"] = matching[i, :m]
+                        out["dual_lower_bound"] = float(
+                            (y_b[i, :m].sum() + y_a[i, :n].sum()) / m
+                        )
+                    self.stats.requests += 1
+                    self.stats.total_wait_s += out["wait_s"]
+                    req.future.set_result(out)
+                self._done(len(item.reqs))
+            except Exception as e:
+                for req in item.reqs:
+                    if not req.future.done():
+                        req.future.set_exception(e)
+                self._done(len(item.reqs))
+
+    def _done(self, n: int):
+        with self._lock:
+            self._outstanding -= n
+            self._lock.notify_all()

@@ -1,0 +1,391 @@
+"""Mesh-distributed dispatch subsystem (core/distributed.py) + the async
+bucket scheduler (serve/scheduler.py).
+
+Fast (in-process, 1 device — the distributed driver degrades gracefully):
+  * distributed results bit-identical to the single-device compacting
+    driver, including mixed per-instance eps;
+  * placement policy unit behavior; pow2 mesh validation;
+  * ragged front end + OTService mesh routing;
+  * scheduler end-to-end: futures resolve to the synchronous service's
+    results, wait/occupancy stats attached;
+  * feasibility certificates (Lemma 3.2 etc.) on the distributed final
+    states.
+
+Multi-device (subprocess with 8 forced host CPU devices, same harness as
+tests/test_sharded_ot.py, marked slow):
+  * batch placement bit-identical to the single-device compacting solve
+    across re-bucketing boundaries (occupancy descends through several
+    bucket sizes and collapses below the device floor) and with mixed
+    per-instance eps;
+  * matrix placement integer-exact vs unbatched solves (float epilogue to
+    1e-6, the documented shape-reassociation caveat);
+  * certificates on the mesh-sharded outputs.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.compaction import (
+    solve_assignment_batched_compacting,
+    solve_ot_batched_compacting,
+)
+from repro.core.distributed import (
+    _require_pow2,
+    choose_placement,
+    solve_assignment_distributed,
+    solve_ot_distributed,
+)
+from repro.core.feasibility import check_invariants, check_ot_invariants
+from repro.core.pushrelabel import assignment_prologue
+from repro.core.transport import ot_prologue
+
+
+def _skewed_batch(b, mb, nb, seed, n_slow=2):
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, mb, nb), np.float32)
+    nu = np.zeros((b, mb), np.float32)
+    mu = np.zeros((b, nb), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i in range(b):
+        m = int(rng.integers(mb // 2 + 1, mb + 1))
+        n = int(rng.integers(m, nb + 1))
+        x = rng.uniform(size=(m, 2))
+        if i < n_slow:
+            y = np.where(np.arange(n)[:, None] % 2 == 0,
+                         x[np.arange(n) % m] * 0.02,
+                         1.0 - 0.02 * rng.uniform(size=(n, 2)))
+        else:
+            y = rng.uniform(size=(n, 2))
+        d = x[:, None, :] - y[None, :, :]
+        c[i, :m, :n] = np.sqrt((d * d).sum(-1) + 1e-30)
+        nu[i, :m] = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu[i, :n] = rng.dirichlet(np.ones(n)).astype(np.float32)
+        sizes[i] = (m, n)
+    return c, nu, mu, sizes
+
+
+# --------------------------------------------------------------------------
+# Fast in-process coverage (1 device)
+# --------------------------------------------------------------------------
+
+def test_distributed_equals_compacting_ot():
+    c, nu, mu, sizes = _skewed_batch(5, 32, 32, seed=3)
+    r0, s0 = solve_ot_batched_compacting(c, nu, mu, 0.1, sizes=sizes, k=3)
+    r1, s1 = solve_ot_distributed(c, nu, mu, 0.1, sizes=sizes, k=3)
+    np.testing.assert_array_equal(np.asarray(r0.plan), np.asarray(r1.plan))
+    np.testing.assert_array_equal(np.asarray(r0.cost), np.asarray(r1.cost))
+    np.testing.assert_array_equal(np.asarray(r0.phases),
+                                  np.asarray(r1.phases))
+    assert s1.placement == "batch"
+    assert s1.occupancy[-1][1] == 0
+    assert s1.as_dict()["devices"] == s1.devices
+
+
+def test_distributed_equals_compacting_assignment_mixed_eps():
+    eps = np.asarray([0.2, 0.05, 0.1, 0.05, 0.1])
+    c, _, _, sizes = _skewed_batch(5, 32, 32, seed=7)
+    r0, _ = solve_assignment_batched_compacting(c, eps, sizes=sizes, k=2)
+    r1, _ = solve_assignment_distributed(c, eps, sizes=sizes, k=2)
+    np.testing.assert_array_equal(np.asarray(r0.matching),
+                                  np.asarray(r1.matching))
+    np.testing.assert_array_equal(np.asarray(r0.cost), np.asarray(r1.cost))
+    np.testing.assert_array_equal(np.asarray(r0.y_b), np.asarray(r1.y_b))
+
+
+def test_placement_policy():
+    # many small instances -> batch; few large -> matrix; 1 device -> batch
+    assert choose_placement(32, 64, 64, 8) == "batch"
+    assert choose_placement(8, 256, 256, 8) == "batch"
+    assert choose_placement(2, 256, 256, 8) == "matrix"
+    assert choose_placement(2, 32, 32, 8) == "batch"
+    assert choose_placement(2, 256, 256, 1) == "batch"
+    with pytest.raises(ValueError):
+        _require_pow2(6)
+    _require_pow2(8)
+
+
+def test_ragged_and_service_mesh_routing():
+    from repro.core.batched import solve_ot_ragged
+    from repro.launch.mesh import make_batch_mesh
+
+    rng = np.random.default_rng(11)
+    insts = []
+    for m in (12, 20, 18):
+        x = rng.uniform(size=(m, 2))
+        y = rng.uniform(size=(m, 2))
+        d = x[:, None, :] - y[None, :, :]
+        ci = np.sqrt((d * d).sum(-1) + 1e-30).astype(np.float32)
+        nu = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu = rng.dirichlet(np.ones(m)).astype(np.float32)
+        insts.append((ci, nu, mu))
+    mesh = make_batch_mesh()
+    r_plain = solve_ot_ragged(insts, 0.1)
+    r_mesh = solve_ot_ragged(insts, 0.1, mesh=mesh)
+    for a, b in zip(r_plain, r_mesh):
+        np.testing.assert_array_equal(a["plan"], b["plan"])
+        assert b["devices"] >= 1
+    with pytest.raises(ValueError):
+        solve_ot_ragged(insts, 0.1, mesh=mesh, compact=False)
+
+
+def test_scheduler_end_to_end():
+    from repro.core.costs import build_cost_matrix
+    from repro.core.pushrelabel import solve_assignment
+    from repro.core.transport import solve_ot
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    rng = np.random.default_rng(1)
+    with AsyncOTScheduler(eps=0.1, linger_ms=20) as sched:
+        futs, refs = [], []
+        for m in (14, 30, 14):
+            x = rng.uniform(size=(m, 2)).astype(np.float32)
+            y = rng.uniform(size=(m, 2)).astype(np.float32)
+            futs.append(sched.submit(x, y))
+            cm = build_cost_matrix(jnp.asarray(x), jnp.asarray(y),
+                                   "euclidean")
+            refs.append(float(solve_assignment(cm, 0.1).cost) / m)
+        x = rng.uniform(size=(10, 2)).astype(np.float32)
+        y = rng.uniform(size=(12, 2)).astype(np.float32)
+        nu = rng.dirichlet(np.ones(10)).astype(np.float32)
+        mu = rng.dirichlet(np.ones(12)).astype(np.float32)
+        f_ot = sched.submit(x, y, nu=nu, mu=mu, eps=0.05)  # per-request eps
+        assert sched.flush(timeout=300)
+        for f, ref in zip(futs, refs):
+            r = f.result(timeout=5)
+            assert r["cost"] == pytest.approx(ref, abs=1e-5)
+            assert r["wait_s"] >= 0 and r["solve_s"] > 0
+            assert r["devices"] >= 1 and len(r["occupancy"]) >= 1
+        cm = build_cost_matrix(jnp.asarray(x), jnp.asarray(y), "euclidean")
+        s = solve_ot(cm, jnp.asarray(nu), jnp.asarray(mu), 0.05)
+        r = f_ot.result(timeout=5)
+        assert r["cost"] == pytest.approx(float(s.cost), abs=2e-6)
+        assert r["plan"].shape == (10, 12)
+        assert sched.stats.requests == 4
+    with pytest.raises(RuntimeError):
+        sched.submit(np.ones((4, 2)), np.ones((4, 2)))
+
+
+# --------------------------------------------------------------------------
+# Feasibility certificates on the batched/distributed code paths
+# --------------------------------------------------------------------------
+
+def test_certificates_distributed_assignment():
+    """Lemma 3.2 / I1 / I2 certificates on the exact pre-completion integer
+    state of every instance of a distributed (compacting) batch solve."""
+    eps = 0.1
+    c, _, _, sizes = _skewed_batch(4, 24, 28, seed=19)
+    r, st = solve_assignment_distributed(c, eps, sizes=sizes, k=2,
+                                          keep_state=True)
+    assert st.final_state is not None
+    for i in range(4):
+        mi, ni = int(sizes[i][0]), int(sizes[i][1])
+        _, c_int, _, _, _ = assignment_prologue(
+            jnp.asarray(c[i]), eps, jnp.int32(mi), jnp.int32(ni)
+        )
+        import jax
+
+        state_i = jax.tree_util.tree_map(lambda a: a[i], st.final_state)
+        out = check_invariants(np.asarray(c_int),
+                               np.asarray(state_i.y_b),
+                               np.asarray(state_i.y_a),
+                               np.asarray(state_i.match_ba), eps)
+        assert all(out.values()), (i, out)
+
+
+def test_certificates_distributed_ot():
+    """check_ot_invariants (I1/I2, Lemma 4.1, Lemma 3.2 bound) on every
+    instance of a distributed OT batch solve."""
+    import jax
+
+    eps = 0.1
+    c, nu, mu, sizes = _skewed_batch(4, 24, 24, seed=23)
+    r, st = solve_ot_distributed(c, nu, mu, eps, sizes=sizes, k=3)
+    theta = np.asarray(r.theta)
+    for i in range(4):
+        c_int, s_int, d_int, _ = ot_prologue(
+            jnp.asarray(c[i]), jnp.asarray(nu[i]), jnp.asarray(mu[i]),
+            float(theta[i]), eps
+        )
+        np.testing.assert_array_equal(np.asarray(s_int),
+                                      np.asarray(r.s_int)[i])
+        state_i = jax.tree_util.tree_map(lambda a: a[i], r.state)
+        out = check_ot_invariants(np.asarray(c_int), state_i,
+                                  np.asarray(r.s_int)[i],
+                                  np.asarray(r.d_int)[i], eps)
+        assert all(out.values()), (i, out)
+
+
+def test_certificates_lockstep_batched_ot():
+    """The certificates also hold on the PR-1 lockstep batched path."""
+    import jax
+
+    from repro.core.batched import solve_ot_batched
+
+    eps = 0.1
+    c, nu, mu, sizes = _skewed_batch(3, 20, 20, seed=29)
+    r = solve_ot_batched(c, nu, mu, eps, sizes=sizes)
+    theta = np.asarray(r.theta)
+    for i in range(3):
+        c_int, _, _, _ = ot_prologue(
+            jnp.asarray(c[i]), jnp.asarray(nu[i]), jnp.asarray(mu[i]),
+            float(theta[i]), eps
+        )
+        state_i = jax.tree_util.tree_map(lambda a: a[i], r.state)
+        out = check_ot_invariants(np.asarray(c_int), state_i,
+                                  np.asarray(r.s_int)[i],
+                                  np.asarray(r.d_int)[i], eps)
+        assert all(out.values()), (i, out)
+
+
+# --------------------------------------------------------------------------
+# Forced 8-device mesh (subprocess, same harness as test_sharded_ot.py)
+# --------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.compaction import (
+    solve_assignment_batched_compacting, solve_ot_batched_compacting,
+)
+from repro.core.distributed import (
+    solve_assignment_distributed, solve_ot_distributed,
+)
+from repro.core.feasibility import check_invariants, check_ot_invariants
+from repro.core.pushrelabel import assignment_prologue, solve_assignment
+from repro.core.transport import ot_prologue, solve_ot
+from repro.launch.mesh import make_batch_mesh
+
+def skewed(b, mb, nb, seed, n_slow=4):
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, mb, nb), np.float32)
+    nu = np.zeros((b, mb), np.float32)
+    mu = np.zeros((b, nb), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i in range(b):
+        m = int(rng.integers(mb // 2 + 1, mb + 1))
+        n = int(rng.integers(m, nb + 1))
+        x = rng.uniform(size=(m, 2))
+        if i < n_slow:
+            y = np.where(np.arange(n)[:, None] % 2 == 0,
+                         x[np.arange(n) % m] * 0.02,
+                         1.0 - 0.02 * rng.uniform(size=(n, 2)))
+        else:
+            y = rng.uniform(size=(n, 2))
+        d = x[:, None, :] - y[None, :, :]
+        c[i, :m, :n] = np.sqrt((d * d).sum(-1) + 1e-30)
+        nu[i, :m] = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu[i, :n] = rng.dirichlet(np.ones(n)).astype(np.float32)
+        sizes[i] = (m, n)
+    perm = rng.permutation(b)
+    return c[perm], nu[perm], mu[perm], sizes[perm]
+
+out = {}
+mesh = make_batch_mesh()
+out["devices"] = int(mesh.shape["data"])
+
+# -- batch placement: bit-identical across re-bucketing boundaries --------
+c, nu, mu, sizes = skewed(32, 48, 48, seed=5)
+r0, s0 = solve_ot_batched_compacting(c, nu, mu, 0.1, sizes=sizes, k=4)
+r1, s1 = solve_ot_distributed(c, nu, mu, 0.1, mesh, sizes=sizes, k=4)
+out["ot_identical"] = bool(
+    np.array_equal(np.asarray(r0.plan), np.asarray(r1.plan))
+    and np.array_equal(np.asarray(r0.cost), np.asarray(r1.cost))
+    and np.array_equal(np.asarray(r0.phases), np.asarray(r1.phases))
+)
+buckets = sorted({bb for bb, _ in s1.occupancy}, reverse=True)
+out["rebucketed"] = len(buckets) >= 3          # descent crossed >= 2 edges
+out["collapsed"] = s1.collapsed_at is not None  # and below the mesh floor
+out["final_live"] = s1.occupancy[-1][1]
+
+a0, t0 = solve_assignment_batched_compacting(c, 0.1, sizes=sizes, k=4)
+a1, t1 = solve_assignment_distributed(c, 0.1, mesh, sizes=sizes, k=4,
+                                      keep_state=True)
+out["assign_identical"] = bool(
+    np.array_equal(np.asarray(a0.matching), np.asarray(a1.matching))
+    and np.array_equal(np.asarray(a0.cost), np.asarray(a1.cost))
+    and np.array_equal(np.asarray(a0.y_b), np.asarray(a1.y_b))
+)
+
+# -- mixed per-instance eps across re-bucketing boundaries ----------------
+eps = np.where(np.arange(32) % 2 == 0, 0.1, 0.05)
+m0, _ = solve_ot_batched_compacting(c, nu, mu, eps, sizes=sizes, k=2)
+m1, sm = solve_ot_distributed(c, nu, mu, eps, mesh, sizes=sizes, k=2)
+out["mixed_eps_identical"] = bool(
+    np.array_equal(np.asarray(m0.plan), np.asarray(m1.plan))
+    and np.array_equal(np.asarray(m0.phases), np.asarray(m1.phases))
+)
+
+# -- certificates on the mesh-solved states -------------------------------
+ok = True
+theta = np.asarray(r1.theta)
+for i in range(4):
+    mi, ni = int(sizes[i][0]), int(sizes[i][1])
+    c_int, _, _, _ = ot_prologue(
+        jnp.asarray(c[i]), jnp.asarray(nu[i]), jnp.asarray(mu[i]),
+        float(theta[i]), 0.1)
+    st_i = jax.tree_util.tree_map(lambda a: a[i], r1.state)
+    res = check_ot_invariants(np.asarray(c_int), st_i,
+                              np.asarray(r1.s_int)[i],
+                              np.asarray(r1.d_int)[i], 0.1)
+    ok = ok and all(res.values())
+for i in range(4):
+    mi, ni = int(sizes[i][0]), int(sizes[i][1])
+    _, c_int, _, _, _ = assignment_prologue(
+        jnp.asarray(c[i]), 0.1, jnp.int32(mi), jnp.int32(ni))
+    st_i = jax.tree_util.tree_map(lambda a: a[i], t1.final_state)
+    res = check_invariants(np.asarray(c_int), np.asarray(st_i.y_b),
+                           np.asarray(st_i.y_a),
+                           np.asarray(st_i.match_ba), 0.1)
+    ok = ok and all(res.values())
+out["certificates"] = bool(ok)
+
+# -- matrix placement: few large instances, integer-exact -----------------
+c2, nu2, mu2, sizes2 = skewed(2, 150, 150, seed=9, n_slow=0)
+rm, sm2 = solve_ot_distributed(c2, nu2, mu2, 0.1, mesh, sizes=sizes2)
+out["matrix_used"] = sm2.placement == "matrix"
+mok = True
+for i in range(2):
+    m, n = int(sizes2[i][0]), int(sizes2[i][1])
+    s = solve_ot(jnp.asarray(c2[i, :m, :n]), jnp.asarray(nu2[i, :m]),
+                 jnp.asarray(mu2[i, :n]), 0.1)
+    mok = mok and int(rm.phases[i]) == int(s.phases)
+    mok = mok and bool(np.allclose(np.asarray(rm.plan)[i, :m, :n],
+                                   np.asarray(s.plan), atol=1e-6))
+    mok = mok and bool(np.array_equal(
+        np.asarray(jax.tree_util.tree_map(lambda a: a[i], rm.state).f_hi
+                   )[:m, :n],
+        np.asarray(s.state.f_hi)))
+out["matrix_identical"] = bool(mok)
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_eight_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # skip the TPU-backend probe (60s timeout in this image)
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["devices"] == 8, out
+    assert out["ot_identical"], out
+    assert out["assign_identical"], out
+    assert out["mixed_eps_identical"], out
+    assert out["rebucketed"] and out["collapsed"], out
+    assert out["final_live"] == 0, out
+    assert out["certificates"], out
+    assert out["matrix_used"] and out["matrix_identical"], out

@@ -5,7 +5,6 @@ stand-ins with the same normalization and cost structure."""
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.pushrelabel import solve_assignment
 from repro.core.sinkhorn import sinkhorn, reg_for_additive_eps

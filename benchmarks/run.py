@@ -1,9 +1,50 @@
 """One function per paper table/figure. Prints ``name,us_per_call,derived``
-CSV. ``python -m benchmarks.run [--full]`` (full = paper-scale grids)."""
+CSV. ``python -m benchmarks.run [--full]`` (full = paper-scale grids).
+
+``--diff`` compares a fresh run of the JSON-emitting families (batched,
+sharded) against the committed ``BENCH_batched.json``/``BENCH_sharded.json``
+instead of overwriting them, flags any >20% instances/sec regression, and
+exits nonzero if one is found — the perf gate for driver refactors.
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+DIFF_THRESHOLD = 0.2     # flag >20% instances/sec regressions
+
+
+def diff_records(fresh: list, committed_path: str,
+                 threshold: float = DIFF_THRESHOLD) -> list:
+    """Compare ``instances_per_s`` between fresh records and the committed
+    baseline (matched by record name). Prints one line per comparable
+    record; returns the names that regressed by more than ``threshold``."""
+    if not os.path.exists(committed_path):
+        print(f"# no committed {committed_path}; nothing to diff",
+              file=sys.stderr, flush=True)
+        return []
+    with open(committed_path) as f:
+        base = {r["name"]: r for r in json.load(f)["records"]}
+    regressions = []
+    print(f"# --- diff vs {committed_path} "
+          f"(flagging >{threshold:.0%} instances/sec regressions) ---",
+          file=sys.stderr, flush=True)
+    for r in fresh:
+        b = base.get(r["name"])
+        if (b is None or "instances_per_s" not in r
+                or "instances_per_s" not in b):
+            continue
+        new, old = float(r["instances_per_s"]), float(b["instances_per_s"])
+        ratio = new / old if old > 0 else float("inf")
+        regressed = ratio < 1.0 - threshold
+        tag = "REGRESSION" if regressed else "ok"
+        print(f"# {r['name']}: {old:.1f} -> {new:.1f} inst/s "
+              f"({ratio - 1.0:+.1%}) {tag}", file=sys.stderr, flush=True)
+        if regressed:
+            regressions.append(r["name"])
+    return regressions
 
 
 def main() -> None:
@@ -13,6 +54,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: synthetic,mnist,phases,"
                          "routing,ot,batched,sharded")
+    ap.add_argument("--diff", action="store_true",
+                    help="compare fresh batched/sharded results against "
+                         "the committed BENCH_*.json (no overwrite); exit "
+                         "1 on a >20%% instances/sec regression")
     args = ap.parse_args()
 
     from . import bench_synthetic, bench_mnist, bench_phases, \
@@ -27,7 +72,14 @@ def main() -> None:
         "batched": bench_batched.run,       # batched serving subsystem
         "sharded": bench_sharded.run,       # mesh-distributed dispatch
     }
+    if args.diff and args.only is None:
+        # diff mode only makes sense for the JSON-emitting families
+        args.only = "batched,sharded"
     only = set(args.only.split(",")) if args.only else set(benches)
+    if args.diff and not ({"batched", "sharded"} & only):
+        ap.error("--diff compares the JSON-emitting families; include "
+                 "batched and/or sharded in --only")
+    regressions: list = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if name not in only:
@@ -38,11 +90,26 @@ def main() -> None:
             # machine-readable perf trajectory: instances/sec, the
             # lockstep-waste metric (phases executed vs needed), and the
             # compaction occupancy curve, for future PRs to diff against
-            bench_batched.write_json("BENCH_batched.json")
+            if args.diff:
+                regressions += diff_records(bench_batched.RECORDS,
+                                            "BENCH_batched.json")
+            else:
+                bench_batched.write_json("BENCH_batched.json")
         if name == "sharded":
             # instances/sec vs device count + occupancy + mesh topology
             # (the bench re-execs itself under a forced 8-device CPU)
-            bench_sharded.write_json("BENCH_sharded.json")
+            if args.diff:
+                regressions += diff_records(bench_sharded.RECORDS,
+                                            "BENCH_sharded.json")
+            else:
+                bench_sharded.write_json("BENCH_sharded.json")
+    if args.diff:
+        if regressions:
+            print(f"# PERF REGRESSIONS ({len(regressions)}): "
+                  + ", ".join(regressions), file=sys.stderr, flush=True)
+            sys.exit(1)
+        print("# diff clean: no instances/sec regression beyond "
+              f"{DIFF_THRESHOLD:.0%}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -131,6 +131,31 @@ def main():
                   f"eps={r['eps']} wait={r['wait_s'] * 1e3:.1f}ms "
                   f"batch={r['batch_size']} devices={r['devices']}")
 
+    # 10. the unified solve() front door (core/api.py). Everything above —
+    #     lockstep batches, compaction, mesh dispatch, the serving layers —
+    #     routes through ONE entry point: a ProblemSpec (core/problem.py)
+    #     captures the paper's stepped-core contract (prepare -> prologue
+    #     -> init_state -> run_phases(k) -> converged -> epilogue, i.e.
+    #     Algorithm 1/2), and a DispatchPolicy picks the driver. The same
+    #     call solves a ragged list under any policy, with identical
+    #     results:
+    from repro.core import ASSIGNMENT, OT, DispatchPolicy, solve
+
+    ragged = [c for c, _, _ in insts]
+    for mode in ("lockstep", "compact", "mesh"):
+        pol = DispatchPolicy(mode=mode,
+                             mesh=mesh if mode == "mesh" else None)
+        outs10 = solve(ASSIGNMENT, ragged, eps_each, pol)
+        print(f"solve(ASSIGNMENT, policy={mode}): "
+              f"costs={[round(o['cost'], 4) for o in outs10[:3]]}...")
+    # pre-batched buckets dispatch through the same door (this is what
+    # OTService / AsyncOTScheduler call per bucket):
+    r10, st10 = solve(OT, {"c": cb, "nu": nub, "mu": mub}, eps_each,
+                      DispatchPolicy(mode="compact", chunk=4), sizes=sizes)
+    assert np.array_equal(np.asarray(r10.plan), np.asarray(res.plan))
+    print(f"solve(OT, bucket): dispatches={st10.dispatches} "
+          f"(identical to section 6's driver call)")
+
 
 if __name__ == "__main__":
     main()

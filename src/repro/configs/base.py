@@ -1,9 +1,8 @@
 """Architecture + shape configuration schema."""
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 
 @dataclass(frozen=True)

@@ -4,7 +4,9 @@ from . import (
     kimi_k2_1t_a32b, deepseek_moe_16b, seamless_m4t_medium,
     mamba2_2_7b, jamba_1_5_large_398b, llava_next_mistral_7b,
 )
-from .base import ArchConfig, ShapeConfig, SHAPES, SMOKE_SHAPES, shape_applicable
+from .base import (  # noqa: F401  (re-exported registry surface)
+    ArchConfig, ShapeConfig, SHAPES, SMOKE_SHAPES, shape_applicable,
+)
 
 ARCHS = {m.CONFIG.name: m.CONFIG for m in (
     qwen3_4b, codeqwen1_5_7b, llama3_2_3b, command_r_plus_104b,

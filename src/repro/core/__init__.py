@@ -2,6 +2,8 @@
 for assignment and optimal transport, integer-exact, jit-end-to-end."""
 from .pushrelabel import solve_assignment, solve_assignment_int, AssignmentResult
 from .transport import solve_ot, solve_ot_int, OTResult, northwest_corner
+from .problem import ASSIGNMENT, OT, AssignmentSpec, OTSpec, ProblemSpec
+from .api import DispatchPolicy, solve
 from .batched import (
     BatchedAssignmentResult,
     solve_assignment_batched,
@@ -24,6 +26,8 @@ from .costs import build_cost_matrix
 from .sinkhorn import sinkhorn
 
 __all__ = [
+    "ASSIGNMENT", "OT", "AssignmentSpec", "OTSpec", "ProblemSpec",
+    "DispatchPolicy", "solve",
     "solve_assignment", "solve_assignment_int", "AssignmentResult",
     "solve_ot", "solve_ot_int", "OTResult", "northwest_corner",
     "solve_assignment_batched", "solve_assignment_ragged",

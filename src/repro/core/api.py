@@ -1,0 +1,211 @@
+"""The unified solve() front door: one entry point, every dispatch path.
+
+``solve(spec, instances, eps, policy)`` routes any batch of assignment/OT
+work — a ragged list of instances or one pre-batched bucket — through a
+single code path to whichever driver the :class:`DispatchPolicy` selects:
+
+  * ``lockstep``   the PR-1 fixed-shape vmapped while_loop (one dispatch,
+                   every lane runs until the slowest converges);
+  * ``compact``    the convergence-compacting chunked-phase driver
+                   (core/compaction.py) — per-instance eps supported;
+  * ``mesh``       the mesh-distributed compacting driver
+                   (core/distributed.py), with ``placement`` choosing
+                   batch-axis sharding vs per-instance row/col matrix
+                   sharding ("auto" applies ``choose_placement``).
+
+Results are IDENTICAL across policies for the batch-sharded family
+(lockstep == compact == mesh/batch, bit for bit); mesh/matrix matches to
+reassociation ulps in the float epilogue (the documented shape caveat in
+core/distributed.py). The serving layers (``OTService``,
+``AsyncOTScheduler``) and the ragged ``solve_*_ragged`` wrappers all call
+this front door, so a new dispatch strategy lands in exactly one place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .compaction import DEFAULT_CHUNK, solve_compacting
+from .distributed import solve_mesh
+from .problem import ASSIGNMENT, OT  # noqa: F401  (re-exported: the
+#   front door and the specs it dispatches are one import site)
+
+_MODES = ("auto", "lockstep", "compact", "mesh")
+
+
+@dataclass(frozen=True)
+class DispatchPolicy:
+    """How a batch should be dispatched.
+
+    Args:
+      mode: "auto" (mesh when ``mesh`` is set, else compact), "lockstep",
+        "compact", or "mesh".
+      mesh: 1-D batch mesh (``launch.mesh.make_batch_mesh``); required
+        meaningfully only for mode="mesh" (None resolves the default
+        host mesh there).
+      placement: mesh-mode placement — "auto" | "batch" | "matrix".
+      chunk: k, phases per dispatch of the compacting drivers.
+      buckets: shape-bucket boundaries for ragged input (None -> the
+        core/batched.py defaults; oversized shapes mint ceil-pow2
+        buckets).
+      guaranteed: run at eps/3 for the paper's <= OPT + eps*m bound.
+    """
+    mode: str = "auto"
+    mesh: Any = None
+    placement: str = "auto"
+    chunk: Optional[int] = None
+    buckets: Optional[Tuple[int, ...]] = None
+    guaranteed: bool = False
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown dispatch mode {self.mode!r}; "
+                             f"expected one of {_MODES}")
+        if self.mode == "lockstep" and self.mesh is not None:
+            raise ValueError("mode='lockstep' cannot dispatch over a mesh "
+                             "— use mode='compact' or mode='mesh' (the "
+                             "distributed driver is the compacting driver)")
+
+    def resolved_mode(self) -> str:
+        if self.mode != "auto":
+            return self.mode
+        return "mesh" if self.mesh is not None else "compact"
+
+    @classmethod
+    def from_legacy(cls, compact: bool, mesh=None, *, chunk=None,
+                    buckets=None, guaranteed: bool = False,
+                    placement: str = "auto") -> "DispatchPolicy":
+        """Map the legacy ``compact=``/``mesh=`` keyword surface
+        (``solve_*_ragged``, ``OTService``) onto a policy — the ONE place
+        that mapping and its mesh-requires-compact rule live."""
+        if mesh is not None and not compact:
+            raise ValueError("mesh dispatch requires compact=True (the "
+                             "distributed driver is the compacting "
+                             "driver)")
+        mode = ("mesh" if mesh is not None
+                else ("compact" if compact else "lockstep"))
+        return cls(mode=mode, mesh=mesh, placement=placement, chunk=chunk,
+                   buckets=None if buckets is None else tuple(buckets),
+                   guaranteed=guaranteed)
+
+
+def dispatch(
+    spec,
+    inputs: Dict[str, Any],
+    eps,
+    *,
+    sizes=None,
+    policy: Optional[DispatchPolicy] = None,
+    keep_state: bool = False,
+    **prep_kw,
+):
+    """Solve ONE pre-batched bucket (dict of (B, ...) operands) under
+    ``policy``. Returns ``(result, stats)`` — ``stats`` is None for the
+    lockstep path (it has no chunk/occupancy accounting),
+    CompactionStats for compact, DistributedStats for mesh."""
+    policy = policy or DispatchPolicy()
+    mode = policy.resolved_mode()
+    if mode == "lockstep":
+        if keep_state:
+            # the lockstep path has no stats object to carry the
+            # pre-completion state; fail loudly like the other paths
+            raise ValueError("keep_state=True requires mode='compact' or "
+                             "mesh batch placement")
+        eps_u = np.unique(np.asarray(eps, np.float64))
+        if eps_u.size > 1:
+            raise ValueError("per-instance eps requires compact=True")
+        return spec.solve_lockstep(
+            inputs, float(eps_u[0]), sizes=sizes,
+            guaranteed=policy.guaranteed, **prep_kw), None
+    k = DEFAULT_CHUNK if policy.chunk is None else int(policy.chunk)
+    if mode == "compact":
+        return solve_compacting(
+            spec, inputs, eps, sizes=sizes, k=k,
+            guaranteed=policy.guaranteed, keep_state=keep_state, **prep_kw)
+    if mode == "mesh":
+        return solve_mesh(
+            spec, inputs, eps, policy.mesh, sizes=sizes, k=k,
+            guaranteed=policy.guaranteed, placement=policy.placement,
+            keep_state=keep_state, **prep_kw)
+    raise ValueError(f"unknown dispatch mode {mode!r}")
+
+
+def solve(
+    spec,
+    instances: Union[Sequence, Dict[str, Any]],
+    eps,
+    policy: Optional[DispatchPolicy] = None,
+    *,
+    sizes=None,
+    keep_state: bool = False,
+    **prep_kw,
+):
+    """The front door. Two input forms:
+
+    * ``instances`` is a DICT of pre-batched (B, ...) operands (``{"c":
+      ...}`` for ``ASSIGNMENT``, ``{"c": ..., "nu": ..., "mu": ...}`` for
+      ``OT``; ``sizes`` gives true shapes inside the padding): one bucket
+      is dispatched and ``(result, stats)`` returned — this is what the
+      serving layers call per bucket.
+
+    * ``instances`` is a ragged LIST (cost matrices for ``ASSIGNMENT``,
+      ``(c, nu, mu)`` triples for ``OT``): instances are grouped into
+      shape buckets (``policy.buckets``), padded, dispatched per bucket,
+      and a list of per-instance result dicts is returned in input order.
+      ``eps`` may be per-instance; under lockstep mode each bucket is
+      sub-grouped by eps value (lockstep bakes eps into the compiled
+      program), so mixed-accuracy sets work under EVERY policy.
+    """
+    policy = policy or DispatchPolicy()
+    if isinstance(instances, dict):
+        return dispatch(spec, instances, eps, sizes=sizes, policy=policy,
+                        keep_state=keep_state, **prep_kw)
+    if keep_state:
+        # the ragged path returns per-instance dicts, not (result, stats)
+        # — there is nowhere to surface the pre-completion state; fail
+        # loudly instead of silently dropping the flag
+        raise ValueError("keep_state=True requires the pre-batched dict "
+                         "input form (it is returned on the stats)")
+    return _solve_ragged(spec, list(instances), eps, policy, **prep_kw)
+
+
+def _solve_ragged(spec, instances: list, eps,
+                  policy: DispatchPolicy, **prep_kw) -> List[dict]:
+    from .batched import DEFAULT_BUCKETS, bucket_instances
+
+    shapes = [spec.instance_shape(x) for x in instances]
+    eps_arr = np.broadcast_to(np.asarray(eps, np.float64),
+                              (len(instances),))
+    buckets = (DEFAULT_BUCKETS if policy.buckets is None
+               else tuple(policy.buckets))
+    lockstep = policy.resolved_mode() == "lockstep"
+    results: List[Optional[dict]] = [None] * len(instances)
+    for grp in bucket_instances(shapes, buckets):
+        if lockstep:
+            # lockstep compiles eps into the program: sub-group the
+            # bucket by eps value so mixed-accuracy sets still dispatch
+            by_eps: Dict[float, List[int]] = {}
+            for i in grp.indices:
+                by_eps.setdefault(float(eps_arr[i]), []).append(i)
+            subgroups = [by_eps[e] for e in sorted(by_eps)]
+        else:
+            subgroups = [grp.indices]
+        for idx in subgroups:
+            inputs = spec.pad_group([instances[i] for i in idx], grp.key)
+            sz = np.asarray([shapes[i] for i in idx], np.int32)
+            r, stats = dispatch(spec, inputs, eps_arr[idx], sizes=sz,
+                                policy=policy, **prep_kw)
+            # one device->host fetch per result array, not per instance
+            host = spec.fetch(r)
+            for j, i in enumerate(idx):
+                out = spec.unpack(host, j, shapes[i])
+                out["batch_size"] = len(idx)
+                out["bucket"] = grp.key
+                if stats is not None:
+                    out["dispatches"] = stats.dispatches
+                    if hasattr(stats, "devices"):
+                        out["devices"] = stats.devices
+                results[i] = out
+    return results

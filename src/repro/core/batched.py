@@ -13,7 +13,8 @@ padded bucket shape and never binds in practice).
 
 Ragged batches are handled by a padding/bucketing layer:
 
-  * instances are padded up to a shape bucket (next power-of-two-ish size);
+  * instances are padded up to a shape bucket (next power-of-two-ish size;
+    shapes beyond the bucket table mint a ceil-pow2 bucket on the fly);
   * padded supply rows get zero mass / are masked out of the free set B';
   * padded demand columns get zero capacity (OT) or a cost so large that no
     dual sum can ever make them admissible (assignment);
@@ -22,12 +23,11 @@ so a padded instance walks the same admissible subgraph, with the same
 deterministic hash keys (keys depend only on *global* (row, col, salt), not
 on the matrix shape), as its unpadded original.
 
-The ragged front ends default to the convergence-compacting driver
-(core/compaction.py, ``compact=True``): each bucket is solved as a sequence
-of k-phase dispatches with converged instances retired between dispatches,
-rather than one lockstep loop that runs every instance until the slowest
-converges. Results are identical either way; the lockstep fixed-shape entry
-points below remain the single-dispatch building blocks.
+The ragged front ends are thin wrappers over the unified dispatch front
+door (``core/api.solve``): ``compact``/``mesh`` arguments map onto a
+:class:`~repro.core.api.DispatchPolicy`, and the lockstep fixed-shape
+entry points below remain the single-dispatch building blocks the
+``ASSIGNMENT``/``OT`` specs bind to.
 """
 from __future__ import annotations
 
@@ -38,6 +38,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .problem import (
+    _mask_ot_inputs,
+    _sizes_arrays,
+    _theta_array,
+    pow2_at_least,
+)
 from .pushrelabel import assignment_pipeline
 from .transport import OTResult, ot_pipeline
 
@@ -45,23 +51,13 @@ DEFAULT_BUCKETS: tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
 
 def next_bucket(k: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
-    """Smallest bucket >= k (k itself if it exceeds every bucket)."""
+    """Smallest bucket >= k. Shapes beyond the biggest table entry mint a
+    ceil-power-of-two bucket instead of a per-shape exact bucket, so a
+    long tail of huge instances still shares compiled programs."""
     for b in buckets:
         if b >= k:
             return b
-    return int(k)
-
-
-def _sizes_arrays(sizes, b, m, n):
-    """Host-side (B,) m_valid / n_valid arrays (full shape when sizes=None)."""
-    if sizes is None:
-        return (np.full((b,), m, np.int32), np.full((b,), n, np.int32))
-    sizes = np.asarray(sizes, np.int32)
-    if sizes.shape != (b, 2):
-        raise ValueError(f"sizes must be ({b}, 2), got {sizes.shape}")
-    if (sizes[:, 0] > m).any() or (sizes[:, 1] > n).any():
-        raise ValueError("instance size exceeds padded bucket shape")
-    return sizes[:, 0].copy(), sizes[:, 1].copy()
+    return pow2_at_least(int(k))
 
 
 # --------------------------------------------------------------------------
@@ -132,42 +128,6 @@ def solve_assignment_batched(
 # General OT
 # --------------------------------------------------------------------------
 
-def _theta_array(sizes_m, sizes_n, eps, theta) -> np.ndarray:
-    """Per-instance theta = 4*max(m, n)/eps, computed on host in float64 and
-    cast to f32 so it is bit-identical to the unbatched solve_ot default.
-    ``eps`` may be a scalar or a (B,) array (compacting driver)."""
-    if theta is not None:
-        return np.broadcast_to(
-            np.asarray(theta, np.float32), sizes_m.shape
-        ).copy()
-    eps = np.asarray(eps, np.float64)
-    return (4.0 * np.maximum(sizes_m, sizes_n) / eps).astype(np.float32)
-
-
-def _mask_ot_inputs(c, nu, mu, m_valid, n_valid, theta, eps):
-    """Zero mass/cost outside each instance's block and compute the
-    per-instance termination thresholds in host float64 from the masked
-    masses — identical to the unbatched solve_ot (the on-device f32
-    product rounds the wrong way for some (eps, total_mass) pairs).
-    Shared by the lockstep and compacting paths so the two can never
-    diverge on threshold/masking semantics. ``eps`` scalar or (B,)."""
-    b, m, n = c.shape
-    row_ok = np.arange(m)[None, :] < m_valid[:, None]
-    col_ok = np.arange(n)[None, :] < n_valid[:, None]
-    eps_b = np.broadcast_to(np.asarray(eps, np.float64), (b,))
-    nu_h = np.where(row_ok, np.asarray(nu, np.float32), np.float32(0.0))
-    # vectorized ot_termination_threshold: f32 floor(nu * theta) per entry
-    # (the device rounding), f64 row sums, f64 eps product, truncation
-    s_rows = np.floor(nu_h * np.asarray(theta, np.float32)[:, None])
-    thr = (eps_b * s_rows.sum(axis=1, dtype=np.float64)).astype(np.int64) \
-        .astype(np.int32)
-    mask = jnp.asarray(row_ok[:, :, None] & col_ok[:, None, :])
-    c = jnp.where(mask, c, 0.0)
-    nu = jnp.where(jnp.asarray(row_ok), nu, 0.0)
-    mu = jnp.where(jnp.asarray(col_ok), mu, 0.0)
-    return c, nu, mu, thr
-
-
 @partial(jax.jit, static_argnames=("eps",))
 def _solve_ot_batched(c, nu, mu, theta, threshold, eps: float) -> OTResult:
     return jax.vmap(
@@ -228,7 +188,9 @@ def bucket_instances(shapes, buckets: Sequence[int] = DEFAULT_BUCKETS):
     """Group instance shapes [(m_i, n_i)] into shape buckets.
 
     Returns a list of _Bucketed groups; every instance appears in exactly
-    one group and ``key = (M, N)`` is the padded dispatch shape."""
+    one group and ``key = (M, N)`` is the padded dispatch shape. Shapes
+    larger than the biggest bucket get ceil-pow2 minted buckets (see
+    ``next_bucket``)."""
     groups: dict = {}
     for i, (mi, ni) in enumerate(shapes):
         key = (next_bucket(int(mi), buckets), next_bucket(int(ni), buckets))
@@ -250,6 +212,15 @@ def pad_stack(arrays, shape) -> jnp.ndarray:
     return jnp.asarray(np.stack(out))
 
 
+def _ragged_policy(compact: bool, chunk, mesh, buckets, guaranteed: bool):
+    """Map the legacy ragged keyword surface onto a DispatchPolicy."""
+    from .api import DispatchPolicy
+
+    return DispatchPolicy.from_legacy(compact, mesh, chunk=chunk,
+                                      buckets=buckets,
+                                      guaranteed=guaranteed)
+
+
 def solve_ot_ragged(
     instances,
     eps,
@@ -268,70 +239,23 @@ def solve_ot_ragged(
     compacting driver (core/compaction.py): converged instances retire
     between k-phase dispatches instead of riding lockstep until the slowest
     one finishes, and ``eps`` may be a per-instance sequence. ``compact=
-    False`` restores the PR-1 lockstep dispatch (results are identical).
-    Tradeoff: compaction wins on convergence-skewed buckets (2-4x on the
-    in-repo bench) but its per-chunk converged-mask sync can lose ~20-50%
-    on tiny or convergence-uniform buckets — pass ``compact=False`` there.
+    False`` restores the PR-1 lockstep dispatch (results are identical;
+    mixed-eps sets are sub-grouped by eps value per bucket). Tradeoff:
+    compaction wins on convergence-skewed buckets (2-4x on the in-repo
+    bench) but its per-chunk converged-mask sync can lose ~20-50% on tiny
+    or convergence-uniform buckets — pass ``compact=False`` there.
 
     ``mesh`` (a 1-D batch mesh, see ``launch.mesh.make_batch_mesh``)
     dispatches each bucket through the mesh-distributed compacting driver
     (core/distributed.py) — same results, batch axis sharded across
-    devices. Requires ``compact=True``."""
-    if mesh is not None and not compact:
-        raise ValueError("mesh dispatch requires compact=True (the "
-                         "distributed driver is the compacting driver)")
-    shapes = [tuple(np.asarray(c).shape) for c, _, _ in instances]
-    eps_arr = np.broadcast_to(np.asarray(eps, np.float64),
-                              (len(instances),))
-    if not compact and np.unique(eps_arr).size > 1:
-        raise ValueError("per-instance eps requires compact=True")
-    results: list = [None] * len(instances)
-    for grp in bucket_instances(shapes, buckets):
-        mb, nb = grp.key
-        c = pad_stack([instances[i][0] for i in grp.indices], (mb, nb))
-        nu = pad_stack([instances[i][1] for i in grp.indices], (mb,))
-        mu = pad_stack([instances[i][2] for i in grp.indices], (nb,))
-        stats = None
-        if mesh is not None:
-            from .distributed import solve_ot_distributed
+    devices. Requires ``compact=True``.
 
-            kw = {} if chunk is None else {"k": chunk}
-            r, stats = solve_ot_distributed(
-                c, nu, mu, eps_arr[grp.indices], mesh, sizes=grp.sizes,
-                guaranteed=guaranteed, **kw
-            )
-        elif compact:
-            from .compaction import solve_ot_batched_compacting
+    Thin wrapper over ``core/api.solve(OT, ...)``."""
+    from .api import solve
+    from .problem import OT
 
-            kw = {} if chunk is None else {"k": chunk}
-            r, stats = solve_ot_batched_compacting(
-                c, nu, mu, eps_arr[grp.indices], sizes=grp.sizes,
-                guaranteed=guaranteed, **kw
-            )
-        else:
-            r = solve_ot_batched(c, nu, mu, float(eps_arr[0]),
-                                 sizes=grp.sizes, guaranteed=guaranteed)
-        # one device->host fetch per result array, not per instance
-        plan, cost, phases, rounds, theta = (
-            np.asarray(r.plan), np.asarray(r.cost), np.asarray(r.phases),
-            np.asarray(r.rounds), np.asarray(r.theta),
-        )
-        for k, i in enumerate(grp.indices):
-            mi, ni = shapes[i]
-            results[i] = {
-                "plan": plan[k, :mi, :ni],
-                "cost": float(cost[k]),
-                "phases": int(phases[k]),
-                "rounds": int(rounds[k]),
-                "theta": float(theta[k]),
-                "batch_size": len(grp.indices),
-                "bucket": grp.key,
-            }
-            if stats is not None:
-                results[i]["dispatches"] = stats.dispatches
-                if hasattr(stats, "devices"):
-                    results[i]["devices"] = stats.devices
-    return results
+    return solve(OT, instances, eps,
+                 _ragged_policy(compact, chunk, mesh, buckets, guaranteed))
 
 
 def solve_assignment_ragged(
@@ -346,56 +270,10 @@ def solve_assignment_ragged(
 ):
     """Solve a ragged list of assignment cost matrices via bucketed batched
     dispatch. Returns per-instance dicts (in input order). ``compact`` and
-    ``mesh`` as in ``solve_ot_ragged``."""
-    if mesh is not None and not compact:
-        raise ValueError("mesh dispatch requires compact=True (the "
-                         "distributed driver is the compacting driver)")
-    shapes = [tuple(np.asarray(c).shape) for c in cs]
-    eps_arr = np.broadcast_to(np.asarray(eps, np.float64), (len(cs),))
-    if not compact and np.unique(eps_arr).size > 1:
-        raise ValueError("per-instance eps requires compact=True")
-    results: list = [None] * len(cs)
-    for grp in bucket_instances(shapes, buckets):
-        c = pad_stack([cs[i] for i in grp.indices], grp.key)
-        stats = None
-        if mesh is not None:
-            from .distributed import solve_assignment_distributed
+    ``mesh`` as in ``solve_ot_ragged``. Thin wrapper over
+    ``core/api.solve(ASSIGNMENT, ...)``."""
+    from .api import solve
+    from .problem import ASSIGNMENT
 
-            kw = {} if chunk is None else {"k": chunk}
-            r, stats = solve_assignment_distributed(
-                c, eps_arr[grp.indices], mesh, sizes=grp.sizes,
-                guaranteed=guaranteed, **kw
-            )
-        elif compact:
-            from .compaction import solve_assignment_batched_compacting
-
-            kw = {} if chunk is None else {"k": chunk}
-            r, stats = solve_assignment_batched_compacting(
-                c, eps_arr[grp.indices], sizes=grp.sizes,
-                guaranteed=guaranteed, **kw
-            )
-        else:
-            r = solve_assignment_batched(c, float(eps_arr[0]),
-                                         sizes=grp.sizes,
-                                         guaranteed=guaranteed)
-        matching, cost, phases, rounds, y_b, y_a = (
-            np.asarray(r.matching), np.asarray(r.cost), np.asarray(r.phases),
-            np.asarray(r.rounds), np.asarray(r.y_b), np.asarray(r.y_a),
-        )
-        for k, i in enumerate(grp.indices):
-            mi, ni = shapes[i]
-            results[i] = {
-                "matching": matching[k, :mi],
-                "cost": float(cost[k]),
-                "phases": int(phases[k]),
-                "rounds": int(rounds[k]),
-                "y_b": y_b[k, :mi],
-                "y_a": y_a[k, :ni],
-                "batch_size": len(grp.indices),
-                "bucket": grp.key,
-            }
-            if stats is not None:
-                results[i]["dispatches"] = stats.dispatches
-                if hasattr(stats, "devices"):
-                    results[i]["devices"] = stats.devices
-    return results
+    return solve(ASSIGNMENT, cs, eps,
+                 _ragged_policy(compact, chunk, mesh, buckets, guaranteed))

@@ -1,4 +1,5 @@
-"""Convergence-compacting chunked-phase batch driver.
+"""Convergence-compacting chunked-phase batch driver, generic over a
+:class:`~repro.core.problem.ProblemSpec`.
 
 The lockstep batched solvers (core/batched.py) vmap one unbounded
 ``lax.while_loop`` over the batch, so every instance in a bucket burns
@@ -8,7 +9,7 @@ no-ops. This driver recovers the paper's per-instance O(log n / eps^2)
 parallel bound for a fleet of instances by retiring converged work early:
 
   1. dispatch ``k`` phases to the whole bucket via the resumable stepped
-     cores (``run_assignment_phases`` / ``run_ot_phases``);
+     cores (``spec.run_phases``);
   2. fetch the (B,) converged mask (one scalar-per-instance device->host
      sync per chunk — the phase loops themselves never sync);
   3. once occupancy has halved, scatter the bucket's states into a full-B
@@ -17,6 +18,12 @@ parallel bound for a fleet of instances by retiring converged work early:
      predicate is already false, so they add zero loop iterations);
   4. when everyone has terminated, run the completion/cost epilogue ONCE,
      in bulk, over the full-B buffer of retired states.
+
+The driver is written once: ``solve_compacting(spec, ...)`` takes any
+ProblemSpec (``ASSIGNMENT`` or ``OT`` from core/problem.py) and never
+mentions either problem by name. The public per-problem entry points
+(``solve_assignment_batched_compacting`` / ``solve_ot_batched_compacting``)
+are thin spec-binding wrappers with their original signatures.
 
 Every dispatched program is keyed by (bucket shape, k, batch bucket), so
 the power-of-two descent B -> B/2 -> ... compiles each size once and
@@ -36,35 +43,14 @@ what compaction absorbs).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, List, NamedTuple, Optional, Tuple
+from functools import lru_cache
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .batched import (
-    BatchedAssignmentResult,
-    _mask_ot_inputs,
-    _sizes_arrays,
-    _theta_array,
-)
-from .pushrelabel import (
-    _max_phases,
-    assignment_converged,
-    assignment_epilogue,
-    assignment_prologue,
-    init_assignment_state,
-    run_assignment_phases,
-)
-from .transport import (
-    init_ot_state,
-    ot_converged,
-    ot_epilogue,
-    ot_phase_cap,
-    ot_prologue,
-    run_ot_phases,
-)
+from .problem import ASSIGNMENT, OT, pow2_at_least
 
 DEFAULT_CHUNK = 8
 
@@ -81,9 +67,9 @@ class CompactionStats:
     slot_phases: int = 0       # phase-slots actually executed (all lanes)
     phases_needed: int = 0     # sum of per-instance converged phase counts
     lockstep_slot_phases: int = 0  # batch * max(phases): what lockstep burns
-    # final integer ASSIGNMENT state (trimmed to the real batch), stashed
-    # only when the solver is called with ``keep_state=True`` so the
-    # feasibility certificates (core/feasibility.py) can run on the exact
+    # final integer solver state (trimmed to the real batch), stashed only
+    # when the solver is called with ``keep_state=True`` so the feasibility
+    # certificates (core/feasibility.py) can run on the exact
     # pre-completion state (BatchedAssignmentResult carries no state; the
     # OT result's ``state`` field already does). Not serialized.
     final_state: Optional[Any] = None
@@ -99,14 +85,6 @@ class CompactionStats:
             "phases_needed": self.phases_needed,
             "lockstep_slot_phases": self.lockstep_slot_phases,
         }
-
-
-def pow2_at_least(x: int) -> int:
-    """Smallest power of two >= max(x, 1)."""
-    p = 1
-    while p < x:
-        p *= 2
-    return p
 
 
 @jax.jit
@@ -181,130 +159,100 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     return buf
 
 
-def _eps_array(eps, b: int, guaranteed: bool) -> np.ndarray:
-    arr = np.broadcast_to(np.asarray(eps, np.float64), (b,)).copy()
-    if guaranteed:
-        arr = arr / 3.0
-    if (arr <= 0).any():
-        raise ValueError("eps must be positive")
-    return arr
+# --------------------------------------------------------------------------
+# One jitted function family per (spec, k) — shared with the collapsed
+# single-device tail of the distributed driver.
+# --------------------------------------------------------------------------
 
-
-class PreparedAssignment(NamedTuple):
-    """Host-side prep shared by the single-device compacting driver and the
-    mesh-distributed driver (core/distributed.py): padded inputs, per-lane
-    host-float64 thresholds/caps, and the dispatched (power-of-two) batch."""
-    c: jnp.ndarray            # (bp, M, N) padded costs
-    eps_arr: np.ndarray       # (bp,) float64 per-lane eps
-    m_valid: np.ndarray       # (bp,) int32
-    n_valid: np.ndarray       # (bp,) int32
-    threshold: np.ndarray     # (bp,) int32
-    phase_cap: np.ndarray     # (bp,) int32
-    bp: int                   # dispatched batch (power of two >= min_batch)
-
-
-def prepare_assignment_batch(c, eps, sizes, guaranteed: bool,
-                             min_batch: int = 1) -> PreparedAssignment:
-    """Masking/threshold/padding half of the compacting assignment solve.
-
-    Pads the batch to ``max(pow2_at_least(B), min_batch)`` with
-    born-converged empty instances (zero valid rows -> free supply 0 <=
-    threshold 0): the distributed driver passes ``min_batch = device
-    count`` so the batch axis starts divisible by the mesh. Thresholds are
-    host float64, identical to the unbatched ``int(eps * m)``."""
-    b, m, n = c.shape
-    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
-    eps_arr = _eps_array(eps, b, guaranteed)
-    threshold = np.asarray(
-        [int(e * int(mi)) for e, mi in zip(eps_arr, m_valid)], np.int32
+@lru_cache(maxsize=None)
+def spec_fns(spec, k: int):
+    """(prologue, init, chunk, conv, epilogue): the spec's per-instance
+    stepped-core functions vmapped over the batch and jitted. The chunk
+    dispatch donates the state buffers (one copy of solver state on
+    device, not two)."""
+    prologue = jax.jit(lambda ops: jax.vmap(spec.prologue)(ops))
+    init = jax.jit(lambda data, ctx: jax.vmap(spec.init_state)(data, ctx))
+    chunk = jax.jit(
+        lambda data, state: jax.vmap(
+            lambda d, s: spec.run_phases(d, s, k))(data, state),
+        donate_argnums=(1,),
     )
-    phase_cap = np.asarray([_max_phases(float(e), m) for e in eps_arr],
-                           np.int32)
-    bp = max(pow2_at_least(b), pow2_at_least(min_batch))
-    if bp > b:
-        pad = bp - b
-        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
-        m_valid = np.concatenate([m_valid, np.zeros((pad,), np.int32)])
-        n_valid = np.concatenate([n_valid, np.zeros((pad,), np.int32)])
-        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
-        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
-        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
-    return PreparedAssignment(c, eps_arr, m_valid, n_valid, threshold,
-                              phase_cap, bp)
+    conv = jax.jit(
+        lambda data, state: jax.vmap(spec.converged)(data, state))
+    epilogue = jax.jit(
+        lambda ctx, state: jax.vmap(spec.epilogue)(ctx, state))
+    return prologue, init, chunk, conv, epilogue
 
 
-class PreparedOT(NamedTuple):
-    """OT counterpart of :class:`PreparedAssignment`."""
-    c: jnp.ndarray            # (bp, M, N) masked+padded costs
-    nu: jnp.ndarray           # (bp, M)
-    mu: jnp.ndarray           # (bp, N)
-    eps_arr: np.ndarray       # (bp,) float64
-    th: np.ndarray            # (bp,) float32 per-lane theta
-    threshold: np.ndarray     # (bp,) int32 host-float64 termination
-    phase_cap: np.ndarray     # (bp,) int32
-    bp: int
+def max_chunk_dispatches(phase_cap: np.ndarray, k: int) -> int:
+    """Upper bound on k-phase dispatches (phase caps bound every lane)."""
+    return -(-int(phase_cap.max(initial=1)) // max(k, 1)) + 2
 
 
-def prepare_ot_batch(c, nu, mu, eps, sizes, theta, guaranteed: bool,
-                     min_batch: int = 1) -> PreparedOT:
-    """Masking/threshold/padding half of the compacting OT solve; shares the
-    padding-mask + host-float64 threshold code with the lockstep path
-    (``_mask_ot_inputs``) so the code paths can never diverge. Batch padding
-    is born-converged (zero mass -> free supply 0 <= threshold 0)."""
-    b, m, n = c.shape
-    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
-    eps_arr = _eps_array(eps, b, guaranteed)
-    th = _theta_array(m_valid, n_valid, eps_arr, theta)
-    phase_cap = np.asarray([ot_phase_cap(float(e)) for e in eps_arr],
-                           np.int32)
-    c, nu, mu, threshold = _mask_ot_inputs(c, nu, mu, m_valid, n_valid,
-                                           th, eps_arr)
-    bp = max(pow2_at_least(b), pow2_at_least(min_batch))
-    if bp > b:
-        pad = bp - b
-        c = jnp.concatenate([c, jnp.zeros((pad, m, n), jnp.float32)])
-        nu = jnp.concatenate([nu, jnp.zeros((pad, m), jnp.float32)])
-        mu = jnp.concatenate([mu, jnp.zeros((pad, n), jnp.float32)])
-        th = np.concatenate([th, np.ones((pad,), np.float32)])
-        threshold = np.concatenate([threshold, np.zeros((pad,), np.int32)])
-        phase_cap = np.concatenate([phase_cap, np.zeros((pad,), np.int32)])
-        eps_arr = np.concatenate([eps_arr, np.full((pad,), eps_arr[0])])
-    return PreparedOT(c, nu, mu, eps_arr, th, threshold, phase_cap, bp)
+def solve_compacting(
+    spec,
+    inputs,
+    eps,
+    *,
+    sizes=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+    keep_state: bool = False,
+    **prep_kw,
+):
+    """The generic compacting driver: solve a (B, M, N) batch of ``spec``
+    instances with convergence compaction.
+
+    Args:
+      spec: a ProblemSpec (``ASSIGNMENT`` or ``OT`` from core/problem.py).
+      inputs: dict of batched operands (``{"c": ...}`` for assignment,
+        ``{"c": ..., "nu": ..., "mu": ...}`` for OT).
+      eps: scalar, or (B,) per-instance array (mixed-accuracy batch — the
+        lockstep path cannot express this).
+      k: phases per dispatch; any value yields identical results.
+      keep_state: stash the final pre-completion integer state on the
+        returned stats (``final_state``) for feasibility certificates;
+        off by default so serving paths don't retain an extra state copy.
+      prep_kw: spec-specific prep options (OT: ``theta``).
+
+    Returns ``(result, CompactionStats)``; every result leaf is
+    bit-identical per instance to the lockstep path (and to the unbatched
+    solver) for a shared scalar eps.
+    """
+    inputs = spec.canonicalize(inputs)
+    b, m, n = spec.batch_shape(inputs)
+    if b == 0:
+        return (spec.empty_result(m, n),
+                CompactionStats(batch=0, dispatched_batch=0, chunk=k))
+    # Pad the batch to a power of two with born-converged empty instances,
+    # so the descent B -> B/2 -> ... visits only power-of-two shapes.
+    p = spec.prepare(inputs, eps, sizes=sizes, guaranteed=guaranteed,
+                     **prep_kw)
+    prologue, init, chunk, conv, epilogue = spec_fns(spec, k)
+    ops = {kk: jnp.asarray(v) for kk, v in p.ops.items()}
+    data, ctx = prologue(ops)
+    # epilogue operands the prologue does not transform are taken straight
+    # from ops (outside the jit), not round-tripped through it — a
+    # pass-through output would materialize a second device copy of the
+    # (bp, M, N) operands
+    ctx = {**ctx, **{kk: ops[kk] for kk in spec.ctx_ops}}
+    state0 = init(data, ctx)
+    stats = CompactionStats(batch=b, dispatched_batch=p.bp, chunk=k)
+    final = _drive(data, state0, chunk, conv,
+                   max_chunk_dispatches(p.phase_cap, k), stats)
+    r = epilogue(ctx, final)
+
+    phases = np.asarray(final.phases[:b], np.int64)
+    stats.phases_needed = int(phases.sum())
+    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
+    if keep_state:
+        stats.final_state = jax.tree_util.tree_map(lambda a: a[:b], final)
+    return spec.trim(r, b), stats
 
 
 # --------------------------------------------------------------------------
-# Assignment
+# Spec-binding wrappers (original public entry points, unchanged contracts)
 # --------------------------------------------------------------------------
-
-@jax.jit
-def _assign_prologue_b(c, eps, m_valid, n_valid):
-    return jax.vmap(assignment_prologue)(c, eps, m_valid, n_valid)
-
-
-@partial(jax.jit, static_argnames=("k",), donate_argnums=(1,))
-def _assign_chunk(data, state, k: int):
-    return jax.vmap(
-        lambda d, s: run_assignment_phases(
-            d["c_int"], s, d["threshold"], d["phase_cap"], k,
-            m_valid=d["m_valid"],
-        )
-    )(data, state)
-
-
-@jax.jit
-def _assign_conv(data, state):
-    return jax.vmap(
-        lambda d, s: assignment_converged(
-            s, d["threshold"], d["phase_cap"], m_valid=d["m_valid"]
-        )
-    )(data, state)
-
-
-@jax.jit
-def _assign_epilogue_b(cm, scale, state, eps, row_ok, col_ok):
-    return jax.vmap(assignment_epilogue)(cm, scale, state, eps,
-                                         row_ok, col_ok)
-
 
 def solve_assignment_batched_compacting(
     c: jnp.ndarray,
@@ -315,106 +263,11 @@ def solve_assignment_batched_compacting(
     guaranteed: bool = False,
     keep_state: bool = False,
 ):
-    """Compacting counterpart of ``solve_assignment_batched``.
-
-    Args:
-      c: (B, M, N) padded costs, as in the lockstep path.
-      eps: scalar, or (B,) per-instance array (mixed-accuracy batch — the
-        lockstep path cannot express this).
-      k: phases per dispatch; any value yields identical results.
-      keep_state: stash the final pre-completion integer state on the
-        returned stats (``final_state``) for feasibility certificates;
-        off by default so serving paths don't retain an extra state copy.
-
-    Returns ``(BatchedAssignmentResult, CompactionStats)``; every result
-    leaf is bit-identical per instance to the lockstep path (and to the
-    unbatched solver) for a shared scalar eps.
-    """
-    c = jnp.asarray(c, jnp.float32)
-    if c.ndim != 3:
-        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
-    b, m, n = c.shape
-    if b == 0:
-        z = lambda *s: jnp.zeros(s, jnp.float32)
-        out = BatchedAssignmentResult(
-            matching=jnp.zeros((0, m), jnp.int32), cost=z(0),
-            y_b=z(0, m), y_a=z(0, n),
-            phases=jnp.zeros((0,), jnp.int32),
-            rounds=jnp.zeros((0,), jnp.int32),
-            matched_before_completion=jnp.zeros((0,), jnp.int32),
-        )
-        return out, CompactionStats(batch=0, dispatched_batch=0, chunk=k)
-    # Pad the batch to a power of two with born-converged empty instances,
-    # so the descent B -> B/2 -> ... visits only power-of-two shapes.
-    p = prepare_assignment_batch(c, eps, sizes, guaranteed)
-    c, eps_arr, bp = p.c, p.eps_arr, p.bp
-    threshold, phase_cap = p.threshold, p.phase_cap
-
-    eps_j = jnp.asarray(eps_arr, jnp.float32)
-    mv_j = jnp.asarray(p.m_valid)
-    nv_j = jnp.asarray(p.n_valid)
-    cm, c_int, scale, row_ok, col_ok = _assign_prologue_b(c, eps_j, mv_j,
-                                                          nv_j)
-    data = {
-        "c_int": c_int,
-        "threshold": jnp.asarray(threshold),
-        "phase_cap": jnp.asarray(phase_cap),
-        "m_valid": mv_j,
-    }
-    state0 = jax.vmap(lambda _: init_assignment_state(m, n))(
-        jnp.zeros((bp,))
-    )
-    stats = CompactionStats(batch=b, dispatched_batch=bp, chunk=k)
-    max_chunks = -(-int(phase_cap.max(initial=1)) // max(k, 1)) + 2
-    final = _drive(data, state0, partial(_assign_chunk, k=k), _assign_conv,
-                   max_chunks, stats)
-    r = _assign_epilogue_b(cm, scale, final, eps_j, row_ok, col_ok)
-
-    phases = np.asarray(final.phases[:b], np.int64)
-    stats.phases_needed = int(phases.sum())
-    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
-    if keep_state:
-        stats.final_state = jax.tree_util.tree_map(lambda a: a[:b], final)
-    out = BatchedAssignmentResult(
-        matching=r.matching[:b],
-        cost=r.cost[:b],
-        y_b=r.y_b[:b],
-        y_a=r.y_a[:b],
-        phases=r.phases[:b],
-        rounds=r.rounds[:b],
-        matched_before_completion=r.matched_before_completion[:b],
-    )
-    return out, stats
-
-
-# --------------------------------------------------------------------------
-# General OT
-# --------------------------------------------------------------------------
-
-@jax.jit
-def _ot_prologue_b(c, nu, mu, theta, eps):
-    return jax.vmap(ot_prologue)(c, nu, mu, theta, eps)
-
-
-@partial(jax.jit, static_argnames=("k", "max_rounds"), donate_argnums=(1,))
-def _ot_chunk(data, state, k: int, max_rounds: int):
-    return jax.vmap(
-        lambda d, s: run_ot_phases(d["c_int"], s, d["threshold"],
-                                   d["phase_cap"], k, max_rounds)
-    )(data, state)
-
-
-@jax.jit
-def _ot_conv(data, state):
-    return jax.vmap(
-        lambda d, s: ot_converged(s, d["threshold"], d["phase_cap"])
-    )(data, state)
-
-
-@jax.jit
-def _ot_epilogue_b(c, nu, mu, theta, eps, scale, s_int, d_int, state):
-    return jax.vmap(ot_epilogue)(c, nu, mu, theta, eps, scale, s_int,
-                                 d_int, state)
+    """Compacting counterpart of ``solve_assignment_batched``; binds
+    ``ASSIGNMENT`` to :func:`solve_compacting` (see there for the
+    contract). Returns ``(BatchedAssignmentResult, CompactionStats)``."""
+    return solve_compacting(ASSIGNMENT, {"c": c}, eps, sizes=sizes, k=k,
+                            guaranteed=guaranteed, keep_state=keep_state)
 
 
 def solve_ot_batched_compacting(
@@ -428,58 +281,11 @@ def solve_ot_batched_compacting(
     k: int = DEFAULT_CHUNK,
     guaranteed: bool = False,
 ):
-    """Compacting counterpart of ``solve_ot_batched``.
-
-    Same contract as the lockstep path ((B, M, N) costs, (B, M)/(B, N)
-    masses, padding zeroed from ``sizes``), plus per-instance ``eps``
-    support. Returns ``(OTResult with leading batch axes, CompactionStats)``.
-    """
-    c = jnp.asarray(c, jnp.float32)
-    nu = jnp.asarray(nu, jnp.float32)
-    mu = jnp.asarray(mu, jnp.float32)
-    if c.ndim != 3:
-        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
-    b, m, n = c.shape
-    if b == 0:
-        from .transport import OTResult, OTState
-
-        zf = lambda *s: jnp.zeros(s, jnp.float32)
-        zi = lambda *s: jnp.zeros(s, jnp.int32)
-        out = OTResult(
-            plan=zf(0, m, n), cost=zf(0), y_b=zf(0, m), y_a=zf(0, n),
-            phases=zi(0), rounds=zi(0),
-            state=OTState(y_b=zi(0, m), ya_hi=zi(0, n), free_b=zi(0, m),
-                          free_a=zi(0, n), f_hi=zi(0, m, n),
-                          f_lo=zi(0, m, n), phases=zi(0), rounds=zi(0)),
-            theta=zf(0), s_int=zi(0, m), d_int=zi(0, n),
-        )
-        return out, CompactionStats(batch=0, dispatched_batch=0, chunk=k)
-    # Padding masks + host-float64 thresholds shared with the lockstep
-    # path (so the two can never diverge), power-of-two batch padding with
-    # born-converged empty instances.
-    p = prepare_ot_batch(c, nu, mu, eps, sizes, theta, guaranteed)
-    c, nu, mu, eps_arr, bp = p.c, p.nu, p.mu, p.eps_arr, p.bp
-    th, threshold, phase_cap = p.th, p.threshold, p.phase_cap
-
-    eps_j = jnp.asarray(eps_arr, jnp.float32)
-    th_j = jnp.asarray(th)
-    c_int, s_int, d_int, scale = _ot_prologue_b(c, nu, mu, th_j, eps_j)
-    data = {
-        "c_int": c_int,
-        "threshold": jnp.asarray(threshold),
-        "phase_cap": jnp.asarray(phase_cap),
-    }
-    state0 = jax.vmap(init_ot_state)(s_int, d_int)
-    stats = CompactionStats(batch=b, dispatched_batch=bp, chunk=k)
-    max_rounds = int(m + n + 2)
-    max_chunks = -(-int(phase_cap.max(initial=1)) // max(k, 1)) + 2
-    final = _drive(data, state0,
-                   partial(_ot_chunk, k=k, max_rounds=max_rounds),
-                   _ot_conv, max_chunks, stats)
-    r = _ot_epilogue_b(c, nu, mu, th_j, eps_j, scale, s_int, d_int, final)
-
-    phases = np.asarray(final.phases[:b], np.int64)
-    stats.phases_needed = int(phases.sum())
-    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
-    out = jax.tree_util.tree_map(lambda a: a[:b], r)
-    return out, stats
+    """Compacting counterpart of ``solve_ot_batched``; binds ``OT`` to
+    :func:`solve_compacting`. Same contract as the lockstep path
+    ((B, M, N) costs, (B, M)/(B, N) masses, padding zeroed from
+    ``sizes``), plus per-instance ``eps`` support. Returns
+    ``(OTResult with leading batch axes, CompactionStats)``."""
+    return solve_compacting(OT, {"c": c, "nu": nu, "mu": mu}, eps,
+                            sizes=sizes, k=k, guaranteed=guaranteed,
+                            theta=theta)

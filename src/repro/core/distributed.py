@@ -1,17 +1,22 @@
-"""Mesh-distributed convergence-compacting batch dispatch.
+"""Mesh-distributed convergence-compacting batch dispatch, generic over a
+:class:`~repro.core.problem.ProblemSpec`.
 
 The paper's bound is *parallel* time O(log n / eps^2); PR 1/2 exploited it
 within one device (vmapped batches, compacting phase dispatch) while
 core/sharded.py exploited it across devices for ONE instance (row/col
 matrix sharding). This module unifies the two: a fleet of instances is
 sharded along the BATCH axis of a 1-D device mesh, each k-phase dispatch
-runs the resumable stepped cores (``init_* / run_*_phases / *_converged``)
-under ``shard_map`` with every operand placed ``NamedSharding(P(batch_
-axis))``, and the compacting driver retires converged instances across the
-global batch between dispatches. Each device runs its own vmapped phase
-loop over its local lanes — no cross-device traffic inside a dispatch, so
-per-device lockstep waste is bounded by the LOCAL max phase count, not the
-global one.
+runs the spec's resumable stepped core under ``shard_map`` with every
+operand placed ``NamedSharding(P(batch_axis))``, and the compacting driver
+retires converged instances across the global batch between dispatches.
+Each device runs its own vmapped phase loop over its local lanes — no
+cross-device traffic inside a dispatch, so per-device lockstep waste is
+bounded by the LOCAL max phase count, not the global one.
+
+Like core/compaction.py, the driver exists ONCE: ``solve_mesh(spec, ...)``
+and the generic matrix-placement loop are problem-agnostic; the public
+``solve_assignment_distributed`` / ``solve_ot_distributed`` entry points
+are thin spec bindings with their original signatures.
 
 Device-put / re-bucketing policy (the distributed analogue of the
 power-of-two bucket descent in core/compaction.py):
@@ -37,8 +42,7 @@ power-of-two bucket descent in core/compaction.py):
 A placement policy (``choose_placement``) picks per bucket between this
 batch-axis sharding (many small instances) and the row/col MATRIX sharding
 of core/sharded.py (few large instances, where batch sharding would leave
-most of the mesh idle): ``solve_assignment_distributed`` /
-``solve_ot_distributed`` are the unified entry points over both.
+most of the mesh idle).
 
 Under batch placement, per-lane results are BIT-IDENTICAL to the
 single-device compacting driver (and hence to lockstep batched and
@@ -55,7 +59,7 @@ caveat as any shape change of an XLA float reduction.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import lru_cache, partial
+from functools import lru_cache
 from typing import List, Optional, Tuple
 
 import jax
@@ -63,36 +67,22 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .batched import BatchedAssignmentResult, _sizes_arrays
 from .compaction import (
     DEFAULT_CHUNK,
     CompactionStats,
-    _assign_chunk,
-    _assign_conv,
-    _eps_array,
     _gather,
-    _ot_chunk,
-    _ot_conv,
-    pow2_at_least,
-    prepare_assignment_batch,
-    prepare_ot_batch,
+    max_chunk_dispatches,
+    solve_compacting,
+    spec_fns,
 )
-from .pushrelabel import (
-    assignment_converged,
-    assignment_epilogue,
-    assignment_prologue,
-    init_assignment_state,
-    run_assignment_phases,
+from .problem import (
+    ASSIGNMENT,
+    OT,
+    _sizes_arrays,
+    eps_array,
+    pow2_at_least,
 )
 from ..compat import shard_map as _shard_map
-from .sharded import solve_assignment_sharded, solve_ot_sharded
-from .transport import (
-    init_ot_state,
-    ot_converged,
-    ot_epilogue,
-    ot_prologue,
-    run_ot_phases,
-)
 
 
 @dataclass
@@ -162,7 +152,7 @@ def _matrix_mesh(mesh: Mesh) -> Tuple[Mesh, str, str]:
 
 
 # --------------------------------------------------------------------------
-# shard_map-wrapped stepped cores (one cache entry per (mesh, axis, k))
+# shard_map-wrapped stepped core (one cache entry per (spec, mesh, axis, k))
 # --------------------------------------------------------------------------
 
 def _wrap(mesh: Mesh, axis: str, fn, donate=()):
@@ -174,67 +164,27 @@ def _wrap(mesh: Mesh, axis: str, fn, donate=()):
 
 
 @lru_cache(maxsize=None)
-def _assign_fns(mesh: Mesh, axis: str, k: int):
-    def prologue(c, eps, mv, nv):
-        return jax.vmap(assignment_prologue)(c, eps, mv, nv)
-
-    def chunk(data, state):
-        return jax.vmap(
-            lambda d, s: run_assignment_phases(
-                d["c_int"], s, d["threshold"], d["phase_cap"], k,
-                m_valid=d["m_valid"],
-            )
-        )(data, state)
-
-    def conv(data, state):
-        return jax.vmap(
-            lambda d, s: assignment_converged(
-                s, d["threshold"], d["phase_cap"], m_valid=d["m_valid"]
-            )
-        )(data, state)
-
-    def epilogue(cm, scale, state, eps, row_ok, col_ok):
-        return jax.vmap(assignment_epilogue)(cm, scale, state, eps,
-                                             row_ok, col_ok)
-
-    return (_wrap(mesh, axis, prologue), _wrap(mesh, axis, chunk, (1,)),
-            _wrap(mesh, axis, conv), _wrap(mesh, axis, epilogue))
-
-
-@lru_cache(maxsize=None)
-def _assign_init_fn(mesh: Mesh, axis: str, m: int, n: int):
-    return jax.jit(jax.vmap(lambda _: init_assignment_state(m, n)),
-                   out_shardings=NamedSharding(mesh, P(axis)))
-
-
-@lru_cache(maxsize=None)
-def _ot_fns(mesh: Mesh, axis: str, k: int, max_rounds: int):
-    def prologue(c, nu, mu, th, eps):
-        return jax.vmap(ot_prologue)(c, nu, mu, th, eps)
-
-    def chunk(data, state):
-        return jax.vmap(
-            lambda d, s: run_ot_phases(d["c_int"], s, d["threshold"],
-                                       d["phase_cap"], k, max_rounds)
-        )(data, state)
-
-    def conv(data, state):
-        return jax.vmap(
-            lambda d, s: ot_converged(s, d["threshold"], d["phase_cap"])
-        )(data, state)
-
-    def epilogue(c, nu, mu, th, eps, scale, s_int, d_int, state):
-        return jax.vmap(ot_epilogue)(c, nu, mu, th, eps, scale, s_int,
-                                     d_int, state)
-
-    return (_wrap(mesh, axis, prologue), _wrap(mesh, axis, chunk, (1,)),
-            _wrap(mesh, axis, conv), _wrap(mesh, axis, epilogue))
-
-
-@lru_cache(maxsize=None)
-def _ot_init_fn(mesh: Mesh, axis: str):
-    return jax.jit(jax.vmap(init_ot_state),
-                   out_shardings=NamedSharding(mesh, P(axis)))
+def _mesh_fns(spec, mesh: Mesh, axis: str, k: int):
+    """(prologue, init, chunk, conv, epilogue): the spec's per-instance
+    stepped-core functions vmapped over the local batch shard and
+    shard_map'ed over the mesh. Every operand/result is placed
+    ``NamedSharding(P(axis))``; the chunk dispatch donates the state."""
+    prologue = _wrap(mesh, axis, lambda ops: jax.vmap(spec.prologue)(ops))
+    init = jax.jit(
+        lambda data, ctx: jax.vmap(spec.init_state)(data, ctx),
+        out_shardings=NamedSharding(mesh, P(axis)),
+    )
+    chunk = _wrap(
+        mesh, axis,
+        lambda data, state: jax.vmap(
+            lambda d, s: spec.run_phases(d, s, k))(data, state),
+        donate=(1,),
+    )
+    conv = _wrap(mesh, axis,
+                 lambda data, state: jax.vmap(spec.converged)(data, state))
+    epilogue = _wrap(mesh, axis,
+                     lambda ctx, state: jax.vmap(spec.epilogue)(ctx, state))
+    return prologue, init, chunk, conv, epilogue
 
 
 @lru_cache(maxsize=None)
@@ -339,7 +289,7 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
 
 
 # --------------------------------------------------------------------------
-# Unified entry points
+# The generic distributed entry point
 # --------------------------------------------------------------------------
 
 def _resolve_mesh(mesh, batch_axis):
@@ -352,8 +302,9 @@ def _resolve_mesh(mesh, batch_axis):
     return mesh, d
 
 
-def solve_assignment_distributed(
-    c: jnp.ndarray,
+def solve_mesh(
+    spec,
+    inputs,
     eps,
     mesh: Mesh | None = None,
     *,
@@ -363,165 +314,69 @@ def solve_assignment_distributed(
     batch_axis: str = "data",
     placement: str = "auto",
     keep_state: bool = False,
+    **prep_kw,
 ):
-    """Mesh-distributed counterpart of
-    ``solve_assignment_batched_compacting`` — same contract ((B, M, N)
-    padded costs, scalar or (B,) eps), same bit-identical per-instance
-    results, with the batch axis sharded across ``mesh`` (built by
-    ``launch.mesh.make_batch_mesh`` when None). ``placement`` is "auto"
-    (``choose_placement``), "batch", or "matrix". ``keep_state`` stashes
-    the pre-completion integer state on the stats for feasibility
-    certificates (batch placement only — the matrix path's epilogue
-    consumes the state, so the combination raises).
+    """Mesh-distributed counterpart of ``compaction.solve_compacting`` —
+    same contract (spec + batched input dict, scalar or (B,) eps), same
+    bit-identical per-instance results, with the batch axis sharded across
+    ``mesh`` (built by ``launch.mesh.make_batch_mesh`` when None).
+    ``placement`` is "auto" (``choose_placement``), "batch", or "matrix".
+    ``keep_state`` stashes the pre-completion integer state on the stats
+    for feasibility certificates (batch placement only — the matrix path's
+    epilogue consumes the state, so the combination raises).
 
-    Returns ``(BatchedAssignmentResult, DistributedStats)``."""
-    c = jnp.asarray(c, jnp.float32)
-    if c.ndim != 3:
-        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
-    b, m, n = c.shape
+    Returns ``(result, DistributedStats)``."""
+    inputs = spec.canonicalize(inputs)
+    b, m, n = spec.batch_shape(inputs)
     mesh, d = _resolve_mesh(mesh, batch_axis)
     mode = (choose_placement(b, m, n, d) if placement == "auto"
             else placement)
     if mode == "matrix" and b > 0:
         if keep_state:
             # the matrix path discards the per-instance integer state
-            # (solve_assignment_sharded's epilogue consumes it); fail
-            # loudly rather than hand back final_state=None
+            # (the sharded epilogue consumes it); fail loudly rather than
+            # hand back final_state=None
             raise ValueError("keep_state=True requires batch placement "
                              "(pass placement='batch')")
-        return _solve_assignment_matrix(c, eps, mesh, sizes, guaranteed,
-                                        k, batch_axis)
+        return _solve_matrix(spec, inputs, eps, mesh, sizes, guaranteed,
+                             k, batch_axis, **prep_kw)
     if b == 0 or pow2_at_least(b) < d:
         # below the mesh floor from the start: single-device dispatch
-        from .compaction import solve_assignment_batched_compacting
-
-        out, cst = solve_assignment_batched_compacting(
-            c, eps, sizes=sizes, k=k, guaranteed=guaranteed,
-            keep_state=keep_state)
+        out, cst = solve_compacting(
+            spec, inputs, eps, sizes=sizes, k=k, guaranteed=guaranteed,
+            keep_state=keep_state, **prep_kw)
         stats = _wrap_stats(cst, d, batch_axis, collapsed_at=cst.
                             dispatched_batch or None)
         return out, stats
 
-    p = prepare_assignment_batch(c, eps, sizes, guaranteed, min_batch=d)
+    p = spec.prepare(inputs, eps, sizes=sizes, guaranteed=guaranteed,
+                     min_batch=d, **prep_kw)
     sh = NamedSharding(mesh, P(batch_axis))
-    prologue_s, chunk_s, conv_s, epilogue_s = _assign_fns(mesh, batch_axis,
-                                                          k)
-    eps_j = jax.device_put(jnp.asarray(p.eps_arr, jnp.float32), sh)
-    mv_j = jax.device_put(jnp.asarray(p.m_valid), sh)
-    nv_j = jax.device_put(jnp.asarray(p.n_valid), sh)
-    c_s = jax.device_put(p.c, sh)
-    cm, c_int, scale, row_ok, col_ok = prologue_s(c_s, eps_j, mv_j, nv_j)
-    data = {
-        "c_int": c_int,
-        "threshold": jax.device_put(jnp.asarray(p.threshold), sh),
-        "phase_cap": jax.device_put(jnp.asarray(p.phase_cap), sh),
-        "m_valid": mv_j,
-    }
-    state0 = _assign_init_fn(mesh, batch_axis, m, n)(
-        jax.device_put(jnp.zeros((p.bp,), jnp.float32), sh)
-    )
+    prologue_s, init_s, chunk_s, conv_s, epilogue_s = _mesh_fns(
+        spec, mesh, batch_axis, k)
+    _, _, chunk_1, conv_1, _ = spec_fns(spec, k)
+    ops = {kk: jax.device_put(jnp.asarray(v), sh)
+           for kk, v in p.ops.items()}
+    data, ctx = prologue_s(ops)
+    # verbatim epilogue operands come straight from the sharded ops (see
+    # compaction.solve_compacting for the second-copy argument)
+    ctx = {**ctx, **{kk: ops[kk] for kk in spec.ctx_ops}}
+    state0 = init_s(data, ctx)
     stats = DistributedStats(batch=b, dispatched_batch=p.bp, chunk=k,
                              devices=d, batch_axis=batch_axis,
                              placement="batch")
-    max_chunks = -(-int(p.phase_cap.max(initial=1)) // max(k, 1)) + 2
     final = _drive_distributed(
-        data, state0, chunk_s, conv_s,
-        partial(_assign_chunk, k=k), _assign_conv,
-        max_chunks, stats, mesh, batch_axis,
+        data, state0, chunk_s, conv_s, chunk_1, conv_1,
+        max_chunk_dispatches(p.phase_cap, k), stats, mesh, batch_axis,
     )
-    r = epilogue_s(cm, scale, final, eps_j, row_ok, col_ok)
+    r = epilogue_s(ctx, final)
 
     phases = np.asarray(final.phases[:b], np.int64)
     stats.phases_needed = int(phases.sum())
     stats.lockstep_slot_phases = b * int(phases.max(initial=0))
     if keep_state:
         stats.final_state = jax.tree_util.tree_map(lambda a: a[:b], final)
-    out = BatchedAssignmentResult(
-        matching=r.matching[:b],
-        cost=r.cost[:b],
-        y_b=r.y_b[:b],
-        y_a=r.y_a[:b],
-        phases=r.phases[:b],
-        rounds=r.rounds[:b],
-        matched_before_completion=r.matched_before_completion[:b],
-    )
-    return out, stats
-
-
-def solve_ot_distributed(
-    c: jnp.ndarray,
-    nu: jnp.ndarray,
-    mu: jnp.ndarray,
-    eps,
-    mesh: Mesh | None = None,
-    *,
-    sizes=None,
-    theta=None,
-    k: int = DEFAULT_CHUNK,
-    guaranteed: bool = False,
-    batch_axis: str = "data",
-    placement: str = "auto",
-):
-    """Mesh-distributed counterpart of ``solve_ot_batched_compacting``;
-    same contract and bit-identical per-instance results. Returns
-    ``(OTResult with leading batch axes, DistributedStats)``."""
-    c = jnp.asarray(c, jnp.float32)
-    nu = jnp.asarray(nu, jnp.float32)
-    mu = jnp.asarray(mu, jnp.float32)
-    if c.ndim != 3:
-        raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
-    b, m, n = c.shape
-    mesh, d = _resolve_mesh(mesh, batch_axis)
-    mode = (choose_placement(b, m, n, d) if placement == "auto"
-            else placement)
-    if mode == "matrix" and b > 0:
-        return _solve_ot_matrix(c, nu, mu, eps, mesh, sizes, theta,
-                                guaranteed, k, batch_axis)
-    if b == 0 or pow2_at_least(b) < d:
-        from .compaction import solve_ot_batched_compacting
-
-        out, cst = solve_ot_batched_compacting(
-            c, nu, mu, eps, sizes=sizes, theta=theta, k=k,
-            guaranteed=guaranteed)
-        stats = _wrap_stats(cst, d, batch_axis, collapsed_at=cst.
-                            dispatched_batch or None)
-        return out, stats
-
-    p = prepare_ot_batch(c, nu, mu, eps, sizes, theta, guaranteed,
-                         min_batch=d)
-    sh = NamedSharding(mesh, P(batch_axis))
-    max_rounds = int(m + n + 2)
-    prologue_s, chunk_s, conv_s, epilogue_s = _ot_fns(mesh, batch_axis, k,
-                                                      max_rounds)
-    eps_j = jax.device_put(jnp.asarray(p.eps_arr, jnp.float32), sh)
-    th_j = jax.device_put(jnp.asarray(p.th), sh)
-    c_s = jax.device_put(p.c, sh)
-    nu_s = jax.device_put(p.nu, sh)
-    mu_s = jax.device_put(p.mu, sh)
-    c_int, s_int, d_int, scale = prologue_s(c_s, nu_s, mu_s, th_j, eps_j)
-    data = {
-        "c_int": c_int,
-        "threshold": jax.device_put(jnp.asarray(p.threshold), sh),
-        "phase_cap": jax.device_put(jnp.asarray(p.phase_cap), sh),
-    }
-    state0 = _ot_init_fn(mesh, batch_axis)(s_int, d_int)
-    stats = DistributedStats(batch=b, dispatched_batch=p.bp, chunk=k,
-                             devices=d, batch_axis=batch_axis,
-                             placement="batch")
-    max_chunks = -(-int(p.phase_cap.max(initial=1)) // max(k, 1)) + 2
-    final = _drive_distributed(
-        data, state0, chunk_s, conv_s,
-        partial(_ot_chunk, k=k, max_rounds=max_rounds), _ot_conv,
-        max_chunks, stats, mesh, batch_axis,
-    )
-    r = epilogue_s(c_s, nu_s, mu_s, th_j, eps_j, scale, s_int, d_int,
-                   final)
-
-    phases = np.asarray(final.phases[:b], np.int64)
-    stats.phases_needed = int(phases.sum())
-    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
-    out = jax.tree_util.tree_map(lambda a: a[:b], r)
-    return out, stats
+    return spec.trim(r, b), stats
 
 
 def _wrap_stats(cst: CompactionStats, devices: int, batch_axis: str,
@@ -546,141 +401,82 @@ def _wrap_stats(cst: CompactionStats, devices: int, batch_axis: str,
 # Matrix placement: few large instances, row/col sharding per instance
 # --------------------------------------------------------------------------
 
-def _solve_assignment_matrix(c, eps, mesh, sizes, guaranteed, k,
-                             batch_axis):
-    b, m, n = c.shape
+def _solve_matrix(spec, inputs, eps, mesh, sizes, guaranteed, k,
+                  batch_axis, **prep_kw):
+    """Generic matrix-placement loop: each instance padded up to
+    mesh-divisible dims and solved row/col-sharded (core/sharded.py) via
+    ``spec.matrix_instance``; ``spec.matrix_stack`` reassembles the
+    batched result."""
+    b, m, n = spec.batch_shape(inputs)
     m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
-    eps_arr = _eps_array(eps, b, guaranteed)
+    eps_arr = eps_array(eps, b, guaranteed)
     mesh2, row_axis, col_axis = _matrix_mesh(mesh)
-    matching = np.full((b, m), -1, np.int32)
-    cost = np.zeros((b,), np.float32)
-    y_b = np.zeros((b, m), np.float32)
-    y_a = np.zeros((b, n), np.float32)
-    phases = np.zeros((b,), np.int32)
-    rounds = np.zeros((b,), np.int32)
-    mbc = np.zeros((b,), np.int32)
-    stats = DistributedStats(batch=b, dispatched_batch=b, chunk=k,
-                             devices=int(np.prod(list(mesh2.shape.values()))),
-                             batch_axis=batch_axis, placement="matrix",
-                             dispatches=b)
     rdiv = int(mesh2.shape[row_axis])
     cdiv = int(mesh2.shape[col_axis])
-    c_h = np.asarray(c)
+    host = {kk: np.asarray(v) for kk, v in inputs.items()}
+    rows = []
     for i in range(b):
         mi, ni = int(m_valid[i]), int(n_valid[i])
-        # pad each instance up to mesh-divisible dims (sharded dims must
-        # divide the mesh); the PAD_COST/masked-completion machinery makes
-        # the padded solve equal the unpadded one
         mp = -(-mi // rdiv) * rdiv
-        npad = -(-ni // cdiv) * cdiv
-        ci = np.zeros((mp, npad), np.float32)
-        ci[:mi, :ni] = c_h[i, :mi, :ni]
-        r = solve_assignment_sharded(
-            ci, float(eps_arr[i]), mesh2, row_axis=row_axis,
-            col_axis=col_axis, m_valid=mi, n_valid=ni,
-        )
-        matching[i, :mi] = np.asarray(r.matching)[:mi]
-        cost[i] = float(r.cost)
-        y_b[i, :mi] = np.asarray(r.y_b)[:mi]
-        y_a[i, :ni] = np.asarray(r.y_a)[:ni]
-        phases[i] = int(r.phases)
-        rounds[i] = int(r.rounds)
-        mbc[i] = int(r.matched_before_completion)
+        np_ = -(-ni // cdiv) * cdiv
+        rows.append(spec.matrix_instance(
+            host, i, mi, ni, mp, np_, float(eps_arr[i]), mesh2,
+            row_axis, col_axis, **prep_kw))
+    out = spec.matrix_stack(rows, m_valid, n_valid, m, n)
+    stats = DistributedStats(
+        batch=b, dispatched_batch=b, chunk=k,
+        devices=int(np.prod(list(mesh2.shape.values()))),
+        batch_axis=batch_axis, placement="matrix", dispatches=b)
+    phases = np.asarray(out.phases, np.int64)
     stats.phases_needed = int(phases.sum())
     stats.lockstep_slot_phases = b * int(phases.max(initial=0))
-    out = BatchedAssignmentResult(
-        matching=jnp.asarray(matching), cost=jnp.asarray(cost),
-        y_b=jnp.asarray(y_b), y_a=jnp.asarray(y_a),
-        phases=jnp.asarray(phases), rounds=jnp.asarray(rounds),
-        matched_before_completion=jnp.asarray(mbc),
-    )
     return out, stats
 
 
-def _solve_ot_matrix(c, nu, mu, eps, mesh, sizes, theta, guaranteed, k,
-                     batch_axis):
-    from .transport import OTResult, OTState
+# --------------------------------------------------------------------------
+# Spec-binding wrappers (original public entry points, unchanged contracts)
+# --------------------------------------------------------------------------
 
-    b, m, n = c.shape
-    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
-    eps_arr = _eps_array(eps, b, guaranteed)
-    mesh2, row_axis, col_axis = _matrix_mesh(mesh)
-    plan = np.zeros((b, m, n), np.float32)
-    cost = np.zeros((b,), np.float32)
-    y_b = np.zeros((b, m), np.float32)
-    y_a = np.zeros((b, n), np.float32)
-    phases = np.zeros((b,), np.int32)
-    rounds = np.zeros((b,), np.int32)
-    thetas = np.zeros((b,), np.float32)
-    s_int = np.zeros((b, m), np.int32)
-    d_int = np.zeros((b, n), np.int32)
-    st_leaves = {
-        "y_b": np.zeros((b, m), np.int32),
-        "ya_hi": np.zeros((b, n), np.int32),
-        "free_b": np.zeros((b, m), np.int32),
-        "free_a": np.zeros((b, n), np.int32),
-        "f_hi": np.zeros((b, m, n), np.int32),
-        "f_lo": np.zeros((b, m, n), np.int32),
-        "phases": np.zeros((b,), np.int32),
-        "rounds": np.zeros((b,), np.int32),
-    }
-    stats = DistributedStats(batch=b, dispatched_batch=b, chunk=k,
-                             devices=int(np.prod(list(mesh2.shape.values()))),
-                             batch_axis=batch_axis, placement="matrix",
-                             dispatches=b)
-    th_b = (None if theta is None
-            else np.broadcast_to(np.asarray(theta, np.float32), (b,)))
-    rdiv = int(mesh2.shape[row_axis])
-    cdiv = int(mesh2.shape[col_axis])
-    c_h, nu_h, mu_h = np.asarray(c), np.asarray(nu), np.asarray(mu)
-    for i in range(b):
-        mi, ni = int(m_valid[i]), int(n_valid[i])
-        # pad to mesh-divisible dims with zero mass/cost (inert lanes:
-        # zero supply never proposes, zero demand grants nothing); theta
-        # comes from the TRUE size so the trajectory equals the unpadded
-        # solve's (host float64 -> f32, as _theta_array)
-        mp = -(-mi // rdiv) * rdiv
-        npad = -(-ni // cdiv) * cdiv
-        ci = np.zeros((mp, npad), np.float32)
-        ci[:mi, :ni] = c_h[i, :mi, :ni]
-        nui = np.zeros((mp,), np.float32)
-        nui[:mi] = nu_h[i, :mi]
-        mui = np.zeros((npad,), np.float32)
-        mui[:ni] = mu_h[i, :ni]
-        if th_b is None:
-            th_i = float(np.float32(4.0 * max(mi, ni)
-                                    / np.float64(eps_arr[i])))
-        else:
-            th_i = float(th_b[i])
-        r = solve_ot_sharded(
-            ci, nui, mui, float(eps_arr[i]),
-            mesh2, row_axis=row_axis, col_axis=col_axis, theta=th_i,
-        )
-        plan[i, :mi, :ni] = np.asarray(r.plan)[:mi, :ni]
-        cost[i] = float(r.cost)
-        y_b[i, :mi] = np.asarray(r.y_b)[:mi]
-        y_a[i, :ni] = np.asarray(r.y_a)[:ni]
-        phases[i] = int(r.phases)
-        rounds[i] = int(r.rounds)
-        thetas[i] = float(r.theta)
-        s_int[i, :mi] = np.asarray(r.s_int)[:mi]
-        d_int[i, :ni] = np.asarray(r.d_int)[:ni]
-        st_leaves["y_b"][i, :mi] = np.asarray(r.state.y_b)[:mi]
-        st_leaves["ya_hi"][i, :ni] = np.asarray(r.state.ya_hi)[:ni]
-        st_leaves["free_b"][i, :mi] = np.asarray(r.state.free_b)[:mi]
-        st_leaves["free_a"][i, :ni] = np.asarray(r.state.free_a)[:ni]
-        st_leaves["f_hi"][i, :mi, :ni] = np.asarray(r.state.f_hi)[:mi, :ni]
-        st_leaves["f_lo"][i, :mi, :ni] = np.asarray(r.state.f_lo)[:mi, :ni]
-        st_leaves["phases"][i] = int(r.state.phases)
-        st_leaves["rounds"][i] = int(r.state.rounds)
-    stats.phases_needed = int(phases.sum())
-    stats.lockstep_slot_phases = b * int(phases.max(initial=0))
-    state = OTState(**{k2: jnp.asarray(v) for k2, v in st_leaves.items()})
-    out = OTResult(
-        plan=jnp.asarray(plan), cost=jnp.asarray(cost),
-        y_b=jnp.asarray(y_b), y_a=jnp.asarray(y_a),
-        phases=jnp.asarray(phases), rounds=jnp.asarray(rounds),
-        state=state, theta=jnp.asarray(thetas),
-        s_int=jnp.asarray(s_int), d_int=jnp.asarray(d_int),
-    )
-    return out, stats
+def solve_assignment_distributed(
+    c: jnp.ndarray,
+    eps,
+    mesh: Mesh | None = None,
+    *,
+    sizes=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+    batch_axis: str = "data",
+    placement: str = "auto",
+    keep_state: bool = False,
+):
+    """Mesh-distributed counterpart of
+    ``solve_assignment_batched_compacting``; binds ``ASSIGNMENT`` to
+    :func:`solve_mesh` (see there for the contract). Returns
+    ``(BatchedAssignmentResult, DistributedStats)``."""
+    return solve_mesh(ASSIGNMENT, {"c": c}, eps, mesh, sizes=sizes, k=k,
+                      guaranteed=guaranteed, batch_axis=batch_axis,
+                      placement=placement, keep_state=keep_state)
+
+
+def solve_ot_distributed(
+    c: jnp.ndarray,
+    nu: jnp.ndarray,
+    mu: jnp.ndarray,
+    eps,
+    mesh: Mesh | None = None,
+    *,
+    sizes=None,
+    theta=None,
+    k: int = DEFAULT_CHUNK,
+    guaranteed: bool = False,
+    batch_axis: str = "data",
+    placement: str = "auto",
+):
+    """Mesh-distributed counterpart of ``solve_ot_batched_compacting``;
+    binds ``OT`` to :func:`solve_mesh` — same contract and bit-identical
+    per-instance results. Returns ``(OTResult with leading batch axes,
+    DistributedStats)``."""
+    return solve_mesh(OT, {"c": c, "nu": nu, "mu": mu}, eps, mesh,
+                      sizes=sizes, k=k, guaranteed=guaranteed,
+                      batch_axis=batch_axis, placement=placement,
+                      theta=theta)

@@ -13,7 +13,6 @@ a ``lax.while_loop`` so the whole phase stays inside one XLA program.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

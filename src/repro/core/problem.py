@@ -1,0 +1,624 @@
+"""ProblemSpec: the stepped-core contract shared by assignment and OT.
+
+The paper presents two push-relabel solvers — Algorithm 1 (assignment,
+O(n^2/eps)) and Algorithm 2 (general OT, O(n^2/eps^2)) — that share one
+skeleton: scale/round the instance to integers, run phases until the free
+supply drops below a termination threshold, then complete/price the
+result. Every batch driver in this repo (lockstep vmap, convergence
+compaction, mesh-distributed dispatch) iterates that same skeleton; this
+module captures it once as a protocol so each driver is written ONCE and
+bound to a problem by a spec object, instead of maintaining parallel
+``_assign_*`` / ``_ot_*`` function families per driver.
+
+Protocol methods, mapped to the paper's algorithm steps:
+
+  ``prepare``       host-side batch prep: padding masks, per-instance
+                    eps/theta, the host-float64 termination thresholds
+                    (``int(eps * m)`` for Algorithm 1; ``int(eps *
+                    sum(s_int))`` for Algorithm 2) and phase-cap safety
+                    bounds (Lemma 3.3 / Lemma 4.2 analogues), plus
+                    power-of-two batch padding with born-converged empty
+                    instances.
+  ``prologue``      Algorithm 1/2 step 0 — scaling and rounding: float
+                    costs (and masses, for OT) to the integer instance
+                    the phases operate on. Returns ``(data, ctx)``:
+                    ``data`` feeds the phase loop, ``ctx`` is kept intact
+                    for the epilogue.
+  ``init_state``    the paper's initialization: all supply free,
+                    y(b) = eps (one unit), y(a) = 0, zero flow.
+  ``run_phases``    at most k phases of the main loop (each phase: one
+                    deterministic propose/push-relabel sweep over the
+                    admissible graph). Resumable: chaining calls is
+                    bit-identical to the one-shot solve for any k.
+  ``converged``     the loop guard — free supply <= threshold, or the
+                    phase cap (safety bound) hit.
+  ``epilogue``      completion + pricing: arbitrarily match the <= eps*m
+                    leftover free supply (Algorithm 1) / emit the
+                    rounded transport plan (Algorithm 2), price against
+                    the float costs, scale duals back.
+
+``prologue`` through ``epilogue`` are pure per-instance jax functions
+over pytrees; drivers vmap/jit/shard_map them (see ``core/compaction``
+and ``core/distributed``), so one spec serves every dispatch strategy.
+The remaining methods are host-side glue: ragged-instance handling for
+the ``core/api.solve`` front door, the lockstep fixed-shape path, and
+the per-instance row/col matrix-sharded path of ``core/sharded``.
+
+Two singleton specs are exported: ``ASSIGNMENT`` and ``OT``. They are
+stateless; identity-hashing makes them usable as jit-cache keys.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pushrelabel import (
+    _max_phases,
+    assignment_converged,
+    assignment_epilogue,
+    assignment_prologue,
+    init_assignment_state,
+    run_assignment_phases,
+)
+from .transport import (
+    OTResult,
+    OTState,
+    init_ot_state,
+    ot_converged,
+    ot_epilogue,
+    ot_phase_cap,
+    ot_prologue,
+    run_ot_phases,
+)
+
+
+def pow2_at_least(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def eps_array(eps, b: int, guaranteed: bool) -> np.ndarray:
+    """(b,) host-float64 per-instance eps (the /3 of the guaranteed bound
+    applied); shared by every driver so the scaling can never diverge."""
+    arr = np.broadcast_to(np.asarray(eps, np.float64), (b,)).copy()
+    if guaranteed:
+        arr = arr / 3.0
+    if (arr <= 0).any():
+        raise ValueError("eps must be positive")
+    return arr
+
+
+class PreparedBatch(NamedTuple):
+    """Host-side output of ``ProblemSpec.prepare``: device operands plus
+    the host copies of the per-lane thresholds/caps the drivers schedule
+    with. ``ops`` arrays all have the (bp,) dispatched batch leading."""
+    ops: Dict[str, Any]        # operands for the (vmapped) prologue
+    threshold: np.ndarray      # (bp,) int32 host-float64-derived
+    phase_cap: np.ndarray      # (bp,) int32 safety bound per lane
+    eps_arr: np.ndarray        # (bp,) float64 per-lane eps
+    bp: int                    # dispatched batch (power of two)
+
+
+class ProblemSpec(Protocol):
+    """Stepped-core contract; see the module docstring for the mapping to
+    the paper's Algorithm 1/2. Implementations must be stateless."""
+    name: str
+
+    # -- host-side batch prep ------------------------------------------
+    def canonicalize(self, inputs: Dict[str, Any]) -> Dict[str, Any]: ...
+    def batch_shape(self, inputs: Dict[str, Any]) -> Tuple[int, int, int]: ...
+    def prepare(self, inputs, eps, *, sizes=None, guaranteed: bool = False,
+                min_batch: int = 1, **kw) -> PreparedBatch: ...
+
+    # names of ``ops`` entries the epilogue consumes VERBATIM: the drivers
+    # merge them into ``ctx`` outside the jit boundary instead of routing
+    # them through the prologue as pass-through outputs (which would
+    # materialize a second device copy of the big operands)
+    ctx_ops: Tuple[str, ...]
+
+    # -- per-instance jax functions (drivers vmap/jit/shard_map these) --
+    def prologue(self, ops: Dict[str, Any]): ...
+    def init_state(self, data: Dict[str, Any], ctx: Dict[str, Any]): ...
+    def run_phases(self, data: Dict[str, Any], state, k: int): ...
+    def converged(self, data: Dict[str, Any], state): ...
+    def epilogue(self, ctx: Dict[str, Any], state): ...
+
+    # -- result shaping ------------------------------------------------
+    def empty_result(self, m: int, n: int): ...
+    def trim(self, r, b: int): ...
+
+    # -- ragged front door / lockstep / matrix placement ---------------
+    def instance_shape(self, inst) -> Tuple[int, int]: ...
+    def pad_group(self, insts, key) -> Dict[str, Any]: ...
+    def solve_lockstep(self, inputs, eps: float, *, sizes=None,
+                       guaranteed: bool = False, **kw): ...
+    def fetch(self, r) -> Dict[str, np.ndarray]: ...
+    def unpack(self, host: Dict[str, np.ndarray], j: int,
+               shape: Tuple[int, int]) -> Dict[str, Any]: ...
+    def matrix_instance(self, host, i, mi, ni, mp, np_, eps_i, mesh2,
+                        row_axis, col_axis, **kw): ...
+    def matrix_stack(self, rows, m_valid, n_valid, m: int, n: int): ...
+
+
+def _sizes_arrays(sizes, b, m, n):
+    """Host-side (B,) m_valid / n_valid arrays (full shape when sizes=None)."""
+    if sizes is None:
+        return (np.full((b,), m, np.int32), np.full((b,), n, np.int32))
+    sizes = np.asarray(sizes, np.int32)
+    if sizes.shape != (b, 2):
+        raise ValueError(f"sizes must be ({b}, 2), got {sizes.shape}")
+    if (sizes[:, 0] > m).any() or (sizes[:, 1] > n).any():
+        raise ValueError("instance size exceeds padded bucket shape")
+    return sizes[:, 0].copy(), sizes[:, 1].copy()
+
+
+def _theta_array(sizes_m, sizes_n, eps, theta) -> np.ndarray:
+    """Per-instance theta = 4*max(m, n)/eps, computed on host in float64 and
+    cast to f32 so it is bit-identical to the unbatched solve_ot default.
+    ``eps`` may be a scalar or a (B,) array (compacting driver)."""
+    if theta is not None:
+        return np.broadcast_to(
+            np.asarray(theta, np.float32), sizes_m.shape
+        ).copy()
+    eps = np.asarray(eps, np.float64)
+    return (4.0 * np.maximum(sizes_m, sizes_n) / eps).astype(np.float32)
+
+
+def _mask_ot_inputs(c, nu, mu, m_valid, n_valid, theta, eps):
+    """Zero mass/cost outside each instance's block and compute the
+    per-instance termination thresholds in host float64 from the masked
+    masses — identical to the unbatched solve_ot (the on-device f32
+    product rounds the wrong way for some (eps, total_mass) pairs).
+    Shared by the lockstep and compacting paths so the two can never
+    diverge on threshold/masking semantics. ``eps`` scalar or (B,)."""
+    b, m, n = c.shape
+    row_ok = np.arange(m)[None, :] < m_valid[:, None]
+    col_ok = np.arange(n)[None, :] < n_valid[:, None]
+    eps_b = np.broadcast_to(np.asarray(eps, np.float64), (b,))
+    nu_h = np.where(row_ok, np.asarray(nu, np.float32), np.float32(0.0))
+    # vectorized ot_termination_threshold: f32 floor(nu * theta) per entry
+    # (the device rounding), f64 row sums, f64 eps product, truncation
+    s_rows = np.floor(nu_h * np.asarray(theta, np.float32)[:, None])
+    thr = (eps_b * s_rows.sum(axis=1, dtype=np.float64)).astype(np.int64) \
+        .astype(np.int32)
+    mask = jnp.asarray(row_ok[:, :, None] & col_ok[:, None, :])
+    c = jnp.where(mask, c, 0.0)
+    nu = jnp.where(jnp.asarray(row_ok), nu, 0.0)
+    mu = jnp.where(jnp.asarray(col_ok), mu, 0.0)
+    return c, nu, mu, thr
+
+
+def _pad_lanes(bp: int, b: int, arrays: Dict[str, Any],
+               fills: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    """Pad every (b, ...) array in ``arrays`` up to ``bp`` lanes with
+    zeros (born-converged empty instances: zero valid rows / zero mass ->
+    free supply 0 <= threshold 0). ``fills`` overrides the pad value per
+    key — eps/theta lanes must stay nonzero so the prologue's divisions
+    remain finite (the lanes are born converged regardless)."""
+    if bp == b:
+        return arrays
+    out = {}
+    for k, a in arrays.items():
+        fill = (fills or {}).get(k, 0)
+        if isinstance(a, np.ndarray):
+            pad = np.full((bp - b,) + a.shape[1:], fill, a.dtype)
+            out[k] = np.concatenate([a, pad])
+        else:
+            pad = jnp.full((bp - b,) + a.shape[1:], fill, a.dtype)
+            out[k] = jnp.concatenate([a, pad])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Assignment (paper Algorithm 1)
+# --------------------------------------------------------------------------
+
+class AssignmentSpec:
+    """ProblemSpec instance for the assignment solver (Algorithm 1),
+    built from the stepped core in ``core/pushrelabel``."""
+
+    name = "assignment"
+
+    # -- host-side batch prep ------------------------------------------
+
+    def canonicalize(self, inputs):
+        c = jnp.asarray(inputs["c"], jnp.float32)
+        if c.ndim != 3:
+            raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+        return {"c": c}
+
+    def batch_shape(self, inputs):
+        return inputs["c"].shape
+
+    def prepare(self, inputs, eps, *, sizes=None, guaranteed: bool = False,
+                min_batch: int = 1) -> PreparedBatch:
+        """Masking/threshold/padding half of a batched assignment solve.
+
+        Pads the batch to ``max(pow2_at_least(B), min_batch)`` with
+        born-converged empty instances (the distributed driver passes
+        ``min_batch = device count`` so the batch axis starts divisible
+        by the mesh). Thresholds are host float64, identical to the
+        unbatched ``int(eps * m)``."""
+        c = inputs["c"]
+        b, m, n = c.shape
+        m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+        eps_arr = eps_array(eps, b, guaranteed)
+        threshold = np.asarray(
+            [int(e * int(mi)) for e, mi in zip(eps_arr, m_valid)], np.int32
+        )
+        phase_cap = np.asarray([_max_phases(float(e), m) for e in eps_arr],
+                               np.int32)
+        bp = max(pow2_at_least(b), pow2_at_least(min_batch))
+        ops = _pad_lanes(bp, b, {
+            "c": c,
+            "eps": eps_arr.astype(np.float32),
+            "m_valid": m_valid,
+            "n_valid": n_valid,
+            "threshold": threshold,
+            "phase_cap": phase_cap,
+        }, fills={"eps": np.float32(eps_arr[0])})
+        if bp > b:
+            eps_arr = np.concatenate(
+                [eps_arr, np.full((bp - b,), eps_arr[0])])
+        return PreparedBatch(ops=ops, threshold=np.asarray(ops["threshold"]),
+                             phase_cap=np.asarray(ops["phase_cap"]),
+                             eps_arr=eps_arr, bp=bp)
+
+    # -- per-instance jax functions ------------------------------------
+
+    ctx_ops = ("eps",)
+
+    def prologue(self, ops):
+        cm, c_int, scale, row_ok, col_ok = assignment_prologue(
+            ops["c"], ops["eps"], ops["m_valid"], ops["n_valid"])
+        data = {"c_int": c_int, "threshold": ops["threshold"],
+                "phase_cap": ops["phase_cap"], "m_valid": ops["m_valid"]}
+        ctx = {"cm": cm, "scale": scale, "row_ok": row_ok, "col_ok": col_ok}
+        return data, ctx
+
+    def init_state(self, data, ctx):
+        m, n = data["c_int"].shape
+        return init_assignment_state(m, n)
+
+    def run_phases(self, data, state, k: int):
+        return run_assignment_phases(
+            data["c_int"], state, data["threshold"], data["phase_cap"], k,
+            m_valid=data["m_valid"])
+
+    def converged(self, data, state):
+        return assignment_converged(state, data["threshold"],
+                                    data["phase_cap"],
+                                    m_valid=data["m_valid"])
+
+    def epilogue(self, ctx, state):
+        return assignment_epilogue(ctx["cm"], ctx["scale"], state,
+                                   ctx["eps"], ctx["row_ok"], ctx["col_ok"])
+
+    # -- result shaping ------------------------------------------------
+
+    def empty_result(self, m: int, n: int):
+        from .batched import BatchedAssignmentResult
+
+        z = lambda *s: jnp.zeros(s, jnp.float32)
+        return BatchedAssignmentResult(
+            matching=jnp.zeros((0, m), jnp.int32), cost=z(0),
+            y_b=z(0, m), y_a=z(0, n),
+            phases=jnp.zeros((0,), jnp.int32),
+            rounds=jnp.zeros((0,), jnp.int32),
+            matched_before_completion=jnp.zeros((0,), jnp.int32),
+        )
+
+    def trim(self, r, b: int):
+        from .batched import BatchedAssignmentResult
+
+        return BatchedAssignmentResult(
+            matching=r.matching[:b],
+            cost=r.cost[:b],
+            y_b=r.y_b[:b],
+            y_a=r.y_a[:b],
+            phases=r.phases[:b],
+            rounds=r.rounds[:b],
+            matched_before_completion=r.matched_before_completion[:b],
+        )
+
+    # -- ragged front door / lockstep ----------------------------------
+
+    def instance_shape(self, inst):
+        return tuple(np.asarray(inst).shape)
+
+    def pad_group(self, insts, key):
+        from .batched import pad_stack
+
+        return {"c": pad_stack(list(insts), key)}
+
+    def solve_lockstep(self, inputs, eps: float, *, sizes=None,
+                       guaranteed: bool = False):
+        from .batched import solve_assignment_batched
+
+        return solve_assignment_batched(inputs["c"], eps, sizes=sizes,
+                                        guaranteed=guaranteed)
+
+    def fetch(self, r):
+        return {
+            "matching": np.asarray(r.matching), "cost": np.asarray(r.cost),
+            "phases": np.asarray(r.phases), "rounds": np.asarray(r.rounds),
+            "y_b": np.asarray(r.y_b), "y_a": np.asarray(r.y_a),
+        }
+
+    def unpack(self, host, j, shape):
+        mi, ni = shape
+        return {
+            "matching": host["matching"][j, :mi],
+            "cost": float(host["cost"][j]),
+            "phases": int(host["phases"][j]),
+            "rounds": int(host["rounds"][j]),
+            "y_b": host["y_b"][j, :mi],
+            "y_a": host["y_a"][j, :ni],
+        }
+
+    # -- matrix placement (row/col sharding per large instance) --------
+
+    def matrix_instance(self, host, i, mi, ni, mp, np_, eps_i, mesh2,
+                        row_axis, col_axis):
+        from .sharded import solve_assignment_sharded
+
+        # pad up to mesh-divisible dims (sharded dims must divide the
+        # mesh); the PAD_COST/masked-completion machinery makes the
+        # padded solve equal the unpadded one
+        ci = np.zeros((mp, np_), np.float32)
+        ci[:mi, :ni] = host["c"][i, :mi, :ni]
+        return solve_assignment_sharded(
+            ci, eps_i, mesh2, row_axis=row_axis, col_axis=col_axis,
+            m_valid=mi, n_valid=ni,
+        )
+
+    def matrix_stack(self, rows, m_valid, n_valid, m: int, n: int):
+        from .batched import BatchedAssignmentResult
+
+        b = len(rows)
+        matching = np.full((b, m), -1, np.int32)
+        cost = np.zeros((b,), np.float32)
+        y_b = np.zeros((b, m), np.float32)
+        y_a = np.zeros((b, n), np.float32)
+        phases = np.zeros((b,), np.int32)
+        rounds = np.zeros((b,), np.int32)
+        mbc = np.zeros((b,), np.int32)
+        for i, r in enumerate(rows):
+            mi, ni = int(m_valid[i]), int(n_valid[i])
+            matching[i, :mi] = np.asarray(r.matching)[:mi]
+            cost[i] = float(r.cost)
+            y_b[i, :mi] = np.asarray(r.y_b)[:mi]
+            y_a[i, :ni] = np.asarray(r.y_a)[:ni]
+            phases[i] = int(r.phases)
+            rounds[i] = int(r.rounds)
+            mbc[i] = int(r.matched_before_completion)
+        return BatchedAssignmentResult(
+            matching=jnp.asarray(matching), cost=jnp.asarray(cost),
+            y_b=jnp.asarray(y_b), y_a=jnp.asarray(y_a),
+            phases=jnp.asarray(phases), rounds=jnp.asarray(rounds),
+            matched_before_completion=jnp.asarray(mbc),
+        )
+
+
+# --------------------------------------------------------------------------
+# General OT (paper Algorithm 2)
+# --------------------------------------------------------------------------
+
+class OTSpec:
+    """ProblemSpec instance for the general OT solver (Algorithm 2),
+    built from the stepped core in ``core/transport``."""
+
+    name = "ot"
+
+    # -- host-side batch prep ------------------------------------------
+
+    def canonicalize(self, inputs):
+        c = jnp.asarray(inputs["c"], jnp.float32)
+        if c.ndim != 3:
+            raise ValueError(f"expected (B, M, N) costs, got shape {c.shape}")
+        return {"c": c,
+                "nu": jnp.asarray(inputs["nu"], jnp.float32),
+                "mu": jnp.asarray(inputs["mu"], jnp.float32)}
+
+    def batch_shape(self, inputs):
+        return inputs["c"].shape
+
+    def prepare(self, inputs, eps, *, sizes=None, guaranteed: bool = False,
+                min_batch: int = 1, theta=None) -> PreparedBatch:
+        """OT counterpart of ``AssignmentSpec.prepare``: shares the
+        padding-mask + host-float64 threshold code with the lockstep path
+        (``_mask_ot_inputs``) so the code paths can never diverge. Batch
+        padding is born-converged (zero mass -> free supply 0 <=
+        threshold 0)."""
+        c, nu, mu = inputs["c"], inputs["nu"], inputs["mu"]
+        b, m, n = c.shape
+        m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+        eps_arr = eps_array(eps, b, guaranteed)
+        th = _theta_array(m_valid, n_valid, eps_arr, theta)
+        phase_cap = np.asarray([ot_phase_cap(float(e)) for e in eps_arr],
+                               np.int32)
+        c, nu, mu, threshold = _mask_ot_inputs(c, nu, mu, m_valid, n_valid,
+                                               th, eps_arr)
+        bp = max(pow2_at_least(b), pow2_at_least(min_batch))
+        ops = _pad_lanes(bp, b, {
+            "c": c, "nu": nu, "mu": mu,
+            "eps": eps_arr.astype(np.float32),
+            "theta": th,
+            "threshold": threshold,
+            "phase_cap": phase_cap,
+        }, fills={"eps": np.float32(eps_arr[0]), "theta": np.float32(1.0)})
+        if bp > b:
+            eps_arr = np.concatenate(
+                [eps_arr, np.full((bp - b,), eps_arr[0])])
+        return PreparedBatch(ops=ops, threshold=np.asarray(ops["threshold"]),
+                             phase_cap=np.asarray(ops["phase_cap"]),
+                             eps_arr=eps_arr, bp=bp)
+
+    # -- per-instance jax functions ------------------------------------
+
+    ctx_ops = ("c", "nu", "mu", "theta", "eps")
+
+    def prologue(self, ops):
+        c_int, s_int, d_int, scale = ot_prologue(
+            ops["c"], ops["nu"], ops["mu"], ops["theta"], ops["eps"])
+        data = {"c_int": c_int, "threshold": ops["threshold"],
+                "phase_cap": ops["phase_cap"]}
+        ctx = {"scale": scale, "s_int": s_int, "d_int": d_int}
+        return data, ctx
+
+    def init_state(self, data, ctx):
+        return init_ot_state(ctx["s_int"], ctx["d_int"])
+
+    def run_phases(self, data, state, k: int):
+        m, n = data["c_int"].shape
+        return run_ot_phases(data["c_int"], state, data["threshold"],
+                             data["phase_cap"], k, int(m + n + 2))
+
+    def converged(self, data, state):
+        return ot_converged(state, data["threshold"], data["phase_cap"])
+
+    def epilogue(self, ctx, state):
+        return ot_epilogue(ctx["c"], ctx["nu"], ctx["mu"], ctx["theta"],
+                           ctx["eps"], ctx["scale"], ctx["s_int"],
+                           ctx["d_int"], state)
+
+    # -- result shaping ------------------------------------------------
+
+    def empty_result(self, m: int, n: int):
+        zf = lambda *s: jnp.zeros(s, jnp.float32)
+        zi = lambda *s: jnp.zeros(s, jnp.int32)
+        return OTResult(
+            plan=zf(0, m, n), cost=zf(0), y_b=zf(0, m), y_a=zf(0, n),
+            phases=zi(0), rounds=zi(0),
+            state=OTState(y_b=zi(0, m), ya_hi=zi(0, n), free_b=zi(0, m),
+                          free_a=zi(0, n), f_hi=zi(0, m, n),
+                          f_lo=zi(0, m, n), phases=zi(0), rounds=zi(0)),
+            theta=zf(0), s_int=zi(0, m), d_int=zi(0, n),
+        )
+
+    def trim(self, r, b: int):
+        return jax.tree_util.tree_map(lambda a: a[:b], r)
+
+    # -- ragged front door / lockstep ----------------------------------
+
+    def instance_shape(self, inst):
+        return tuple(np.asarray(inst[0]).shape)
+
+    def pad_group(self, insts, key):
+        from .batched import pad_stack
+
+        mb, nb = key
+        return {"c": pad_stack([c for c, _, _ in insts], (mb, nb)),
+                "nu": pad_stack([nu for _, nu, _ in insts], (mb,)),
+                "mu": pad_stack([mu for _, _, mu in insts], (nb,))}
+
+    def solve_lockstep(self, inputs, eps: float, *, sizes=None,
+                       guaranteed: bool = False, theta=None):
+        from .batched import solve_ot_batched
+
+        return solve_ot_batched(inputs["c"], inputs["nu"], inputs["mu"],
+                                eps, sizes=sizes, theta=theta,
+                                guaranteed=guaranteed)
+
+    def fetch(self, r):
+        return {
+            "plan": np.asarray(r.plan), "cost": np.asarray(r.cost),
+            "phases": np.asarray(r.phases), "rounds": np.asarray(r.rounds),
+            "theta": np.asarray(r.theta),
+        }
+
+    def unpack(self, host, j, shape):
+        mi, ni = shape
+        return {
+            "plan": host["plan"][j, :mi, :ni],
+            "cost": float(host["cost"][j]),
+            "phases": int(host["phases"][j]),
+            "rounds": int(host["rounds"][j]),
+            "theta": float(host["theta"][j]),
+        }
+
+    # -- matrix placement ----------------------------------------------
+
+    def matrix_instance(self, host, i, mi, ni, mp, np_, eps_i, mesh2,
+                        row_axis, col_axis, theta=None):
+        from .sharded import solve_ot_sharded
+
+        # pad to mesh-divisible dims with zero mass/cost (inert lanes:
+        # zero supply never proposes, zero demand grants nothing); theta
+        # comes from the TRUE size so the trajectory equals the unpadded
+        # solve's (host float64 -> f32, as _theta_array)
+        ci = np.zeros((mp, np_), np.float32)
+        ci[:mi, :ni] = host["c"][i, :mi, :ni]
+        nui = np.zeros((mp,), np.float32)
+        nui[:mi] = host["nu"][i, :mi]
+        mui = np.zeros((np_,), np.float32)
+        mui[:ni] = host["mu"][i, :ni]
+        if theta is None:
+            th_i = float(np.float32(4.0 * max(mi, ni) / np.float64(eps_i)))
+        else:
+            b = host["c"].shape[0]
+            th_i = float(np.broadcast_to(
+                np.asarray(theta, np.float32), (b,))[i])
+        return solve_ot_sharded(
+            ci, nui, mui, eps_i, mesh2, row_axis=row_axis,
+            col_axis=col_axis, theta=th_i,
+        )
+
+    def matrix_stack(self, rows, m_valid, n_valid, m: int, n: int):
+        b = len(rows)
+        plan = np.zeros((b, m, n), np.float32)
+        cost = np.zeros((b,), np.float32)
+        y_b = np.zeros((b, m), np.float32)
+        y_a = np.zeros((b, n), np.float32)
+        phases = np.zeros((b,), np.int32)
+        rounds = np.zeros((b,), np.int32)
+        thetas = np.zeros((b,), np.float32)
+        s_int = np.zeros((b, m), np.int32)
+        d_int = np.zeros((b, n), np.int32)
+        st = {
+            "y_b": np.zeros((b, m), np.int32),
+            "ya_hi": np.zeros((b, n), np.int32),
+            "free_b": np.zeros((b, m), np.int32),
+            "free_a": np.zeros((b, n), np.int32),
+            "f_hi": np.zeros((b, m, n), np.int32),
+            "f_lo": np.zeros((b, m, n), np.int32),
+            "phases": np.zeros((b,), np.int32),
+            "rounds": np.zeros((b,), np.int32),
+        }
+        for i, r in enumerate(rows):
+            mi, ni = int(m_valid[i]), int(n_valid[i])
+            plan[i, :mi, :ni] = np.asarray(r.plan)[:mi, :ni]
+            cost[i] = float(r.cost)
+            y_b[i, :mi] = np.asarray(r.y_b)[:mi]
+            y_a[i, :ni] = np.asarray(r.y_a)[:ni]
+            phases[i] = int(r.phases)
+            rounds[i] = int(r.rounds)
+            thetas[i] = float(r.theta)
+            s_int[i, :mi] = np.asarray(r.s_int)[:mi]
+            d_int[i, :ni] = np.asarray(r.d_int)[:ni]
+            st["y_b"][i, :mi] = np.asarray(r.state.y_b)[:mi]
+            st["ya_hi"][i, :ni] = np.asarray(r.state.ya_hi)[:ni]
+            st["free_b"][i, :mi] = np.asarray(r.state.free_b)[:mi]
+            st["free_a"][i, :ni] = np.asarray(r.state.free_a)[:ni]
+            st["f_hi"][i, :mi, :ni] = np.asarray(r.state.f_hi)[:mi, :ni]
+            st["f_lo"][i, :mi, :ni] = np.asarray(r.state.f_lo)[:mi, :ni]
+            st["phases"][i] = int(r.state.phases)
+            st["rounds"][i] = int(r.state.rounds)
+        state = OTState(**{k: jnp.asarray(v) for k, v in st.items()})
+        return OTResult(
+            plan=jnp.asarray(plan), cost=jnp.asarray(cost),
+            y_b=jnp.asarray(y_b), y_a=jnp.asarray(y_a),
+            phases=jnp.asarray(phases), rounds=jnp.asarray(rounds),
+            state=state, theta=jnp.asarray(thetas),
+            s_int=jnp.asarray(s_int), d_int=jnp.asarray(d_int),
+        )
+
+
+ASSIGNMENT = AssignmentSpec()
+OT = OTSpec()

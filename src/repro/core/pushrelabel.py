@@ -38,7 +38,7 @@ driver vmaps them with a per-instance eps for mixed-accuracy batches).
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ a forced multi-device CPU in tests/test_sharded_ot.py)."""
 from __future__ import annotations
 
 from functools import lru_cache, partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -191,7 +190,7 @@ def lower_sharded_solver(n: int, eps: float, mesh: Mesh,
 # paper's O(log n / eps^2) parallel claim.
 # ===========================================================================
 
-from .matching import proposal_keys  # noqa: E402  (hash must match exactly)
+from .matching import proposal_keys  # noqa: E402,F401  (hash must match exactly)
 
 _BIG32 = jnp.int32(2**31 - 1)
 _UMAX = jnp.uint32(0xFFFFFFFF)

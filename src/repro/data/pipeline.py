@@ -12,7 +12,6 @@ import queue
 import threading
 from typing import Dict, Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

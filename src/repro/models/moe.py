@@ -23,7 +23,6 @@ the same collective volume as a Megatron TP MLP. Dispatch is sort-based
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ every helper degrades to a no-op when no mesh is configured (single-device
 smoke tests)."""
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import sharding
@@ -21,7 +20,7 @@ from .attention import (
     flash_attention,
 )
 from .layers import glu_mlp, glu_mlp_init, rmsnorm, rmsnorm_init
-from .mamba import mamba_init, mamba_forward, mamba_decode, mamba_cache_init
+from .mamba import mamba_init, mamba_forward, mamba_decode
 from .moe import moe_init, moe_forward
 
 Spec = Tuple[Tuple[str, Optional[str]], ...]

@@ -4,7 +4,6 @@ with warmup, global-norm clipping, and an int8 error-feedback gradient
 compressor for bandwidth-limited cross-pod reductions."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

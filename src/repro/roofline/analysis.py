@@ -25,7 +25,6 @@ affected cells are flagged).
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict
 

@@ -5,7 +5,7 @@ TPU), mirroring the paper's experiment harness as a service."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -115,7 +115,9 @@ class OTService:
 
     Mirrors ``Engine``: ``submit()`` queues distance requests; ``run_batch()``
     groups them into shape buckets, pads each bucket to a fixed shape, and
-    dispatches every bucket through the batched solver subsystem. With
+    dispatches every bucket through the unified ``core/api.solve`` front
+    door (one DispatchPolicy per service: lockstep / compacting / mesh-
+    distributed, chosen by the constructor arguments below). With
     ``compact=True`` (default) a bucket is solved by the convergence-
     compacting driver (core/compaction.py): converged requests retire
     between k-phase dispatches instead of riding lockstep until the bucket's
@@ -132,6 +134,7 @@ class OTService:
                  mesh=None):
         from repro.core import batched as B
         from repro.core import compaction as C
+        from repro.core.api import DispatchPolicy
         from repro.core.costs import COSTS, build_cost_matrix
 
         self.eps = eps
@@ -145,11 +148,12 @@ class OTService:
         self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
         # mesh != None routes every bucket through the mesh-distributed
         # compacting driver (core/distributed.py): batch axis sharded
-        # across devices, same per-request results.
-        if mesh is not None and not compact:
-            raise ValueError("mesh dispatch requires compact=True (the "
-                             "distributed driver is the compacting "
-                             "driver)")  # same rule as solve_*_ragged
+        # across devices, same per-request results. Every bucket solve
+        # goes through the unified core/api.solve front door under this
+        # one policy (from_legacy owns the compact/mesh keyword mapping
+        # and its mesh-requires-compact rule).
+        self._policy = DispatchPolicy.from_legacy(
+            compact, mesh, chunk=self.chunk, buckets=self.buckets)
         self.mesh = mesh
         self.queue: List[OTRequest] = []
         self._B = B
@@ -201,20 +205,12 @@ class OTService:
                 ys = self._B.pad_stack([reqs[i].y for i in idx], (nb, d))
                 c = self._batched_cost(xs, ys)
                 if has_mass:
+                    from repro.core.api import OT, solve
+
                     nu = self._B.pad_stack([reqs[i].nu for i in idx], (mb,))
                     mu = self._B.pad_stack([reqs[i].mu for i in idx], (nb,))
-                    if self.mesh is not None:
-                        from repro.core import distributed as D
-
-                        r, st = D.solve_ot_distributed(
-                            c, nu, mu, self.eps, self.mesh, sizes=sizes,
-                            k=self.chunk)
-                    elif self.compact:
-                        r, st = self._C.solve_ot_batched_compacting(
-                            c, nu, mu, self.eps, sizes=sizes, k=self.chunk)
-                    else:
-                        r, st = self._B.solve_ot_batched(
-                            c, nu, mu, self.eps, sizes=sizes), None
+                    r, st = solve(OT, {"c": c, "nu": nu, "mu": mu},
+                                  self.eps, self._policy, sizes=sizes)
                     plan, cost, phases = (np.asarray(r.plan),
                                           np.asarray(r.cost),
                                           np.asarray(r.phases))
@@ -234,18 +230,10 @@ class OTService:
                             if hasattr(st, "devices"):
                                 results[i]["devices"] = st.devices
                 else:
-                    if self.mesh is not None:
-                        from repro.core import distributed as D
+                    from repro.core.api import ASSIGNMENT, solve
 
-                        r, st = D.solve_assignment_distributed(
-                            c, self.eps, self.mesh, sizes=sizes,
-                            k=self.chunk)
-                    elif self.compact:
-                        r, st = self._C.solve_assignment_batched_compacting(
-                            c, self.eps, sizes=sizes, k=self.chunk)
-                    else:
-                        r, st = self._B.solve_assignment_batched(
-                            c, self.eps, sizes=sizes), None
+                    r, st = solve(ASSIGNMENT, {"c": c}, self.eps,
+                                  self._policy, sizes=sizes)
                     matching, cost, phases, y_b, y_a = (
                         np.asarray(r.matching), np.asarray(r.cost),
                         np.asarray(r.phases), np.asarray(r.y_b),

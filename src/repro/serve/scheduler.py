@@ -14,8 +14,9 @@ and solves. ``AsyncOTScheduler`` splits that into a two-stage pipeline:
       and computes the batched cost matrices
       |
   [dispatch worker] feeds prepared buckets to the mesh through the
-      distributed compacting driver (core/distributed.py) and resolves
-      the per-request Futures
+      unified front door (``core/api.solve`` under a mesh-mode
+      DispatchPolicy -> the distributed compacting driver,
+      core/distributed.py) and resolves the per-request Futures
 
 with a bounded handoff queue between the stages: while the dispatch
 worker is blocked inside a solve (device work + the driver's per-chunk
@@ -48,6 +49,26 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+
+def _fulfil(fut: Future, result) -> bool:
+    """set_result tolerating caller-side cancellation: a tenant cancelling
+    its Future must not poison the rest of the batch."""
+    try:
+        fut.set_result(result)
+        return True
+    except Exception:          # cancelled / already resolved
+        return False
+
+
+def _fail(fut: Future, exc: BaseException) -> bool:
+    try:
+        if not fut.done():
+            fut.set_exception(exc)
+            return True
+    except Exception:
+        pass
+    return False
 
 
 @dataclass
@@ -122,6 +143,7 @@ class AsyncOTScheduler:
                  use_pallas: bool = True, placement: str = "auto"):
         from repro.core import batched as B
         from repro.core import compaction as C
+        from repro.core.api import DispatchPolicy
         from repro.core.costs import COSTS
 
         if mesh is None:
@@ -133,6 +155,11 @@ class AsyncOTScheduler:
         self.mesh = mesh
         self.buckets = tuple(buckets) if buckets else B.DEFAULT_BUCKETS
         self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
+        # every bucket dispatch goes through the unified core/api.solve
+        # front door under this one policy
+        self._policy = DispatchPolicy(mode="mesh", mesh=mesh,
+                                      placement=placement, chunk=self.chunk,
+                                      buckets=self.buckets)
         self.max_batch = int(max_batch)
         self.linger_s = float(linger_ms) / 1e3
         self.placement = placement
@@ -147,8 +174,13 @@ class AsyncOTScheduler:
         # of the dispatcher (backpressure, and the overlap window)
         self._work_q: "queue.Queue" = queue.Queue(maxsize=2)
         self._outstanding = 0
+        # every un-resolved Future, so shutdown can always account for
+        # in-flight work even if a worker dies mid-batch (futures are
+        # resolved or failed, never silently stranded)
+        self._pending: set = set()
         self._lock = threading.Condition()
-        self._closed = False
+        self._closed = False          # no new submits (close() or abort)
+        self._close_called = False    # close() ran (joins done once)
         self._collate_t = threading.Thread(target=self._collate_loop,
                                            name="ot-collate", daemon=True)
         self._dispatch_t = threading.Thread(target=self._dispatch_loop,
@@ -181,32 +213,80 @@ class AsyncOTScheduler:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
             self._outstanding += 1
+            self._pending.add(fut)
         self._submit_q.put(req)
         return fut
 
+    def _workers_alive(self) -> bool:
+        return self._collate_t.is_alive() and self._dispatch_t.is_alive()
+
     def flush(self, timeout: Optional[float] = None) -> bool:
-        """Block until every submitted request has resolved. Returns False
-        on timeout."""
+        """Block until every submitted request has resolved (normally,
+        exceptionally, or — if a worker thread died — by having its Future
+        failed here rather than stranded). Returns False on timeout."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._lock:
             while self._outstanding > 0:
+                if not self._workers_alive():
+                    break               # fall through to the abort path
                 remaining = (None if deadline is None
                              else deadline - time.monotonic())
                 if remaining is not None and remaining <= 0:
                     return False
-                self._lock.wait(timeout=remaining)
+                # wake periodically to re-check worker liveness
+                self._lock.wait(timeout=0.2 if remaining is None
+                                else min(0.2, remaining))
+        if self._outstanding > 0:
+            self._abort_pending(RuntimeError(
+                "scheduler worker thread died; request abandoned"))
         return True
 
-    def close(self):
-        """Stop accepting work, drain what was submitted, stop workers."""
+    def _abort_pending(self, exc: BaseException):
+        """Resolve every still-pending Future with ``exc`` (last-resort
+        shutdown path: a worker died or close() found undrained work).
+        Queued work items are discarded."""
         with self._lock:
-            if self._closed:
+            # the pipeline is broken (a worker died or close() found
+            # stragglers): refuse further submits — an accepted request
+            # with no live worker would strand its Future
+            self._closed = True
+        for q in (self._submit_q, self._work_q):
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            # re-seed the shutdown sentinel: draining may have swallowed
+            # one a still-live worker was waiting for, and a broken
+            # pipeline (one worker dead) should wind the other down too
+            try:
+                q.put_nowait(None)
+            except queue.Full:
+                pass
+        with self._lock:
+            for fut in list(self._pending):
+                _fail(fut, exc)
+            self._pending.clear()
+            self._outstanding = 0
+            self._lock.notify_all()
+
+    def close(self):
+        """Stop accepting work, drain what was submitted, stop workers.
+        Every accepted Future is resolved (or failed) before this returns
+        — shutdown never strands a pending Future, even racing in-flight
+        collate/dispatch work or a dead worker thread."""
+        with self._lock:
+            if self._close_called:
                 return
+            self._close_called = True
             self._closed = True          # no new submits past this point
         self.flush()
         self._submit_q.put(None)          # collate sentinel
         self._collate_t.join(timeout=30)
         self._dispatch_t.join(timeout=30)
+        if self._pending:
+            # belt-and-braces: a worker hung past the join timeout
+            self._abort_pending(RuntimeError("scheduler closed"))
 
     def __enter__(self):
         return self
@@ -247,12 +327,28 @@ class AsyncOTScheduler:
             return ops.cost_matrix_batched(xs, ys, metric=self.metric)
         return self._cost_batched(xs, ys)
 
+    def _handoff(self, item) -> None:
+        """Backpressure put that cannot block forever: if the dispatch
+        worker died, the queue never drains — raise so the batch's
+        futures are failed instead of wedging the collate thread."""
+        while True:
+            try:
+                self._work_q.put(item, timeout=1.0)
+                return
+            except queue.Full:
+                if not self._dispatch_t.is_alive():
+                    raise RuntimeError("dispatch worker died; work "
+                                       "item abandoned")
+
     def _collate_loop(self):
         B = self._B
         while True:
             batch = self._drain()
             if batch is None:
-                self._work_q.put(None)
+                try:
+                    self._handoff(None)     # dispatch shutdown sentinel
+                except RuntimeError:
+                    pass                    # dispatcher already gone
                 return
             packaged: set = set()
             try:
@@ -279,21 +375,18 @@ class AsyncOTScheduler:
                             reqs=reqs, bucket=grp.key,
                             t_prepared=time.perf_counter(),
                         )
-                        self._work_q.put(item)   # blocks: backpressure
+                        self._handoff(item)      # blocks: backpressure
                         packaged.update(id(r) for r in reqs)
             except Exception as e:
                 # fail only the requests that never made it into a work
                 # item; packaged ones are resolved by the dispatcher
-                missed = [r for r in batch if id(r) not in packaged
-                          and not r.future.done()]
+                missed = [r for r in batch if id(r) not in packaged]
                 for r in missed:
-                    r.future.set_exception(e)
-                self._done(len(missed))
+                    _fail(r.future, e)
+                self._done(missed)
 
     def _dispatch_loop(self):
-        from repro.core.distributed import (
-            solve_assignment_distributed, solve_ot_distributed,
-        )
+        from repro.core.api import ASSIGNMENT, OT, solve
 
         while True:
             item = self._work_q.get()
@@ -302,16 +395,15 @@ class AsyncOTScheduler:
             t0 = time.perf_counter()
             try:
                 if item.has_mass:
-                    r, st = solve_ot_distributed(
-                        item.c, item.nu, item.mu, item.eps, self.mesh,
-                        sizes=item.sizes, k=self.chunk,
-                        placement=self.placement,
+                    r, st = solve(
+                        OT, {"c": item.c, "nu": item.nu, "mu": item.mu},
+                        item.eps, self._policy, sizes=item.sizes,
                     )
                     plan = np.asarray(r.plan)
                 else:
-                    r, st = solve_assignment_distributed(
-                        item.c, item.eps, self.mesh, sizes=item.sizes,
-                        k=self.chunk, placement=self.placement,
+                    r, st = solve(
+                        ASSIGNMENT, {"c": item.c}, item.eps,
+                        self._policy, sizes=item.sizes,
                     )
                     matching = np.asarray(r.matching)
                     y_b, y_a = np.asarray(r.y_b), np.asarray(r.y_a)
@@ -349,15 +441,21 @@ class AsyncOTScheduler:
                         )
                     self.stats.requests += 1
                     self.stats.total_wait_s += out["wait_s"]
-                    req.future.set_result(out)
-                self._done(len(item.reqs))
+                    _fulfil(req.future, out)
+                self._done(item.reqs)
             except Exception as e:
                 for req in item.reqs:
-                    if not req.future.done():
-                        req.future.set_exception(e)
-                self._done(len(item.reqs))
+                    _fail(req.future, e)
+                self._done(item.reqs)
 
-    def _done(self, n: int):
+    def _done(self, reqs):
         with self._lock:
-            self._outstanding -= n
+            for r in reqs:
+                # only decrement for futures still tracked: a worker
+                # finishing an in-flight item AFTER _abort_pending already
+                # accounted for it must not drive the counter negative
+                # (that would let a later flush() return early)
+                if r.future in self._pending:
+                    self._pending.discard(r.future)
+                    self._outstanding -= 1
             self._lock.notify_all()

@@ -5,7 +5,6 @@ latency hiding) and optional int8 error-feedback gradient compression for
 the cross-pod reduction."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict
 
 import jax

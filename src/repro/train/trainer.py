@@ -18,10 +18,9 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpointing as ckpt
 from repro.data.pipeline import synthetic_batch

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.batched import (
-    DEFAULT_BUCKETS,
     bucket_instances,
     next_bucket,
     pad_stack,
@@ -121,7 +120,11 @@ def test_bucketing_utilities():
     assert next_bucket(1) == 16
     assert next_bucket(16) == 16
     assert next_bucket(17) == 32
-    assert next_bucket(5000) == 5000          # beyond the largest bucket
+    # beyond the largest table entry: mint a ceil-pow2 bucket (one shared
+    # compiled program per pow2 size) instead of a per-shape exact bucket
+    assert next_bucket(5000) == 8192
+    assert next_bucket(2049) == 4096
+    assert next_bucket(4096) == 4096
     groups = bucket_instances([(20, 20), (30, 10), (100, 100), (31, 9)])
     keys = {g.key for g in groups}
     assert keys == {(32, 32), (32, 16), (128, 128)}

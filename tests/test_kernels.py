@@ -1,11 +1,9 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ops, ref
-from repro.core.matching import greedy_maximal_matching
 from repro.core.pushrelabel import solve_assignment
 
 

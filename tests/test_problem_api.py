@@ -1,0 +1,356 @@
+"""The ProblemSpec protocol + the unified core/api.solve front door.
+
+Invariants under test:
+  * cross-policy parity (the property the refactor must preserve): a
+    random mixed-shape, mixed-eps instance set solved via EVERY
+    DispatchPolicy — lockstep, compact, mesh/batch (and forced
+    mesh/matrix) — yields identical costs/plans/matchings per instance
+    (matrix to the documented float-epilogue ulp caveat), and the duals/
+    states pass the paper's feasibility certificates
+    (check_invariants / check_ot_invariants);
+  * the front door's two input forms (ragged list, pre-batched dict)
+    agree with each other and with the legacy entry points;
+  * ``buckets=`` plumbing: custom bucket tables reach bucket_instances
+    through solve_*_ragged / OTService / AsyncOTScheduler, and shapes
+    beyond the biggest bucket mint ceil-pow2 buckets instead of
+    per-shape exact buckets.
+
+The 8-device variant (subprocess, forced host devices, marked slow) runs
+the same parity property across a real mesh with re-bucketing and the
+matrix placement engaged.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.api import ASSIGNMENT, OT, DispatchPolicy, dispatch, solve
+from repro.core.feasibility import check_invariants, check_ot_invariants
+from repro.core.pushrelabel import assignment_prologue
+from repro.core.transport import ot_prologue
+
+
+def _mixed_instances(b, lo, hi, seed):
+    """Ragged OT instances ((c, nu, mu) triples) + assignment costs with a
+    shape mix that spans several buckets."""
+    rng = np.random.default_rng(seed)
+    ot, cs = [], []
+    for _ in range(b):
+        m = int(rng.integers(lo, hi))
+        n = int(rng.integers(m, hi + 4))
+        x = rng.uniform(size=(m, 2))
+        y = rng.uniform(size=(n, 2))
+        d = x[:, None, :] - y[None, :, :]
+        ci = np.sqrt((d * d).sum(-1) + 1e-30).astype(np.float32)
+        nu = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu = rng.dirichlet(np.ones(n)).astype(np.float32)
+        ot.append((ci, nu, mu))
+        cs.append(ci)
+    eps = np.where(np.arange(b) % 2 == 0, 0.1, 0.05)
+    return ot, cs, eps
+
+
+POLICIES = {
+    "lockstep": DispatchPolicy(mode="lockstep"),
+    "compact": DispatchPolicy(mode="compact", chunk=3),
+    "mesh": DispatchPolicy(mode="mesh"),       # default host mesh
+}
+
+
+def test_cross_policy_parity_ot():
+    """Every policy produces identical per-instance OT plans/costs on a
+    mixed-shape, mixed-eps set (lockstep sub-groups by eps)."""
+    ot, _, eps = _mixed_instances(7, 10, 30, seed=0)
+    outs = {name: solve(OT, ot, eps, pol) for name, pol in POLICIES.items()}
+    ref = outs["compact"]
+    for name, rs in outs.items():
+        for i, (r, r0) in enumerate(zip(rs, ref)):
+            np.testing.assert_array_equal(r["plan"], r0["plan"],
+                                          err_msg=f"{name}[{i}]")
+            assert r["cost"] == r0["cost"], (name, i)
+            assert r["phases"] == r0["phases"], (name, i)
+
+
+def test_cross_policy_parity_assignment():
+    _, cs, eps = _mixed_instances(6, 10, 30, seed=1)
+    outs = {name: solve(ASSIGNMENT, cs, eps, pol)
+            for name, pol in POLICIES.items()}
+    ref = outs["compact"]
+    for name, rs in outs.items():
+        for i, (r, r0) in enumerate(zip(rs, ref)):
+            np.testing.assert_array_equal(r["matching"], r0["matching"],
+                                          err_msg=f"{name}[{i}]")
+            assert r["cost"] == r0["cost"], (name, i)
+            # duals: traced-eps vs static-eps f32 multiply, ulp-level
+            np.testing.assert_allclose(r["y_b"], r0["y_b"], atol=1e-6)
+
+
+def test_parity_duals_pass_certificates():
+    """The duals/states behind every policy satisfy the paper's
+    feasibility certificates (bucket-level dispatch, mixed eps)."""
+    rng = np.random.default_rng(3)
+    b, m, n = 4, 20, 24
+    c = np.zeros((b, m, n), np.float32)
+    nu = np.zeros((b, m), np.float32)
+    mu = np.zeros((b, n), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i in range(b):
+        mi = int(rng.integers(12, m + 1))
+        ni = int(rng.integers(mi, n + 1))
+        c[i, :mi, :ni] = rng.uniform(size=(mi, ni))
+        nu[i, :mi] = rng.dirichlet(np.ones(mi)).astype(np.float32)
+        mu[i, :ni] = rng.dirichlet(np.ones(ni)).astype(np.float32)
+        sizes[i] = (mi, ni)
+    eps = np.where(np.arange(b) % 2 == 0, 0.1, 0.2)
+
+    for pol in (POLICIES["compact"], POLICIES["mesh"]):
+        r, st = dispatch(ASSIGNMENT, {"c": c}, eps, sizes=sizes,
+                         policy=pol, keep_state=True)
+        assert st.final_state is not None
+        for i in range(b):
+            _, c_int, _, _, _ = assignment_prologue(
+                jnp.asarray(c[i]), float(eps[i]),
+                jnp.int32(sizes[i][0]), jnp.int32(sizes[i][1]))
+            s_i = jax.tree_util.tree_map(lambda a: a[i], st.final_state)
+            out = check_invariants(np.asarray(c_int),
+                                   np.asarray(s_i.y_b),
+                                   np.asarray(s_i.y_a),
+                                   np.asarray(s_i.match_ba),
+                                   float(eps[i]))
+            assert all(out.values()), (pol.resolved_mode(), i, out)
+
+        ro, _ = dispatch(OT, {"c": c, "nu": nu, "mu": mu}, eps,
+                         sizes=sizes, policy=pol)
+        theta = np.asarray(ro.theta)
+        for i in range(b):
+            c_int, _, _, _ = ot_prologue(
+                jnp.asarray(c[i]), jnp.asarray(nu[i]), jnp.asarray(mu[i]),
+                float(theta[i]), float(eps[i]))
+            s_i = jax.tree_util.tree_map(lambda a: a[i], ro.state)
+            out = check_ot_invariants(np.asarray(c_int), s_i,
+                                      np.asarray(ro.s_int)[i],
+                                      np.asarray(ro.d_int)[i],
+                                      float(eps[i]))
+            assert all(out.values()), (pol.resolved_mode(), i, out)
+
+
+def test_front_door_dict_form_matches_legacy():
+    """solve(spec, {batched dict}) == the legacy per-problem entry point."""
+    from repro.core.compaction import solve_ot_batched_compacting
+
+    ot, _, _ = _mixed_instances(4, 12, 16, seed=5)
+    mb = max(c.shape[0] for c, _, _ in ot)
+    nb = max(c.shape[1] for c, _, _ in ot)
+    from repro.core.batched import pad_stack
+
+    c = pad_stack([c for c, _, _ in ot], (mb, nb))
+    nu = pad_stack([v for _, v, _ in ot], (mb,))
+    mu = pad_stack([v for _, _, v in ot], (nb,))
+    sizes = np.asarray([c0.shape for c0, _, _ in ot], np.int32)
+    r0, s0 = solve_ot_batched_compacting(c, nu, mu, 0.1, sizes=sizes, k=4)
+    r1, s1 = solve(OT, {"c": c, "nu": nu, "mu": mu}, 0.1, sizes=sizes,
+                   policy=DispatchPolicy(mode="compact", chunk=4))
+    np.testing.assert_array_equal(np.asarray(r0.plan), np.asarray(r1.plan))
+    assert s0.dispatches == s1.dispatches
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        DispatchPolicy(mode="warp")
+    with pytest.raises(ValueError):
+        DispatchPolicy(mode="lockstep", mesh=object())
+    assert DispatchPolicy().resolved_mode() == "compact"
+    assert DispatchPolicy(mesh=None, mode="mesh").resolved_mode() == "mesh"
+
+
+# --------------------------------------------------------------------------
+# buckets= plumbing + ceil-pow2 minting for oversized shapes
+# --------------------------------------------------------------------------
+
+def test_oversized_shapes_mint_pow2_buckets():
+    from repro.core.batched import bucket_instances, solve_ot_ragged
+
+    # 20 > the biggest custom bucket (16): minted ceil-pow2 bucket of 32,
+    # shared by both oversized instances (one compiled program, not two)
+    groups = bucket_instances([(20, 20), (6, 6), (25, 31)], buckets=(8, 16))
+    assert {g.key for g in groups} == {(32, 32), (8, 8)}
+
+    rng = np.random.default_rng(7)
+    insts = []
+    for m in (20, 6, 25):
+        x = rng.uniform(size=(m, 2))
+        y = rng.uniform(size=(m, 2))
+        d = x[:, None, :] - y[None, :, :]
+        ci = np.sqrt((d * d).sum(-1) + 1e-30).astype(np.float32)
+        insts.append((ci, rng.dirichlet(np.ones(m)).astype(np.float32),
+                      rng.dirichlet(np.ones(m)).astype(np.float32)))
+    rs = solve_ot_ragged(insts, 0.1, buckets=(8, 16))
+    assert rs[0]["bucket"] == (32, 32)
+    assert rs[1]["bucket"] == (8, 8)
+    assert rs[2]["bucket"] == (32, 32)
+    # and the minted-bucket solves still equal unbatched solves
+    from repro.core.transport import solve_ot
+
+    for (ci, nui, mui), r in zip(insts, rs):
+        s = solve_ot(jnp.asarray(ci), jnp.asarray(nui), jnp.asarray(mui),
+                     0.1)
+        assert r["cost"] == pytest.approx(float(s.cost), abs=2e-6)
+
+
+def test_buckets_plumb_through_service_and_scheduler():
+    from repro.serve.engine import OTService
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    rng = np.random.default_rng(9)
+    x = rng.uniform(size=(20, 2)).astype(np.float32)
+    y = rng.uniform(size=(20, 2)).astype(np.float32)
+
+    svc = OTService(eps=0.1, buckets=(8, 16))
+    svc.submit(x, y)
+    out = svc.run_batch()
+    assert out[0]["bucket"] == (32, 32)     # minted, not a failure
+
+    with AsyncOTScheduler(eps=0.1, buckets=(8, 16)) as sched:
+        fut = sched.submit(x, y)
+        assert sched.flush(timeout=300)
+        assert fut.result(timeout=5)["bucket"] == (32, 32)
+
+
+# --------------------------------------------------------------------------
+# Forced 8-device mesh parity (subprocess, same harness as
+# tests/test_distributed.py)
+# --------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.api import ASSIGNMENT, OT, DispatchPolicy, dispatch, solve
+from repro.core.feasibility import check_invariants, check_ot_invariants
+from repro.core.pushrelabel import assignment_prologue
+from repro.core.transport import ot_prologue
+from repro.launch.mesh import make_batch_mesh
+
+rng = np.random.default_rng(13)
+b = 24
+ot, cs, shapes = [], [], []
+for _ in range(b):
+    m = int(rng.integers(16, 40))
+    n = int(rng.integers(m, 44))
+    x = rng.uniform(size=(m, 2))
+    y = rng.uniform(size=(n, 2))
+    d = x[:, None, :] - y[None, :, :]
+    ci = np.sqrt((d * d).sum(-1) + 1e-30).astype(np.float32)
+    ot.append((ci, rng.dirichlet(np.ones(m)).astype(np.float32),
+               rng.dirichlet(np.ones(n)).astype(np.float32)))
+    cs.append(ci)
+    shapes.append((m, n))
+eps = np.where(np.arange(b) % 3 == 0, 0.05, 0.1)
+
+mesh = make_batch_mesh()
+out = {"devices": int(mesh.shape["data"])}
+policies = {
+    "lockstep": DispatchPolicy(mode="lockstep"),
+    "compact": DispatchPolicy(mode="compact", chunk=4),
+    "mesh": DispatchPolicy(mode="mesh", mesh=mesh, chunk=4),
+}
+
+res_ot = {k: solve(OT, ot, eps, p) for k, p in policies.items()}
+res_as = {k: solve(ASSIGNMENT, cs, eps, p) for k, p in policies.items()}
+ok = True
+for k in policies:
+    for i in range(b):
+        ok = ok and np.array_equal(res_ot[k][i]["plan"],
+                                   res_ot["compact"][i]["plan"])
+        ok = ok and res_ot[k][i]["cost"] == res_ot["compact"][i]["cost"]
+        ok = ok and np.array_equal(res_as[k][i]["matching"],
+                                   res_as["compact"][i]["matching"])
+        ok = ok and res_as[k][i]["cost"] == res_as["compact"][i]["cost"]
+out["parity"] = bool(ok)
+out["mesh_used"] = any(r.get("devices", 1) > 1 for r in res_ot["mesh"])
+
+# certificates on the mesh-policy states (bucket-level dispatch)
+mb = max(m for m, _ in shapes); nb = max(n for _, n in shapes)
+from repro.core.batched import pad_stack
+c_b = pad_stack(cs, (mb, nb))
+nu_b = pad_stack([v for _, v, _ in ot], (mb,))
+mu_b = pad_stack([v for _, _, v in ot], (nb,))
+sizes = np.asarray(shapes, np.int32)
+cert = True
+r_a, st_a = dispatch(ASSIGNMENT, {"c": c_b}, eps, sizes=sizes,
+                     policy=policies["mesh"], keep_state=True)
+for i in range(4):
+    _, c_int, _, _, _ = assignment_prologue(
+        jnp.asarray(c_b[i]), float(eps[i]),
+        jnp.int32(sizes[i][0]), jnp.int32(sizes[i][1]))
+    s_i = jax.tree_util.tree_map(lambda a: a[i], st_a.final_state)
+    res = check_invariants(np.asarray(c_int), np.asarray(s_i.y_b),
+                           np.asarray(s_i.y_a), np.asarray(s_i.match_ba),
+                           float(eps[i]))
+    cert = cert and all(res.values())
+r_o, _ = dispatch(OT, {"c": c_b, "nu": nu_b, "mu": mu_b}, eps,
+                  sizes=sizes, policy=policies["mesh"])
+theta = np.asarray(r_o.theta)
+for i in range(4):
+    c_int, _, _, _ = ot_prologue(
+        jnp.asarray(c_b[i]), jnp.asarray(nu_b[i]), jnp.asarray(mu_b[i]),
+        float(theta[i]), float(eps[i]))
+    s_i = jax.tree_util.tree_map(lambda a: a[i], r_o.state)
+    res = check_ot_invariants(np.asarray(c_int), s_i,
+                              np.asarray(r_o.s_int)[i],
+                              np.asarray(r_o.d_int)[i], float(eps[i]))
+    cert = cert and all(res.values())
+out["certificates"] = bool(cert)
+
+# matrix placement vs compact: integer-exact, float epilogue to 1e-6
+b2 = 2
+c2 = np.zeros((b2, 150, 150), np.float32)
+nu2 = np.zeros((b2, 150), np.float32)
+mu2 = np.zeros((b2, 150), np.float32)
+for i in range(b2):
+    x = rng.uniform(size=(150, 2)); y = rng.uniform(size=(150, 2))
+    d = x[:, None, :] - y[None, :, :]
+    c2[i] = np.sqrt((d * d).sum(-1) + 1e-30)
+    nu2[i] = rng.dirichlet(np.ones(150)).astype(np.float32)
+    mu2[i] = rng.dirichlet(np.ones(150)).astype(np.float32)
+rm, sm = dispatch(OT, {"c": c2, "nu": nu2, "mu": mu2}, 0.1,
+                  policy=DispatchPolicy(mode="mesh", mesh=mesh,
+                                        placement="matrix"))
+rc, _ = dispatch(OT, {"c": c2, "nu": nu2, "mu": mu2}, 0.1,
+                 policy=policies["compact"])
+out["matrix_used"] = sm.placement == "matrix"
+out["matrix_phases_exact"] = bool(np.array_equal(
+    np.asarray(rm.phases), np.asarray(rc.phases)))
+out["matrix_plan_close"] = bool(np.allclose(
+    np.asarray(rm.plan), np.asarray(rc.plan), atol=1e-6))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_cross_policy_parity_eight_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # skip the TPU-backend probe (60s timeout in this image)
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["devices"] == 8, out
+    assert out["parity"], out
+    assert out["mesh_used"], out
+    assert out["certificates"], out
+    assert out["matrix_used"], out
+    assert out["matrix_phases_exact"], out
+    assert out["matrix_plan_close"], out

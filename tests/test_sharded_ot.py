@@ -121,9 +121,7 @@ def test_sharded_solver_matches_single_device():
 def test_elastic_checkpoint_reshard(tmp_path):
     """Checkpoint written on 1 device restores sharded onto an 8-device
     mesh (elastic rescale) with identical values."""
-    import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.checkpoint import checkpointing as ckpt
 
     tree = {"w": jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),

@@ -2,7 +2,6 @@
 and the small-reg underflow the paper points out for the kernel variant."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core.sinkhorn import sinkhorn, reg_for_additive_eps
 from repro.core.exact import exact_ot_cost

@@ -1,12 +1,10 @@
 """Full-stack system test: train -> checkpoint -> serve -> OT diagnostics,
 all through the public APIs."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs.registry import ARCHS, reduced
-from repro.models import model as M
 from repro.serve.engine import Engine, OTService, Request
 from repro.train.trainer import Trainer
 
@@ -76,7 +74,6 @@ def test_model_flops_accounting():
 
 def test_sinkhorn_kernel_in_solver_loop():
     """Pallas sinkhorn_row_update drops into the log-domain loop."""
-    import jax
     from repro.kernels import ops
     from repro.core.costs import build_cost_matrix
 

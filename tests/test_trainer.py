@@ -1,7 +1,6 @@
 """Fault tolerance: loss goes down; kill/resume reproduces the uninterrupted
 run exactly (deterministic data + CRC-checked atomic checkpoints); corrupted
 checkpoints are skipped; serving engine decodes batches."""
-import json
 import os
 
 import jax

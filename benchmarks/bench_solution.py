@@ -1,0 +1,151 @@
+"""Solution-surface fetch economics: host bytes + wall time per artifact.
+
+The typed result surface (core/solution.py) lets serving traffic declare
+the artifacts it will read (``solve(..., want=...)``); this bench measures
+what that declaration is worth on one dispatched OT bucket:
+
+  * cost_only  - ``want=("cost",)``: O(B) scalars cross device->host.
+  * sparse     - ``want=("cost", "plan_sparse")``: COO triplets, O(B*nnz)
+    bytes (the paper's compact-plan claim, support ~O(m + n)).
+  * dense      - ``want=("cost", "plan")``: the O(B * m * n) dense plans
+    the legacy surface always shipped.
+
+Each row reports ``fetch_bytes`` (audited by ``SolutionBatch.
+fetched_bytes``) and instances/sec for solve + fetch, so
+``benchmarks/run.py --diff`` gates refactors against the committed
+BENCH_solution.json. The dense/sparse byte ratio is the headline.
+
+    PYTHONPATH=src python -m benchmarks.bench_solution [--full|--tiny]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.api import OT, DispatchPolicy, solve
+from .common import emit
+
+RECORDS: list = []
+
+
+def record(name, seconds, derived="", **extra):
+    emit(name, seconds, derived)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived, **extra})
+
+
+def write_json(path="BENCH_solution.json"):
+    payload = {
+        "schema": 1,
+        "bench": "solution",
+        "backend": jax.default_backend(),
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
+
+
+def _bucket(b, n, seed):
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, n, n), np.float32)
+    nu = np.zeros((b, n), np.float32)
+    mu = np.zeros((b, n), np.float32)
+    for i in range(b):
+        x = rng.uniform(size=(n, 2))
+        y = rng.uniform(size=(n, 2))
+        d = x[:, None, :] - y[None, :, :]
+        c[i] = np.sqrt((d * d).sum(-1) + 1e-30)
+        nu[i] = rng.dirichlet(np.ones(n)).astype(np.float32)
+        mu[i] = rng.dirichlet(np.ones(n)).astype(np.float32)
+    return {"c": c, "nu": nu, "mu": mu}
+
+
+_WANTS = {
+    "cost_only": ("cost",),
+    "sparse": ("cost", "plan_sparse"),
+    "dense": ("cost", "plan"),
+}
+
+
+def _fetch(batch, kind):
+    if kind == "cost_only":
+        return batch.cost()
+    if kind == "sparse":
+        batch.cost()
+        return batch.plan_sparse()
+    batch.cost()
+    return batch.plan()
+
+
+def run(full: bool = False, tiny: bool = False, eps: float = 0.1,
+        repeats: int = 3):
+    if tiny:
+        grids = [(8, 32)]
+    elif full:
+        grids = [(32, 128), (64, 256)]
+    else:
+        grids = [(32, 128)]
+    policy = DispatchPolicy(mode="compact")
+    for b, n in grids:
+        inputs = _bucket(b, n, seed=7)
+        dense_bytes = b * n * n * 4
+        baseline = None
+        for kind, want in _WANTS.items():
+            # warm the (shape, k, B) program family + extraction kernels
+            _fetch(solve(OT, inputs, eps, policy, want=want), kind)
+            ts, bytes_moved = [], 0
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                batch = solve(OT, inputs, eps, policy, want=want)
+                _fetch(batch, kind)
+                ts.append(time.perf_counter() - t0)
+                bytes_moved = batch.fetched_bytes
+            sec = float(np.median(ts))
+            name = f"solution_fetch_{kind}_B{b}_n{n}"
+            if kind == "cost_only":
+                baseline = bytes_moved
+            derived = (f"fetch={bytes_moved}B dense={dense_bytes}B "
+                       f"({bytes_moved / dense_bytes:.4f}x)")
+            record(name, sec, derived,
+                   instances_per_s=b / sec,
+                   fetch_bytes=int(bytes_moved),
+                   dense_plan_bytes=int(dense_bytes),
+                   batch=b, n=n, eps=eps)
+        # headline: what declaring want= saves vs always shipping plans
+        record(f"solution_bytes_saved_B{b}_n{n}", 0.0,
+               f"cost-only {baseline}B vs dense {dense_bytes}B "
+               f"({dense_bytes / max(baseline, 1):.0f}x less host traffic)",
+               fetch_bytes=int(baseline),
+               dense_plan_bytes=int(dense_bytes))
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one small bucket, asserts the "
+                         "cost-only fetch never ships dense plans")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, tiny=args.tiny)
+    if args.tiny:
+        by_name = {r["name"]: r for r in RECORDS}
+        r = by_name["solution_fetch_cost_only_B8_n32"]
+        assert r["fetch_bytes"] < r["dense_plan_bytes"] / 100, r
+        print("# tiny smoke ok: cost-only fetch "
+              f"{r['fetch_bytes']}B << dense {r['dense_plan_bytes']}B",
+              flush=True)
+    if args.json:
+        write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,7 +61,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import bench_synthetic, bench_mnist, bench_phases, \
-        bench_routing, bench_ot, bench_batched, bench_sharded
+        bench_routing, bench_ot, bench_batched, bench_sharded, \
+        bench_solution
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
@@ -71,14 +72,15 @@ def main() -> None:
         "routing": bench_routing.run,       # framework integration
         "batched": bench_batched.run,       # batched serving subsystem
         "sharded": bench_sharded.run,       # mesh-distributed dispatch
+        "solution": bench_solution.run,     # typed result surface fetch
     }
     if args.diff and args.only is None:
         # diff mode only makes sense for the JSON-emitting families
-        args.only = "batched,sharded"
+        args.only = "batched,sharded,solution"
     only = set(args.only.split(",")) if args.only else set(benches)
-    if args.diff and not ({"batched", "sharded"} & only):
+    if args.diff and not ({"batched", "sharded", "solution"} & only):
         ap.error("--diff compares the JSON-emitting families; include "
-                 "batched and/or sharded in --only")
+                 "batched, sharded and/or solution in --only")
     regressions: list = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -103,6 +105,14 @@ def main() -> None:
                                             "BENCH_sharded.json")
             else:
                 bench_sharded.write_json("BENCH_sharded.json")
+        if name == "solution":
+            # host-fetch bytes + wall time per declared artifact set
+            # (cost-only vs sparse vs dense plans)
+            if args.diff:
+                regressions += diff_records(bench_solution.RECORDS,
+                                            "BENCH_solution.json")
+            else:
+                bench_solution.write_json("BENCH_solution.json")
     if args.diff:
         if regressions:
             print(f"# PERF REGRESSIONS ({len(regressions)}): "

@@ -156,6 +156,41 @@ def main():
     print(f"solve(OT, bucket): dispatches={st10.dispatches} "
           f"(identical to section 6's driver call)")
 
+    # 11. the typed Solution surface (core/solution.py): declare the
+    #     artifacts you will read with want=, and only those ever cross
+    #     device->host. A cost-only request fetches O(B) scalars instead
+    #     of the O(B*n^2) dense plans (the byte win is the point: on an
+    #     accelerator that fetch is interconnect traffic); the plan ships
+    #     as compact COO triplets (the paper's sparse-support claim) that
+    #     reconstruct the dense plan bit for bit; and the approximate
+    #     DUAL solution yields an a-posteriori certificate: additive_gap()
+    #     <= eps * m * max(c) under guaranteed=True (paper Thm 1.2/1.3).
+    cost_only = solve(OT, {"c": cb, "nu": nub, "mu": mub}, eps_each,
+                      DispatchPolicy(mode="compact", chunk=4), sizes=sizes,
+                      want=("cost",))
+    dense_bytes = int(np.prod(cb.shape)) * 4
+    print(f"solve(want=('cost',)): costs={np.round(cost_only.cost(), 4)} "
+          f"fetched {cost_only.fetched_bytes}B (dense plans would move "
+          f"{dense_bytes}B — {dense_bytes // cost_only.fetched_bytes}x)")
+    sols = solve(OT, insts, 0.05,
+                 DispatchPolicy(mode="compact", guaranteed=True),
+                 want=("cost", "duals", "plan_sparse"))
+    s0 = sols[0]
+    sp = s0.plan_sparse()
+    assert np.array_equal(
+        sp.to_dense(),
+        solve(OT, insts, 0.05,
+              DispatchPolicy(mode="compact", guaranteed=True),
+              want=("plan",))[0].plan())
+    print(f"Solution[0]: cost={s0.cost:.5f} plan_nnz={sp.nnz} "
+          f"({sp.nbytes}B sparse vs {4 * sp.shape[0] * sp.shape[1]}B "
+          f"dense, to_dense() bit-identical)")
+    print(f"  certificate: additive_gap={s0.additive_gap():.5f} <= "
+          f"eps*m*max(c)={s0.additive_gap_bound():.5f} "
+          f"dual_feasible={s0.dual_feasible()} "
+          f"(stats: {s0.stats.mode}, {s0.stats.dispatches} dispatches on "
+          f"{s0.stats.devices} device(s))")
+
 
 if __name__ == "__main__":
     main()

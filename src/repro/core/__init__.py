@@ -4,6 +4,14 @@ from .pushrelabel import solve_assignment, solve_assignment_int, AssignmentResul
 from .transport import solve_ot, solve_ot_int, OTResult, northwest_corner
 from .problem import ASSIGNMENT, OT, AssignmentSpec, OTSpec, ProblemSpec
 from .api import DispatchPolicy, solve
+from .solution import (
+    ArtifactNotRequested,
+    Solution,
+    SolutionBatch,
+    SolveStats,
+    SparsePlan,
+    SparsePlanBatch,
+)
 from .batched import (
     BatchedAssignmentResult,
     solve_assignment_batched,
@@ -28,6 +36,8 @@ from .sinkhorn import sinkhorn
 __all__ = [
     "ASSIGNMENT", "OT", "AssignmentSpec", "OTSpec", "ProblemSpec",
     "DispatchPolicy", "solve",
+    "ArtifactNotRequested", "Solution", "SolutionBatch", "SolveStats",
+    "SparsePlan", "SparsePlanBatch",
     "solve_assignment", "solve_assignment_int", "AssignmentResult",
     "solve_ot", "solve_ot_int", "OTResult", "northwest_corner",
     "solve_assignment_batched", "solve_assignment_ragged",

@@ -16,9 +16,28 @@ single code path to whichever driver the :class:`DispatchPolicy` selects:
 Results are IDENTICAL across policies for the batch-sharded family
 (lockstep == compact == mesh/batch, bit for bit); mesh/matrix matches to
 reassociation ulps in the float epilogue (the documented shape caveat in
-core/distributed.py). The serving layers (``OTService``,
-``AsyncOTScheduler``) and the ragged ``solve_*_ragged`` wrappers all call
-this front door, so a new dispatch strategy lands in exactly one place.
+core/distributed.py).
+
+Result surface — callers declare artifacts up front:
+
+    sols = solve(OT, instances, eps, want=("cost", "duals"))
+    sols[0].cost, sols[0].additive_gap()
+
+``want=`` (a tuple of artifact names, also settable on the policy) makes
+``solve`` return the typed Solution surface (core/solution.py): a
+:class:`~repro.core.solution.SolutionBatch` for the pre-batched dict
+form, a list of per-instance :class:`~repro.core.solution.Solution`
+views for the ragged form. Artifacts are fetched device->host lazily and
+at most once, so cost-only traffic moves O(B) scalars instead of the
+O(B * m * n) dense plans; un-requested artifacts raise instead of
+silently paying the bandwidth. With ``want=None`` (default) the legacy
+surfaces are returned unchanged — ``(result, stats)`` for the dict form,
+per-instance dicts for the ragged form — produced by a thin adapter over
+the same Solution machinery, bit-identical to the historical values.
+
+The serving layers (``OTService``, ``AsyncOTScheduler``) and the ragged
+``solve_*_ragged`` wrappers all call this front door, so a new dispatch
+strategy lands in exactly one place.
 """
 from __future__ import annotations
 
@@ -27,10 +46,11 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .compaction import DEFAULT_CHUNK, solve_compacting
+from .compaction import DEFAULT_CHUNK, CompactionStats, solve_compacting
 from .distributed import solve_mesh
 from .problem import ASSIGNMENT, OT  # noqa: F401  (re-exported: the
 #   front door and the specs it dispatches are one import site)
+from .solution import Solution, SolutionBatch, SolveStats
 
 _MODES = ("auto", "lockstep", "compact", "mesh")
 
@@ -51,6 +71,9 @@ class DispatchPolicy:
         core/batched.py defaults; oversized shapes mint ceil-pow2
         buckets).
       guaranteed: run at eps/3 for the paper's <= OPT + eps*m bound.
+      want: artifacts to expose on the typed Solution surface (e.g.
+        ``("cost", "duals", "plan_sparse")``); None keeps the legacy
+        return surface. ``solve(..., want=...)`` overrides this.
     """
     mode: str = "auto"
     mesh: Any = None
@@ -58,6 +81,7 @@ class DispatchPolicy:
     chunk: Optional[int] = None
     buckets: Optional[Tuple[int, ...]] = None
     guaranteed: bool = False
+    want: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -76,7 +100,9 @@ class DispatchPolicy:
     @classmethod
     def from_legacy(cls, compact: bool, mesh=None, *, chunk=None,
                     buckets=None, guaranteed: bool = False,
-                    placement: str = "auto") -> "DispatchPolicy":
+                    placement: str = "auto",
+                    want: Optional[Tuple[str, ...]] = None
+                    ) -> "DispatchPolicy":
         """Map the legacy ``compact=``/``mesh=`` keyword surface
         (``solve_*_ragged``, ``OTService``) onto a policy — the ONE place
         that mapping and its mesh-requires-compact rule live."""
@@ -88,7 +114,8 @@ class DispatchPolicy:
                 else ("compact" if compact else "lockstep"))
         return cls(mode=mode, mesh=mesh, placement=placement, chunk=chunk,
                    buckets=None if buckets is None else tuple(buckets),
-                   guaranteed=guaranteed)
+                   guaranteed=guaranteed,
+                   want=None if want is None else tuple(want))
 
 
 def dispatch(
@@ -103,22 +130,25 @@ def dispatch(
 ):
     """Solve ONE pre-batched bucket (dict of (B, ...) operands) under
     ``policy``. Returns ``(result, stats)`` — ``stats`` is None for the
-    lockstep path (it has no chunk/occupancy accounting),
-    CompactionStats for compact, DistributedStats for mesh."""
+    plain lockstep path (it has no chunk/occupancy accounting),
+    CompactionStats for compact (and for lockstep with
+    ``keep_state=True``, which stashes the pre-completion state on a
+    minimal stats object), DistributedStats for mesh."""
     policy = policy or DispatchPolicy()
     mode = policy.resolved_mode()
     if mode == "lockstep":
-        if keep_state:
-            # the lockstep path has no stats object to carry the
-            # pre-completion state; fail loudly like the other paths
-            raise ValueError("keep_state=True requires mode='compact' or "
-                             "mesh batch placement")
         eps_u = np.unique(np.asarray(eps, np.float64))
         if eps_u.size > 1:
             raise ValueError("per-instance eps requires compact=True")
-        return spec.solve_lockstep(
+        r, state = spec.solve_lockstep(
             inputs, float(eps_u[0]), sizes=sizes,
-            guaranteed=policy.guaranteed, **prep_kw), None
+            guaranteed=policy.guaranteed, keep_state=keep_state, **prep_kw)
+        if keep_state:
+            b = int(np.shape(inputs["c"])[0])
+            st = CompactionStats(batch=b, dispatched_batch=b, chunk=0,
+                                 dispatches=1, final_state=state)
+            return r, st
+        return r, None
     k = DEFAULT_CHUNK if policy.chunk is None else int(policy.chunk)
     if mode == "compact":
         return solve_compacting(
@@ -132,6 +162,26 @@ def dispatch(
     raise ValueError(f"unknown dispatch mode {mode!r}")
 
 
+def _wrap_solution(
+    spec, inputs: Dict[str, Any], eps, policy: DispatchPolicy,
+    r, stats, *, sizes, want: Optional[Tuple[str, ...]],
+    bucket: Optional[Tuple[int, int]] = None,
+) -> SolutionBatch:
+    """Wrap one dispatched bucket result in a SolutionBatch (the typed
+    surface); device arrays stay put until an artifact is fetched."""
+    inputs_c = spec.canonicalize(inputs)
+    b = int(spec.batch_shape(inputs_c)[0])
+    eps_user = np.broadcast_to(np.asarray(eps, np.float64), (b,)).copy()
+    eps_internal = eps_user / 3.0 if policy.guaranteed else eps_user
+    sstats = SolveStats.from_driver(stats, mode=policy.resolved_mode(),
+                                    batch=b, bucket=bucket)
+    state = getattr(stats, "final_state", None) if stats is not None else None
+    return SolutionBatch(
+        spec, r, stats=sstats, driver_stats=stats, inputs=inputs_c,
+        sizes=sizes, eps=eps_user, eps_internal=eps_internal,
+        guaranteed=policy.guaranteed, want=want, state=state)
+
+
 def solve(
     spec,
     instances: Union[Sequence, Dict[str, Any]],
@@ -140,39 +190,76 @@ def solve(
     *,
     sizes=None,
     keep_state: bool = False,
+    want: Optional[Sequence[str]] = None,
     **prep_kw,
-):
+) -> Union[SolutionBatch, List[Solution], Tuple[Any, Any], List[dict]]:
     """The front door. Two input forms:
 
     * ``instances`` is a DICT of pre-batched (B, ...) operands (``{"c":
       ...}`` for ``ASSIGNMENT``, ``{"c": ..., "nu": ..., "mu": ...}`` for
       ``OT``; ``sizes`` gives true shapes inside the padding): one bucket
-      is dispatched and ``(result, stats)`` returned — this is what the
-      serving layers call per bucket.
+      is dispatched — this is what the serving layers call per bucket.
+      Returns a :class:`SolutionBatch` when ``want`` is declared, the
+      legacy ``(result, stats)`` tuple otherwise.
 
     * ``instances`` is a ragged LIST (cost matrices for ``ASSIGNMENT``,
       ``(c, nu, mu)`` triples for ``OT``): instances are grouped into
-      shape buckets (``policy.buckets``), padded, dispatched per bucket,
-      and a list of per-instance result dicts is returned in input order.
+      shape buckets (``policy.buckets``), padded, dispatched per bucket.
+      Returns per-instance :class:`Solution` views (input order) when
+      ``want`` is declared, the legacy per-instance dicts otherwise.
       ``eps`` may be per-instance; under lockstep mode each bucket is
       sub-grouped by eps value (lockstep bakes eps into the compiled
       program), so mixed-accuracy sets work under EVERY policy.
+
+    ``want`` declares the artifacts the caller will fetch (see
+    ``spec.artifacts``; e.g. ``("cost", "duals", "plan_sparse")``). The
+    pre-completion integer ``state`` is just another artifact: asking for
+    it (or passing ``keep_state=True``) retains it on every dispatch
+    path, including lockstep and the ragged form.
     """
     policy = policy or DispatchPolicy()
+    if want is None:
+        want = policy.want
+    if want is not None:
+        want = tuple(want)
+        unknown = [w for w in want if w not in spec.artifacts]
+        if unknown:
+            raise ValueError(f"unknown artifact(s) {unknown} for spec "
+                             f"{spec.name!r}; available: {spec.artifacts}")
+        if keep_state and "state" not in want:
+            # an explicit keep_state IS a request for the state artifact:
+            # promote it into the declaration rather than retaining a
+            # state the gating would then refuse to hand over
+            want = want + ("state",)
+        keep_state = keep_state or "state" in want
     if isinstance(instances, dict):
-        return dispatch(spec, instances, eps, sizes=sizes, policy=policy,
-                        keep_state=keep_state, **prep_kw)
-    if keep_state:
-        # the ragged path returns per-instance dicts, not (result, stats)
-        # — there is nowhere to surface the pre-completion state; fail
-        # loudly instead of silently dropping the flag
-        raise ValueError("keep_state=True requires the pre-batched dict "
-                         "input form (it is returned on the stats)")
-    return _solve_ragged(spec, list(instances), eps, policy, **prep_kw)
+        if want is None:
+            return dispatch(spec, instances, eps, sizes=sizes,
+                            policy=policy, keep_state=keep_state, **prep_kw)
+        r, stats = dispatch(spec, instances, eps, sizes=sizes,
+                            policy=policy, keep_state=keep_state, **prep_kw)
+        return _wrap_solution(spec, instances, eps, policy, r, stats,
+                              sizes=sizes, want=want)
+    sols = _solve_ragged(spec, list(instances), eps, policy,
+                         keep_state=keep_state, want=want, **prep_kw)
+    if want is not None:
+        return sols
+    # legacy adapter: the historical per-instance dicts, produced from the
+    # same Solution views (bit-identical values; ``state`` rides along
+    # when requested instead of raising as the pre-Solution surface did)
+    out = []
+    for s in sols:
+        d = s.legacy_dict()
+        if keep_state:
+            d["state"] = s.state()
+        out.append(d)
+    return out
 
 
-def _solve_ragged(spec, instances: list, eps,
-                  policy: DispatchPolicy, **prep_kw) -> List[dict]:
+def _solve_ragged(spec, instances: list, eps, policy: DispatchPolicy,
+                  *, keep_state: bool = False,
+                  want: Optional[Tuple[str, ...]] = None,
+                  **prep_kw) -> List[Solution]:
     from .batched import DEFAULT_BUCKETS, bucket_instances
 
     shapes = [spec.instance_shape(x) for x in instances]
@@ -181,7 +268,7 @@ def _solve_ragged(spec, instances: list, eps,
     buckets = (DEFAULT_BUCKETS if policy.buckets is None
                else tuple(policy.buckets))
     lockstep = policy.resolved_mode() == "lockstep"
-    results: List[Optional[dict]] = [None] * len(instances)
+    results: List[Optional[Solution]] = [None] * len(instances)
     for grp in bucket_instances(shapes, buckets):
         if lockstep:
             # lockstep compiles eps into the program: sub-group the
@@ -196,16 +283,14 @@ def _solve_ragged(spec, instances: list, eps,
             inputs = spec.pad_group([instances[i] for i in idx], grp.key)
             sz = np.asarray([shapes[i] for i in idx], np.int32)
             r, stats = dispatch(spec, inputs, eps_arr[idx], sizes=sz,
-                                policy=policy, **prep_kw)
-            # one device->host fetch per result array, not per instance
-            host = spec.fetch(r)
+                                policy=policy, keep_state=keep_state,
+                                **prep_kw)
+            batch = _wrap_solution(spec, inputs, eps_arr[idx], policy, r,
+                                   stats, sizes=sz, want=want,
+                                   bucket=grp.key)
+            # per-instance views share the batch's device arrays and its
+            # fetch cache: one device->host fetch per artifact per
+            # bucket, never per instance
             for j, i in enumerate(idx):
-                out = spec.unpack(host, j, shapes[i])
-                out["batch_size"] = len(idx)
-                out["bucket"] = grp.key
-                if stats is not None:
-                    out["dispatches"] = stats.dispatches
-                    if hasattr(stats, "devices"):
-                        out["devices"] = stats.devices
-                results[i] = out
+                results[i] = batch[j]
     return results

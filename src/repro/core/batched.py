@@ -44,7 +44,12 @@ from .problem import (
     _theta_array,
     pow2_at_least,
 )
-from .pushrelabel import assignment_pipeline
+from .pushrelabel import (
+    assignment_epilogue,
+    assignment_pipeline,
+    assignment_prologue,
+    solve_assignment_int,
+)
 from .transport import OTResult, ot_pipeline
 
 DEFAULT_BUCKETS: tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024, 2048)
@@ -83,13 +88,33 @@ def _solve_assignment_batched(c, m_valid, n_valid, threshold, eps: float):
     )(c, m_valid, n_valid, threshold)
 
 
+@partial(jax.jit, static_argnames=("eps",))
+def _solve_assignment_batched_state(c, m_valid, n_valid, threshold,
+                                    eps: float):
+    """``_solve_assignment_batched`` that ALSO returns the pre-completion
+    integer state — the same prologue -> solve_assignment_int -> epilogue
+    composition ``assignment_pipeline`` is made of, so the per-instance
+    trajectory (and the result) is identical; only the state escapes the
+    program. Used when the Solution surface requests the ``state``
+    artifact (want/keep_state) under lockstep dispatch."""
+
+    def one(ci, mv, nv, th):
+        cm, c_int, scale, row_ok, col_ok = assignment_prologue(
+            ci, eps, mv, nv)
+        st = solve_assignment_int(c_int, eps, m_valid=mv, threshold=th)
+        return assignment_epilogue(cm, scale, st, eps, row_ok, col_ok), st
+
+    return jax.vmap(one)(c, m_valid, n_valid, threshold)
+
+
 def solve_assignment_batched(
     c: jnp.ndarray,
     eps: float,
     *,
     sizes=None,
     guaranteed: bool = False,
-) -> BatchedAssignmentResult:
+    keep_state: bool = False,
+):
     """Solve B assignment instances stacked as one (B, M, N) cost tensor.
 
     Args:
@@ -98,6 +123,10 @@ def solve_assignment_batched(
       eps: additive error parameter (shared across the batch - bucket
         dispatches share one compiled program per (shape, eps)).
       sizes: optional host (B, 2) int array of true instance shapes.
+      keep_state: ALSO return the batched pre-completion integer state
+        (``(BatchedAssignmentResult, PushRelabelState)`` instead of just
+        the result) for feasibility certificates / the ``state``
+        artifact of the Solution surface.
     """
     if guaranteed:
         eps = eps / 3.0
@@ -109,11 +138,14 @@ def solve_assignment_batched(
     # Termination thresholds in host float64, matching the unbatched
     # int(eps * m) exactly (f32 rounding flips the floor for some eps).
     threshold = np.asarray([int(eps * int(mi)) for mi in m_valid], np.int32)
-    r = _solve_assignment_batched(
-        c, jnp.asarray(m_valid), jnp.asarray(n_valid),
-        jnp.asarray(threshold), eps
-    )
-    return BatchedAssignmentResult(
+    args = (c, jnp.asarray(m_valid), jnp.asarray(n_valid),
+            jnp.asarray(threshold))
+    state = None
+    if keep_state:
+        r, state = _solve_assignment_batched_state(*args, eps)
+    else:
+        r = _solve_assignment_batched(*args, eps)
+    out = BatchedAssignmentResult(
         matching=r.matching,
         cost=r.cost,
         y_b=r.y_b,
@@ -122,6 +154,7 @@ def solve_assignment_batched(
         rounds=r.rounds,
         matched_before_completion=r.matched_before_completion,
     )
+    return (out, state) if keep_state else out
 
 
 # --------------------------------------------------------------------------

@@ -280,6 +280,7 @@ def solve_ot_batched_compacting(
     theta=None,
     k: int = DEFAULT_CHUNK,
     guaranteed: bool = False,
+    keep_state: bool = False,
 ):
     """Compacting counterpart of ``solve_ot_batched``; binds ``OT`` to
     :func:`solve_compacting`. Same contract as the lockstep path
@@ -288,4 +289,4 @@ def solve_ot_batched_compacting(
     ``(OTResult with leading batch axes, CompactionStats)``."""
     return solve_compacting(OT, {"c": c, "nu": nu, "mu": mu}, eps,
                             sizes=sizes, k=k, guaranteed=guaranteed,
-                            theta=theta)
+                            keep_state=keep_state, theta=theta)

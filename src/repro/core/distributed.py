@@ -332,10 +332,11 @@ def solve_mesh(
     mode = (choose_placement(b, m, n, d) if placement == "auto"
             else placement)
     if mode == "matrix" and b > 0:
-        if keep_state:
+        if keep_state and not getattr(spec, "state_on_result", False):
             # the matrix path discards the per-instance integer state
-            # (the sharded epilogue consumes it); fail loudly rather than
-            # hand back final_state=None
+            # (the sharded epilogue consumes it) unless the spec's result
+            # carries it (OT does); fail loudly rather than hand back
+            # final_state=None
             raise ValueError("keep_state=True requires batch placement "
                              "(pass placement='batch')")
         return _solve_matrix(spec, inputs, eps, mesh, sizes, guaranteed,

@@ -137,13 +137,30 @@ class ProblemSpec(Protocol):
     def instance_shape(self, inst) -> Tuple[int, int]: ...
     def pad_group(self, insts, key) -> Dict[str, Any]: ...
     def solve_lockstep(self, inputs, eps: float, *, sizes=None,
-                       guaranteed: bool = False, **kw): ...
-    def fetch(self, r) -> Dict[str, np.ndarray]: ...
-    def unpack(self, host: Dict[str, np.ndarray], j: int,
-               shape: Tuple[int, int]) -> Dict[str, Any]: ...
+                       guaranteed: bool = False,
+                       keep_state: bool = False, **kw): ...
     def matrix_instance(self, host, i, mi, ni, mp, np_, eps_i, mesh2,
                         row_axis, col_axis, **kw): ...
     def matrix_stack(self, rows, m_valid, n_valid, m: int, n: int): ...
+
+    # -- per-artifact producers (the Solution surface) ------------------
+    # The host-side epilogue is split per artifact so un-requested
+    # artifacts (above all the dense (B, M, N) plan and the raw integer
+    # state) are never materialized on host: ``artifact_device`` hands the
+    # DEVICE arrays for one artifact to core/solution.py, which fetches
+    # them lazily and at most once.
+    artifacts: Tuple[str, ...]
+    # whether the spec's RESULT already carries the pre-completion state
+    # (OT does; assignment needs the dispatch to retain it explicitly)
+    state_on_result: bool
+
+    def artifact_device(self, name: str, r, state) -> Dict[str, Any]: ...
+    def artifact_plan_dense(self, host: Dict[str, np.ndarray], batch: int,
+                            shape: Tuple[int, int]) -> np.ndarray: ...
+    def artifact_plan_sparse(self, r, fetch, batch: int,
+                             shape: Tuple[int, int]): ...
+    def artifact_state(self, r, state): ...
+    def legacy_instance_dict(self, sol) -> Dict[str, Any]: ...
 
 
 def _sizes_arrays(sizes, b, m, n):
@@ -338,28 +355,77 @@ class AssignmentSpec:
         return {"c": pad_stack(list(insts), key)}
 
     def solve_lockstep(self, inputs, eps: float, *, sizes=None,
-                       guaranteed: bool = False):
+                       guaranteed: bool = False, keep_state: bool = False):
         from .batched import solve_assignment_batched
 
+        if keep_state:
+            return solve_assignment_batched(
+                inputs["c"], eps, sizes=sizes, guaranteed=guaranteed,
+                keep_state=True)
         return solve_assignment_batched(inputs["c"], eps, sizes=sizes,
-                                        guaranteed=guaranteed)
+                                        guaranteed=guaranteed), None
 
-    def fetch(self, r):
-        return {
-            "matching": np.asarray(r.matching), "cost": np.asarray(r.cost),
-            "phases": np.asarray(r.phases), "rounds": np.asarray(r.rounds),
-            "y_b": np.asarray(r.y_b), "y_a": np.asarray(r.y_a),
-        }
+    # -- per-artifact producers ----------------------------------------
+    # Algorithm 1's deliverables, one producer each: the primal matching
+    # (and its unit transport-plan view), the scaled approximate duals,
+    # the objective, and the raw integer pre-completion state.
 
-    def unpack(self, host, j, shape):
-        mi, ni = shape
+    artifacts = ("cost", "duals", "matching", "plan", "plan_sparse",
+                 "state", "stats")
+    state_on_result = False
+
+    def artifact_device(self, name, r, state):
+        if name == "cost":
+            return {"cost": r.cost}
+        if name == "scalars":
+            return {"phases": r.phases, "rounds": r.rounds}
+        if name == "duals":
+            return {"y_b": r.y_b, "y_a": r.y_a}
+        if name in ("matching", "plan"):
+            # the dense plan is DERIVED from the compact matching on host;
+            # only the (B, M) matching ever crosses device->host
+            return {"matching": r.matching}
+        raise KeyError(name)
+
+    def artifact_plan_dense(self, host, batch, shape):
+        m, n = shape
+        matching = host["matching"][:batch]
+        out = np.zeros((batch, m, n), np.float32)
+        b_idx, r_idx = np.nonzero(matching >= 0)
+        out[b_idx, r_idx, matching[b_idx, r_idx]] = 1.0
+        return out
+
+    def artifact_plan_sparse(self, r, fetch, batch, shape):
+        from .solution import SparsePlanBatch
+
+        m, n = shape
+        matching = fetch("matching")["matching"][:batch].astype(np.int64)
+        valid = matching >= 0
+        nnz = valid.sum(axis=1).astype(np.int32)
+        k = min(pow2_at_least(int(nnz.max(initial=1))), max(m * n, 1))
+        idx = np.full((batch, k), m * n, np.int32)
+        vals = np.zeros((batch, k), np.float32)
+        for j in range(batch):
+            rows = np.flatnonzero(valid[j])
+            idx[j, :rows.size] = rows * n + matching[j, rows]
+            vals[j, :rows.size] = 1.0
+        return SparsePlanBatch(idx=idx, vals=vals, nnz=nnz,
+                               shape=(int(m), int(n)))
+
+    def artifact_state(self, r, state):
+        # BatchedAssignmentResult carries no state: it exists only when
+        # the dispatch retained it (keep_state / want=("state",))
+        return state
+
+    def legacy_instance_dict(self, sol):
+        y_b, y_a = sol.duals()
         return {
-            "matching": host["matching"][j, :mi],
-            "cost": float(host["cost"][j]),
-            "phases": int(host["phases"][j]),
-            "rounds": int(host["rounds"][j]),
-            "y_b": host["y_b"][j, :mi],
-            "y_a": host["y_a"][j, :ni],
+            "matching": sol.matching(),
+            "cost": sol.cost,
+            "phases": sol.phases,
+            "rounds": sol.rounds,
+            "y_b": y_b,
+            "y_a": y_a,
         }
 
     # -- matrix placement (row/col sharding per large instance) --------
@@ -519,28 +585,56 @@ class OTSpec:
                 "mu": pad_stack([mu for _, _, mu in insts], (nb,))}
 
     def solve_lockstep(self, inputs, eps: float, *, sizes=None,
-                       guaranteed: bool = False, theta=None):
+                       guaranteed: bool = False, keep_state: bool = False,
+                       theta=None):
         from .batched import solve_ot_batched
 
-        return solve_ot_batched(inputs["c"], inputs["nu"], inputs["mu"],
-                                eps, sizes=sizes, theta=theta,
-                                guaranteed=guaranteed)
+        r = solve_ot_batched(inputs["c"], inputs["nu"], inputs["mu"],
+                             eps, sizes=sizes, theta=theta,
+                             guaranteed=guaranteed)
+        # the OT result already carries its pre-completion state
+        return (r, r.state) if keep_state else (r, None)
 
-    def fetch(self, r):
-        return {
-            "plan": np.asarray(r.plan), "cost": np.asarray(r.cost),
-            "phases": np.asarray(r.phases), "rounds": np.asarray(r.rounds),
-            "theta": np.asarray(r.theta),
-        }
+    # -- per-artifact producers ----------------------------------------
+    # Algorithm 2's deliverables, one producer each: the primal plan
+    # (dense on demand, compact COO by default), the scaled approximate
+    # duals of the clustered copies, the objective, and the raw integer
+    # state for the Lemma 4.1 certificates.
 
-    def unpack(self, host, j, shape):
-        mi, ni = shape
+    artifacts = ("cost", "duals", "plan", "plan_sparse", "state", "stats")
+    state_on_result = True
+
+    def artifact_device(self, name, r, state):
+        if name == "cost":
+            return {"cost": r.cost}
+        if name == "scalars":
+            return {"phases": r.phases, "rounds": r.rounds,
+                    "theta": r.theta}
+        if name == "duals":
+            return {"y_b": r.y_b, "y_a": r.y_a}
+        if name == "plan":
+            return {"plan": r.plan}
+        raise KeyError(name)
+
+    def artifact_plan_dense(self, host, batch, shape):
+        return host["plan"][:batch]
+
+    def artifact_plan_sparse(self, r, fetch, batch, shape):
+        from .solution import sparse_from_dense_device
+
+        # compacted ON DEVICE: only the COO triplets cross to host
+        return sparse_from_dense_device(r.plan, batch)
+
+    def artifact_state(self, r, state):
+        return state if state is not None else r.state
+
+    def legacy_instance_dict(self, sol):
         return {
-            "plan": host["plan"][j, :mi, :ni],
-            "cost": float(host["cost"][j]),
-            "phases": int(host["phases"][j]),
-            "rounds": int(host["rounds"][j]),
-            "theta": float(host["theta"][j]),
+            "plan": sol.plan(),
+            "cost": sol.cost,
+            "phases": sol.phases,
+            "rounds": sol.rounds,
+            "theta": sol.theta,
         }
 
     # -- matrix placement ----------------------------------------------

@@ -1,0 +1,648 @@
+"""Typed ``Solution`` result surface: lazy artifact fetch, compact sparse
+plans, and a-posteriori certificates — the paper's deliverables as an API.
+
+The paper's headline advantages over Sinkhorn are that the push-relabel
+solver "readily provides a compact transport plan as well as a solution to
+an approximate version of the dual formulation". This module is where both
+become first-class results instead of fields buried in a dense NamedTuple:
+
+  ``cost``         the primal objective <plan, C> (Theorem 1.2 / 1.3:
+                   cost <= OPT + eps * m once ``guaranteed=True`` runs the
+                   solver at eps/3 — rounding + completion + eps-feasibility
+                   each contribute <= eps/3 * m after rescaling).
+  ``duals``        the approximate DUAL solution (y_b, y_a): scaled copies
+                   of the integer duals the push-relabel loop maintains.
+                   They are eps-feasible — y(b) + y(a) <= c(b, a) + eps *
+                   max(c) on every edge (paper invariant I2) — which makes
+                   sum-form dual objectives a certified LOWER bound on OPT
+                   up to eps * m * max(c) (see ``additive_gap``).
+  ``plan`` /       the primal transport plan. The push-relabel plan is
+  ``plan_sparse``  COMPACT (Lahn-Mulchandani-Raghvendra frame sparse
+                   support as the deliverable of combinatorial OT): its
+                   support is O(m + n) in practice versus the dense m*n of
+                   Sinkhorn, so ``plan_sparse()`` ships COO triplets and
+                   ``SparsePlan.to_dense()`` reproduces the dense plan
+                   bit for bit.
+  ``matching``     Algorithm 1's primal: the (partial-then-completed)
+                   row -> column matching.
+  ``state``        the raw integer pre-completion solver state, for the
+                   machine-checkable certificates in core/feasibility.py.
+  ``stats``        uniform dispatch accounting (:class:`SolveStats`) with
+                   explicit defaults across lockstep/compact/mesh paths.
+
+Artifacts are fetched from device to host LAZILY and at most once: a
+``SolutionBatch`` holds the device-resident batched result, and each
+accessor materializes only its own arrays (tracked by ``fetched_bytes``).
+Callers declare artifacts up front via ``solve(..., want=("cost",))``;
+an un-declared accessor raises :class:`ArtifactNotRequested` so a serving
+path can never silently pay O(B * m * n) device->host bandwidth for a
+plan nobody asked for — cost-only traffic moves O(B) scalars.
+
+Certificates are computed ON DEVICE (O(B) scalars fetched): the dual
+objective, the eps-feasibility margin, and ``additive_gap() = cost -
+dual_objective``, an a-posteriori upper bound on ``cost - OPT`` up to the
+eps * m * max(c) dual slack (paper Lemma 3.2 bounds every term; see
+``additive_gap_bound``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .problem import pow2_at_least
+
+__all__ = [
+    "ArtifactNotRequested",
+    "SolveStats",
+    "SparsePlan",
+    "SparsePlanBatch",
+    "Solution",
+    "SolutionBatch",
+]
+
+
+class ArtifactNotRequested(ValueError):
+    """Accessing an artifact that was not declared in ``want=``."""
+
+
+# --------------------------------------------------------------------------
+# Uniform dispatch stats (satellite: "devices"/"dispatches" with defaults)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SolveStats:
+    """Per-dispatch accounting, uniform across EVERY dispatch path.
+
+    The legacy surfaces leaked the driver through the result: ``devices``
+    existed only on mesh results, ``dispatches`` was absent on lockstep.
+    Here every field exists with an explicit default (lockstep is one
+    dispatch on one device), so callers never probe with ``hasattr``.
+    """
+    mode: str                      # "lockstep" | "compact" | "mesh"
+    batch: int                     # real instances in the dispatch
+    bucket: Optional[Tuple[int, int]] = None   # padded dispatch shape
+    dispatches: int = 1
+    devices: int = 1
+    placement: str = "batch"
+    chunk: Optional[int] = None
+    occupancy: Tuple[Tuple[int, int], ...] = ()
+    collapsed_at: Optional[int] = None
+
+    @classmethod
+    def from_driver(cls, st: Any, *, mode: str, batch: int,
+                    bucket: Optional[Tuple[int, int]] = None) -> "SolveStats":
+        """Fold a driver stats object (CompactionStats, DistributedStats,
+        or None for the lockstep path) into the uniform surface."""
+        if st is None:
+            return cls(mode=mode, batch=batch, bucket=bucket)
+        return cls(
+            mode=mode, batch=batch, bucket=bucket,
+            dispatches=int(st.dispatches) or 1,
+            devices=int(getattr(st, "devices", 1)),
+            placement=str(getattr(st, "placement", "batch")),
+            chunk=int(st.chunk) if st.chunk else None,
+            occupancy=tuple(tuple(o) for o in st.occupancy),
+            collapsed_at=getattr(st, "collapsed_at", None),
+        )
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "mode": self.mode, "batch": self.batch, "bucket": self.bucket,
+            "dispatches": self.dispatches, "devices": self.devices,
+            "placement": self.placement, "chunk": self.chunk,
+            "occupancy": [list(o) for o in self.occupancy],
+            "collapsed_at": self.collapsed_at,
+        }
+
+
+# --------------------------------------------------------------------------
+# Device-side helpers (tiny jitted reductions: O(B) scalars cross to host)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _count_nnz(plan):
+    return jnp.sum(plan != 0, axis=(1, 2)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _coo_extract(plan, k: int):
+    """Per-instance COO extraction at static capacity ``k``: flat indices
+    (fill = m*n past each instance's nnz) and the gathered values."""
+    b, m, n = plan.shape
+    flat = plan.reshape(b, m * n)
+
+    def one(f):
+        idx = jnp.nonzero(f, size=k, fill_value=m * n)[0].astype(jnp.int32)
+        vals = jnp.where(idx < m * n, f[jnp.clip(idx, 0, m * n - 1)],
+                         jnp.float32(0.0))
+        return idx, vals
+
+    return jax.vmap(one)(flat)
+
+
+@jax.jit
+def _masked_max(c, m_valid, n_valid):
+    """(B,) max cost over each instance's valid block — the solver's
+    rescaling factor (``scale`` in the prologues)."""
+    _, m, n = c.shape
+    rok = jnp.arange(m)[None, :] < m_valid[:, None]
+    cok = jnp.arange(n)[None, :] < n_valid[:, None]
+    mask = rok[:, :, None] & cok[:, None, :]
+    return jnp.max(jnp.where(mask, c, 0.0), axis=(1, 2))
+
+
+@jax.jit
+def _dual_obj_assignment(y_b, y_a, m_valid, n_valid):
+    _, m = y_b.shape
+    _, n = y_a.shape
+    rok = jnp.arange(m)[None, :] < m_valid[:, None]
+    cok = jnp.arange(n)[None, :] < n_valid[:, None]
+    return (jnp.sum(jnp.where(rok, y_b, 0.0), axis=1)
+            + jnp.sum(jnp.where(cok, y_a, 0.0), axis=1))
+
+
+@jax.jit
+def _dual_obj_ot(y_b, y_a, nu, mu, m_valid, n_valid):
+    _, m = y_b.shape
+    _, n = y_a.shape
+    rok = jnp.arange(m)[None, :] < m_valid[:, None]
+    cok = jnp.arange(n)[None, :] < n_valid[:, None]
+    return (jnp.sum(jnp.where(rok, nu * y_b, 0.0), axis=1)
+            + jnp.sum(jnp.where(cok, mu * y_a, 0.0), axis=1))
+
+
+@jax.jit
+def _feasibility_margin(c, y_b, y_a, m_valid, n_valid, col_live):
+    """(B,) max over each instance's live edges of y_b[i] + y_a[j] - c[i,j]
+    (eps-feasibility holds when this is <= eps * scale up to f32 slop)."""
+    _, m, n = c.shape
+    rok = jnp.arange(m)[None, :] < m_valid[:, None]
+    cok = (jnp.arange(n)[None, :] < n_valid[:, None]) & col_live
+    s = y_b[:, :, None] + y_a[:, None, :] - c
+    mask = rok[:, :, None] & cok[:, None, :]
+    neg = jnp.float32(-np.inf)
+    return jnp.max(jnp.where(mask, s, neg), axis=(1, 2))
+
+
+@jax.jit
+def _masked_sum(v, valid):
+    _, m = v.shape
+    ok = jnp.arange(m)[None, :] < valid[:, None]
+    return jnp.sum(jnp.where(ok, v, 0.0), axis=1)
+
+
+# --------------------------------------------------------------------------
+# Compact sparse transport plans
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SparsePlan:
+    """One instance's transport plan as COO triplets.
+
+    The push-relabel plan is compact: its support is bounded by the flow
+    support of Algorithm 2 plus the two northwest-corner repairs (each
+    <= m + n - 1 entries), observed <= ~3 * max(m, n) in practice versus
+    the dense m * n a Sinkhorn plan ships. ``to_dense()`` scatters the
+    verbatim f32 values back, reproducing the dense plan bit for bit.
+    """
+    rows: np.ndarray    # (nnz,) int32
+    cols: np.ndarray    # (nnz,) int32
+    vals: np.ndarray    # (nnz,) float32
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.rows.nbytes + self.cols.nbytes + self.vals.nbytes)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, np.float32)
+        out[self.rows, self.cols] = self.vals
+        return out
+
+
+@dataclass(frozen=True)
+class SparsePlanBatch:
+    """Batched COO plans at a shared capacity (one extraction program per
+    (bucket shape, pow2 capacity)); ``idx`` is flat row-major with fill
+    ``m * n`` past each instance's ``nnz``."""
+    idx: np.ndarray     # (B, K) int32 flat indices, fill = m * n
+    vals: np.ndarray    # (B, K) float32
+    nnz: np.ndarray     # (B,) int32
+    shape: Tuple[int, int]          # padded bucket shape (m, n)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.idx.nbytes + self.vals.nbytes + self.nnz.nbytes)
+
+    def instance(self, j: int, shape: Optional[Tuple[int, int]] = None
+                 ) -> SparsePlan:
+        m, n = self.shape
+        k = int(self.nnz[j])
+        idx = self.idx[j, :k].astype(np.int64)
+        return SparsePlan(rows=(idx // n).astype(np.int32),
+                          cols=(idx % n).astype(np.int32),
+                          vals=self.vals[j, :k],
+                          shape=tuple(shape) if shape else (m, n))
+
+
+# --------------------------------------------------------------------------
+# The Solution surface
+# --------------------------------------------------------------------------
+
+class SolutionBatch:
+    """Typed, lazily-fetched view over one dispatched batch result.
+
+    Construction does NOT move the result to host: the batched device
+    arrays stay put, and each artifact accessor fetches exactly its own
+    arrays, once (``fetched_bytes`` audits the device->host traffic).
+    ``want`` (from ``solve(..., want=...)``) gates the accessors; ``None``
+    allows everything lazily.
+
+    Index with ``batch[i]`` (or iterate) for per-instance
+    :class:`Solution` views sharing this batch's fetch cache.
+    """
+
+    def __init__(self, spec: Any, result: Any, *, stats: SolveStats,
+                 driver_stats: Any = None, inputs: Dict[str, Any],
+                 sizes: Optional[np.ndarray], eps: np.ndarray,
+                 eps_internal: np.ndarray, guaranteed: bool = False,
+                 want: Optional[Tuple[str, ...]] = None,
+                 state: Any = None) -> None:
+        self.spec = spec
+        self.stats = stats
+        self.guaranteed = guaranteed
+        self._r = result
+        self._driver_stats = driver_stats
+        self._inputs = inputs
+        self._state = state
+        b, m, n = spec.batch_shape(inputs) if inputs else (0, 0, 0)
+        self.batch = int(stats.batch)
+        self.padded_shape = (int(m), int(n))
+        if sizes is None:
+            sizes = np.stack(
+                [np.full((self.batch,), m, np.int32),
+                 np.full((self.batch,), n, np.int32)], axis=1)
+        self.sizes = np.asarray(sizes, np.int32)
+        self.eps = np.asarray(eps, np.float64)
+        self.eps_internal = np.asarray(eps_internal, np.float64)
+        self.want = None if want is None else tuple(want)
+        if self.want is not None:
+            unknown = [w for w in self.want if w not in spec.artifacts]
+            if unknown:
+                raise ValueError(
+                    f"unknown artifact(s) {unknown} for spec "
+                    f"{spec.name!r}; available: {spec.artifacts}")
+        self._host: Dict[str, Dict[str, np.ndarray]] = {}
+        self._sparse: Optional[SparsePlanBatch] = None
+        self._plan_dense: Optional[np.ndarray] = None
+        self._derived: Dict[str, np.ndarray] = {}
+        self._prune_unwanted()
+
+    def _prune_unwanted(self) -> None:
+        """With a declared ``want``, drop the device references to big
+        buffers the gating forbids reading — the dense plan, the integer
+        state's flow matrices, and (when the ``duals`` certificate group
+        is not declared) the cost-matrix inputs — so a long-lived
+        Solution, e.g. one resolved onto a serving Future, never pins
+        O(B * M * N) device memory it can never fetch."""
+        if self.want is None:
+            return
+        r = self._r
+        kw = {}
+        if ("plan" not in self.want and "plan_sparse" not in self.want
+                and getattr(r, "plan", None) is not None):
+            kw["plan"] = None
+        if "state" not in self.want:
+            self._state = None
+            if getattr(r, "state", None) is not None:
+                kw["state"] = None
+        if kw and hasattr(r, "_replace"):
+            self._r = r._replace(**kw)
+        if "duals" not in self.want:
+            # the certificate accessors (scale/mass/dual_objective/
+            # additive_gap/dual_feasible) are gated behind "duals"; with
+            # the group undeclared the inputs are unreachable
+            self._inputs = None
+
+    # -- fetch machinery ----------------------------------------------
+
+    def _check(self, name: str) -> None:
+        if self.want is not None and name not in self.want:
+            raise ArtifactNotRequested(
+                f"artifact {name!r} was not requested: this solve declared "
+                f"want={self.want}; add {name!r} to fetch it")
+
+    def _fetch(self, name: str) -> Dict[str, np.ndarray]:
+        """Host arrays for one artifact, fetched at most once."""
+        cached = self._host.get(name)
+        if cached is None:
+            dev = self.spec.artifact_device(name, self._r, self._state)
+            cached = {k: np.asarray(v) for k, v in dev.items()}
+            self._host[name] = cached
+        return cached
+
+    @property
+    def driver_stats(self) -> Any:
+        """The raw driver stats object behind :attr:`stats`
+        (CompactionStats / DistributedStats; None for plain lockstep) —
+        for the legacy adapters' conditional ``dispatches``/``devices``
+        keys and occupancy-curve consumers."""
+        return self._driver_stats
+
+    @property
+    def fetched_bytes(self) -> int:
+        """Total device->host bytes materialized by this batch so far —
+        the audit behind the "cost-only traffic never ships plans" claim."""
+        total = 0
+        for group in self._host.values():
+            total += sum(int(a.nbytes) for a in group.values())
+        if self._sparse is not None:
+            total += self._sparse.nbytes
+        total += sum(int(a.nbytes) for a in self._derived.values())
+        return total
+
+    # -- batch-level artifact accessors -------------------------------
+
+    def cost(self) -> np.ndarray:
+        """(B,) primal objective values (O(B) scalars fetched)."""
+        self._check("cost")
+        return self._fetch("cost")["cost"][:self.batch]
+
+    def phases(self) -> np.ndarray:
+        return self._fetch("scalars")["phases"][:self.batch]
+
+    def rounds(self) -> np.ndarray:
+        return self._fetch("scalars")["rounds"][:self.batch]
+
+    def theta(self) -> np.ndarray:
+        sc = self._fetch("scalars")
+        if "theta" not in sc:
+            raise AttributeError(f"spec {self.spec.name!r} has no theta")
+        return sc["theta"][:self.batch]
+
+    def duals(self) -> Tuple[np.ndarray, np.ndarray]:
+        """((B, M), (B, N)) scaled approximate duals (padded shapes)."""
+        self._check("duals")
+        d = self._fetch("duals")
+        return d["y_b"][:self.batch], d["y_a"][:self.batch]
+
+    def matching(self) -> np.ndarray:
+        self._check("matching")
+        return self._fetch("matching")["matching"][:self.batch]
+
+    def plan(self) -> np.ndarray:
+        """(B, M, N) DENSE plans — the O(B * m * n) fetch ``want=`` gating
+        exists to avoid; prefer :meth:`plan_sparse` for serving. Cached:
+        derived host work (the assignment one-hot scatter) runs once."""
+        self._check("plan")
+        if self._plan_dense is None:
+            self._plan_dense = self.spec.artifact_plan_dense(
+                self._fetch("plan"), self.batch, self.padded_shape)
+        return self._plan_dense
+
+    def plan_sparse(self) -> SparsePlanBatch:
+        """Batched COO plans: O(B * nnz) bytes instead of O(B * m * n).
+
+        The capacity is the max per-instance support rounded up to a power
+        of two, so repeat traffic reuses one extraction program per
+        (bucket shape, capacity)."""
+        self._check("plan_sparse")
+        if self._sparse is None:
+            self._sparse = self.spec.artifact_plan_sparse(
+                self._r, self._fetch, self.batch, self.padded_shape)
+        return self._sparse
+
+    def state(self) -> Any:
+        """The raw integer pre-completion solver state (batched pytree, at
+        the padded bucket shape) for core/feasibility.py certificates."""
+        self._check("state")
+        st = self.spec.artifact_state(self._r, self._state)
+        if st is None:
+            raise ArtifactNotRequested(
+                "pre-completion state was not retained by this dispatch; "
+                "request it up front with want=('state', ...)")
+        return st
+
+    # -- certificates (device-side reductions, O(B) scalars fetched) ---
+
+    def scale(self) -> np.ndarray:
+        """(B,) per-instance max cost over the valid block — the paper's
+        rescaling factor; additive bounds are stated against it. Part of
+        the certificate group: requires ``"duals"`` in ``want``."""
+        self._check("duals")
+        key = "scale"
+        if key not in self._derived:
+            self._derived[key] = np.asarray(_masked_max(
+                self._inputs["c"], jnp.asarray(self.sizes[:, 0]),
+                jnp.asarray(self.sizes[:, 1])))[:self.batch]
+        return self._derived[key]
+
+    def dual_objective(self) -> np.ndarray:
+        """(B,) dual objective of the approximate duals: sum(y) for the
+        assignment LP, <nu, y_b> + <mu, y_a> for OT. eps-feasibility makes
+        it >= OPT - eps * m * scale (a certified lower bound on OPT)."""
+        self._check("duals")
+        key = "dual_objective"
+        if key not in self._derived:
+            mv = jnp.asarray(self.sizes[:, 0])
+            nv = jnp.asarray(self.sizes[:, 1])
+            if "nu" in self._inputs:
+                obj = _dual_obj_ot(self._r.y_b, self._r.y_a,
+                                   self._inputs["nu"], self._inputs["mu"],
+                                   mv, nv)
+            else:
+                obj = _dual_obj_assignment(self._r.y_b, self._r.y_a, mv, nv)
+            self._derived[key] = np.asarray(obj)[:self.batch]
+        return self._derived[key]
+
+    def mass(self) -> np.ndarray:
+        """(B,) total supply mass: the paper's ``m`` (rows for assignment,
+        sum(nu) for OT) that the additive bound multiplies. Part of the
+        certificate group: requires ``"duals"`` in ``want``."""
+        self._check("duals")
+        key = "mass"
+        if key not in self._derived:
+            if "nu" in self._inputs:
+                self._derived[key] = np.asarray(_masked_sum(
+                    self._inputs["nu"],
+                    jnp.asarray(self.sizes[:, 0])))[:self.batch]
+            else:
+                self._derived[key] = self.sizes[:self.batch, 0].astype(
+                    np.float64)
+        return self._derived[key]
+
+    def additive_gap(self) -> np.ndarray:
+        """(B,) a-posteriori primal-dual gap ``cost - dual_objective``.
+
+        With eps-feasible duals, ``OPT >= dual_objective - eps * m *
+        scale`` — so ``additive_gap`` certifies ``cost - OPT <=
+        additive_gap + eps * m * scale`` from the RESULT alone, no exact
+        solver needed. Under ``guaranteed=True`` (internal eps/3) the gap
+        itself satisfies the paper's ``<= eps * m * scale`` headline
+        bound (Theorem 1.2/1.3 plus Lemma 3.2's dual bound on the <=
+        eps*m/3 uncompleted rows)."""
+        return self.cost().astype(np.float64) - self.dual_objective()
+
+    def additive_gap_bound(self) -> np.ndarray:
+        """(B,) the paper's bound ``eps * m * scale`` the gap is validated
+        against under ``guaranteed=True`` (caller-facing eps, mass ``m``,
+        costs rescaled by ``scale = max(c)``)."""
+        return self.eps[:self.batch] * self.mass() * self.scale()
+
+    def dual_feasible(self, tol: float = 1e-5) -> np.ndarray:
+        """(B,) bool: eps-feasibility of the scaled duals, checked on
+        device over every live edge — y(b) + y(a) <= c + eps * scale
+        (paper invariant I2, the relaxed dual constraint), with ``tol``
+        absorbing the f32 scaling of the integer duals."""
+        self._check("duals")
+        mv = jnp.asarray(self.sizes[:, 0])
+        nv = jnp.asarray(self.sizes[:, 1])
+        b, _, n = self._inputs["c"].shape
+        if "mu" in self._inputs:
+            # only live columns (mu > 0 -> d_int >= 1) carry copies and
+            # hence dual constraints (see core/feasibility.py)
+            live = self._inputs["mu"] > 0
+        else:
+            live = jnp.ones((b, n), bool)
+        margin = np.asarray(_feasibility_margin(
+            self._inputs["c"], self._r.y_b, self._r.y_a, mv, nv, live)
+        )[:self.batch]
+        slack = (self.eps_internal[:self.batch] * self.scale()
+                 + tol * np.maximum(self.scale(), 1.0))
+        return margin <= slack
+
+    # -- per-instance views --------------------------------------------
+
+    def __len__(self) -> int:
+        return self.batch
+
+    def __getitem__(self, j: int) -> "Solution":
+        if not (0 <= j < self.batch):
+            raise IndexError(j)
+        return Solution(self, j)
+
+    def __iter__(self) -> Iterator["Solution"]:
+        return (self[j] for j in range(self.batch))
+
+
+class Solution:
+    """One instance's typed result: a view into a :class:`SolutionBatch`
+    (shared device arrays, shared fetch cache), trimmed to the instance's
+    true (m, n) inside the padded bucket."""
+
+    def __init__(self, batch: SolutionBatch, j: int) -> None:
+        self._b = batch
+        self._j = j
+        self.shape: Tuple[int, int] = (int(batch.sizes[j, 0]),
+                                       int(batch.sizes[j, 1]))
+
+    # -- cheap scalar diagnostics --------------------------------------
+
+    @property
+    def spec_name(self) -> str:
+        return self._b.spec.name
+
+    @property
+    def eps(self) -> float:
+        return float(self._b.eps[self._j])
+
+    @property
+    def stats(self) -> SolveStats:
+        return self._b.stats
+
+    @property
+    def cost(self) -> float:
+        return float(self._b.cost()[self._j])
+
+    @property
+    def phases(self) -> int:
+        return int(self._b.phases()[self._j])
+
+    @property
+    def rounds(self) -> int:
+        return int(self._b.rounds()[self._j])
+
+    @property
+    def theta(self) -> float:
+        return float(self._b.theta()[self._j])
+
+    # -- artifacts ------------------------------------------------------
+
+    def duals(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(y_b (m,), y_a (n,)) scaled approximate duals."""
+        mi, ni = self.shape
+        y_b, y_a = self._b.duals()
+        return y_b[self._j, :mi], y_a[self._j, :ni]
+
+    def matching(self) -> np.ndarray:
+        mi, _ = self.shape
+        return self._b.matching()[self._j, :mi]
+
+    def plan(self) -> np.ndarray:
+        mi, ni = self.shape
+        return self._b.plan()[self._j, :mi, :ni]
+
+    def plan_sparse(self) -> SparsePlan:
+        return self._b.plan_sparse().instance(self._j, self.shape)
+
+    def state(self) -> Any:
+        """This instance's integer pre-completion state (leaves at the
+        PADDED bucket shape, as the feasibility certificates expect)."""
+        return jax.tree_util.tree_map(lambda a: a[self._j], self._b.state())
+
+    # -- certificates ---------------------------------------------------
+
+    def dual_objective(self) -> float:
+        return float(self._b.dual_objective()[self._j])
+
+    def additive_gap(self) -> float:
+        return float(self._b.additive_gap()[self._j])
+
+    def additive_gap_bound(self) -> float:
+        return float(self._b.additive_gap_bound()[self._j])
+
+    def dual_feasible(self, tol: float = 1e-5) -> bool:
+        return bool(self._b.dual_feasible(tol)[self._j])
+
+    # -- legacy adapter -------------------------------------------------
+
+    def legacy_dict(self) -> Dict[str, Any]:
+        """The exact per-instance dict the pre-Solution ragged front ends
+        returned (bit-identical values; conditional ``dispatches`` /
+        ``devices`` keys preserved for one release)."""
+        out = self._b.spec.legacy_instance_dict(self)
+        out["batch_size"] = self._b.batch
+        if self._b.stats.bucket is not None:
+            out["bucket"] = self._b.stats.bucket
+        st = self._b._driver_stats
+        if st is not None:
+            out["dispatches"] = st.dispatches
+            if hasattr(st, "devices"):
+                out["devices"] = st.devices
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"Solution({self.spec_name}, shape={self.shape}, "
+                f"eps={self.eps}, mode={self.stats.mode!r})")
+
+
+def sparse_from_dense_device(plan, batch: int) -> SparsePlanBatch:
+    """COO-extract a (B, M, N) device plan: count support on device, pick
+    the pow2 capacity, run the fixed-capacity extraction, and fetch only
+    the compact triplets. Shared by both specs' ``plan_sparse`` producers."""
+    _, m, n = plan.shape
+    nnz = np.asarray(_count_nnz(plan))[:batch]
+    k = min(pow2_at_least(int(nnz.max(initial=1))), m * n)
+    idx, vals = _coo_extract(plan, k)
+    return SparsePlanBatch(idx=np.asarray(idx)[:batch],
+                           vals=np.asarray(vals)[:batch],
+                           nnz=nnz, shape=(int(m), int(n)))

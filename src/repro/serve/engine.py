@@ -126,12 +126,23 @@ class OTService:
     outweighs it). Point-set requests (no masses) run the
     assignment solver; requests with (nu, mu) run the general OT solver.
     ``distance()`` stays as the one-shot convenience wrapper.
+
+    ``want=`` (a tuple of artifact names, e.g. ``("cost", "plan_sparse")``)
+    switches ``run_batch`` onto the typed Solution surface
+    (core/solution.py): it returns per-request
+    :class:`~repro.core.solution.Solution` views instead of dicts, and
+    only the declared artifacts ever cross device->host — cost-only
+    services fetch O(B) scalars per bucket, never the dense plans. With
+    ``want=None`` (default) run_batch is a thin adapter emitting the
+    historical per-request dicts, bit-identical to the pre-Solution
+    surface (including the legacy ``dispatches``/``devices`` keys, kept
+    for one release — prefer ``Solution.stats``).
     """
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
                  use_pallas: bool = True, buckets=None,
                  compact: bool = True, chunk: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, want: Optional[tuple] = None):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core.api import DispatchPolicy
@@ -154,6 +165,7 @@ class OTService:
         # and its mesh-requires-compact rule).
         self._policy = DispatchPolicy.from_legacy(
             compact, mesh, chunk=self.chunk, buckets=self.buckets)
+        self.want = None if want is None else tuple(want)
         self.mesh = mesh
         self.queue: List[OTRequest] = []
         self._B = B
@@ -182,13 +194,17 @@ class OTService:
             return ops.cost_matrix_batched(xs, ys, metric=self.metric)
         return self._cost_batched(xs, ys)
 
-    def run_batch(self) -> List[Dict[str, Any]]:
+    def run_batch(self) -> List[Any]:
         """Solve all queued requests via bucketed batched dispatch; returns
-        results in submission order."""
+        results in submission order: the historical per-request dicts
+        (``want=None``, bit-identical adapter), or per-request
+        ``Solution`` views when the service declared ``want=``."""
         if not self.queue:
             return []
+        from repro.core.api import ASSIGNMENT, OT, solve
+
         reqs, self.queue = self.queue, []
-        results: List[Optional[Dict[str, Any]]] = [None] * len(reqs)
+        results: List[Optional[Any]] = [None] * len(reqs)
         # Split by point dim + solver mode, then reuse the core bucketing
         # for the (m, n) shape grouping -- one compiled program per
         # (bucket, d, mode), shared by later batches of the same key.
@@ -205,58 +221,67 @@ class OTService:
                 ys = self._B.pad_stack([reqs[i].y for i in idx], (nb, d))
                 c = self._batched_cost(xs, ys)
                 if has_mass:
-                    from repro.core.api import OT, solve
-
                     nu = self._B.pad_stack([reqs[i].nu for i in idx], (mb,))
                     mu = self._B.pad_stack([reqs[i].mu for i in idx], (nb,))
-                    r, st = solve(OT, {"c": c, "nu": nu, "mu": mu},
-                                  self.eps, self._policy, sizes=sizes)
-                    plan, cost, phases = (np.asarray(r.plan),
-                                          np.asarray(r.cost),
-                                          np.asarray(r.phases))
-                    gdt = time.perf_counter() - gt0
-                    for k, i in enumerate(idx):
-                        m, n = sizes[k]
-                        results[i] = {
-                            "cost": float(cost[k]),
-                            "plan": plan[k, :m, :n],
-                            "phases": int(phases[k]),
+                    spec, inputs = OT, {"c": c, "nu": nu, "mu": mu}
+                    legacy_want = ("cost", "plan")
+                else:
+                    spec, inputs = ASSIGNMENT, {"c": c}
+                    legacy_want = ("cost", "matching", "duals")
+                want = legacy_want if self.want is None else self.want
+                batch = solve(spec, inputs, self.eps, self._policy,
+                              sizes=sizes, want=want)
+                # the O(B)-scalar (ungated) phase fetch blocks until the
+                # bucket is solved regardless of the declared want; big
+                # artifacts stay on device unless requested
+                batch.phases()
+                if self.want is None:
+                    # legacy latency_s includes the legacy artifact
+                    # device->host fetches, as the pre-Solution surface
+                    # measured it
+                    batch.cost()
+                    if has_mass:
+                        batch.plan()
+                    else:
+                        batch.matching()
+                        batch.duals()
+                gdt = time.perf_counter() - gt0
+                st = batch.driver_stats
+                for k, i in enumerate(idx):
+                    sol = batch[k]
+                    if self.want is not None:
+                        results[i] = sol
+                        continue
+                    m, n = sizes[k]
+                    if has_mass:
+                        out: Dict[str, Any] = {
+                            "cost": sol.cost,
+                            "plan": sol.plan(),
+                            "phases": sol.phases,
                             "batch_size": len(idx),
                             "bucket": (mb, nb),
                             "latency_s": gdt,
                         }
-                        if st is not None:
-                            results[i]["dispatches"] = st.dispatches
-                            if hasattr(st, "devices"):
-                                results[i]["devices"] = st.devices
-                else:
-                    from repro.core.api import ASSIGNMENT, solve
-
-                    r, st = solve(ASSIGNMENT, {"c": c}, self.eps,
-                                  self._policy, sizes=sizes)
-                    matching, cost, phases, y_b, y_a = (
-                        np.asarray(r.matching), np.asarray(r.cost),
-                        np.asarray(r.phases), np.asarray(r.y_b),
-                        np.asarray(r.y_a),
-                    )
-                    gdt = time.perf_counter() - gt0
-                    for k, i in enumerate(idx):
-                        m, n = sizes[k]
-                        results[i] = {
-                            "cost": float(cost[k]) / m,
-                            "matching": matching[k, :m],
-                            "phases": int(phases[k]),
+                    else:
+                        y_b, y_a = sol.duals()
+                        out = {
+                            "cost": sol.cost / m,
+                            "matching": sol.matching(),
+                            "phases": sol.phases,
                             "dual_lower_bound": float(
-                                (y_b[k, :m].sum() + y_a[k, :n].sum()) / m
+                                (y_b.sum() + y_a.sum()) / m
                             ),
                             "batch_size": len(idx),
                             "bucket": (mb, nb),
                             "latency_s": gdt,
                         }
-                        if st is not None:
-                            results[i]["dispatches"] = st.dispatches
-                            if hasattr(st, "devices"):
-                                results[i]["devices"] = st.devices
+                    # legacy keys, kept for one release: uniform
+                    # accounting now lives on Solution.stats
+                    if st is not None:
+                        out["dispatches"] = st.dispatches
+                        if hasattr(st, "devices"):
+                            out["devices"] = st.devices
+                    results[i] = out
         assert all(r is not None for r in results)
         return results  # submission order
 

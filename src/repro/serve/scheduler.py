@@ -32,6 +32,13 @@ dispatch start), ``solve_s`` (bucket solve wall time), ``devices``,
 ``batch_size``/``bucket``. Per-request ``eps`` is supported (eps is data
 to the compacting driver — mixed-accuracy tenants share one dispatch).
 
+Per-request ``want=`` (or the scheduler-level default) switches a tenant
+onto the typed Solution surface (core/solution.py): its Future resolves
+to a :class:`~repro.core.solution.Solution` view and each bucket
+dispatch declares only the UNION of its tenants' artifacts — a batch of
+cost-only tenants fetches O(B) scalars from the mesh, never the dense
+(B, M, N) plans.
+
 Results are identical to the synchronous service regardless of how
 requests happen to be batched: the distributed driver's per-lane results
 are composition-invariant (retiring or re-sharding a neighbor never
@@ -80,6 +87,7 @@ class _Pending:
     eps: float
     future: Future
     t_submit: float
+    want: Optional[tuple] = None    # None -> legacy result dict
 
 
 @dataclass
@@ -140,7 +148,8 @@ class AsyncOTScheduler:
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
                  mesh=None, buckets=None, chunk: Optional[int] = None,
                  max_batch: int = 256, linger_ms: float = 0.0,
-                 use_pallas: bool = True, placement: str = "auto"):
+                 use_pallas: bool = True, placement: str = "auto",
+                 want: Optional[tuple] = None):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core.api import DispatchPolicy
@@ -163,6 +172,9 @@ class AsyncOTScheduler:
         self.max_batch = int(max_batch)
         self.linger_s = float(linger_ms) / 1e3
         self.placement = placement
+        # default artifact declaration for submits that don't pass their
+        # own ``want``; None -> legacy result dicts
+        self.want = None if want is None else tuple(want)
         self.kernel = ("pallas" if use_pallas
                        and jax.default_backend() == "tpu" else "jnp")
         self._B = B
@@ -193,10 +205,19 @@ class AsyncOTScheduler:
     # ------------------------------------------------------------------
 
     def submit(self, x, y, nu=None, mu=None,
-               eps: Optional[float] = None) -> Future:
-        """Queue one distance request; returns a Future resolving to the
-        result dict. (nu, mu) both present -> general OT; both absent ->
-        assignment distance."""
+               eps: Optional[float] = None,
+               want: Optional[tuple] = None) -> Future:
+        """Queue one distance request; returns a Future. (nu, mu) both
+        present -> general OT; both absent -> assignment distance.
+
+        ``want`` (per-request, defaulting to the scheduler-level setting)
+        declares the artifacts this tenant will read: the Future then
+        resolves to a typed :class:`~repro.core.solution.Solution`
+        instead of the legacy dict, and only the batch's UNION of
+        declared artifacts is ever fetched from device — a bucket of
+        cost-only tenants moves O(B) scalars, no dense plans. With
+        ``want=None`` the Future resolves to the historical result dict
+        (bit-identical adapter)."""
         if (nu is None) != (mu is None):
             raise ValueError("provide both nu and mu (general OT) or "
                              "neither (assignment distance)")
@@ -205,7 +226,8 @@ class AsyncOTScheduler:
                        nu=None if nu is None else np.asarray(nu),
                        mu=None if mu is None else np.asarray(mu),
                        eps=self.eps if eps is None else float(eps),
-                       future=fut, t_submit=time.perf_counter())
+                       future=fut, t_submit=time.perf_counter(),
+                       want=(self.want if want is None else tuple(want)))
         # closed-check and outstanding-increment share the lock close()
         # takes to flip _closed, so a submit can never slip in after the
         # shutdown sentinel and strand its Future
@@ -385,6 +407,19 @@ class AsyncOTScheduler:
                     _fail(r.future, e)
                 self._done(missed)
 
+    @staticmethod
+    def _union_want(item) -> tuple:
+        """The batch-level artifact declaration: the union of every
+        co-batched tenant's ``want`` (legacy-dict tenants need the full
+        legacy artifact set). Only this union is ever fetchable — a
+        bucket of cost-only tenants never ships a dense plan."""
+        legacy = (("cost", "plan") if item.has_mass
+                  else ("cost", "matching", "duals"))
+        union: set = set()
+        for r in item.reqs:
+            union |= set(legacy if r.want is None else r.want)
+        return tuple(sorted(union))
+
     def _dispatch_loop(self):
         from repro.core.api import ASSIGNMENT, OT, solve
 
@@ -395,35 +430,53 @@ class AsyncOTScheduler:
             t0 = time.perf_counter()
             try:
                 if item.has_mass:
-                    r, st = solve(
-                        OT, {"c": item.c, "nu": item.nu, "mu": item.mu},
-                        item.eps, self._policy, sizes=item.sizes,
-                    )
-                    plan = np.asarray(r.plan)
+                    spec = OT
+                    inputs = {"c": item.c, "nu": item.nu, "mu": item.mu}
                 else:
-                    r, st = solve(
-                        ASSIGNMENT, {"c": item.c}, item.eps,
-                        self._policy, sizes=item.sizes,
-                    )
-                    matching = np.asarray(r.matching)
-                    y_b, y_a = np.asarray(r.y_b), np.asarray(r.y_a)
-                cost = np.asarray(r.cost)
-                phases = np.asarray(r.phases)
+                    spec = ASSIGNMENT
+                    inputs = {"c": item.c}
+                batch = solve(spec, inputs, item.eps, self._policy,
+                              sizes=item.sizes, want=self._union_want(item))
+                # O(B)-scalar UNGATED fetch: blocks until the bucket is
+                # solved whatever the tenants' want union declares,
+                # without materializing any big artifact on host
+                batch.phases()
+                if any(r.want is None for r in item.reqs):
+                    # legacy solve_s includes the legacy artifact
+                    # device->host fetches, as the pre-Solution surface
+                    # measured it
+                    batch.cost()
+                    if item.has_mass:
+                        batch.plan()
+                    else:
+                        batch.matching()
+                        batch.duals()
                 solve_s = time.perf_counter() - t0
+                st = batch.stats
                 # one shared (read-only) occupancy curve for the whole
                 # batch, not a copy per request
-                occupancy = tuple(tuple(o) for o in st.occupancy)
+                occupancy = st.occupancy
                 self.stats.batches += 1
                 self.stats.total_solve_s += solve_s
                 self.stats.dispatches += st.dispatches
                 self.stats.occupancy.append(occupancy)
                 for i, req in enumerate(item.reqs):
+                    self.stats.requests += 1
+                    wait_s = t0 - req.t_submit
+                    self.stats.total_wait_s += wait_s
+                    if req.want is not None:
+                        # typed surface: the Future resolves to the
+                        # per-request Solution view (lazy artifacts,
+                        # uniform Solution.stats)
+                        _fulfil(req.future, batch[i])
+                        continue
                     m, n = item.sizes[i]
+                    sol = batch[i]
                     out: Dict[str, Any] = {
-                        "phases": int(phases[i]),
+                        "phases": sol.phases,
                         "batch_size": len(item.reqs),
                         "bucket": item.bucket,
-                        "wait_s": t0 - req.t_submit,
+                        "wait_s": wait_s,
                         "solve_s": solve_s,
                         "devices": st.devices,
                         "dispatches": st.dispatches,
@@ -431,16 +484,15 @@ class AsyncOTScheduler:
                         "eps": float(item.eps[i]),
                     }
                     if item.has_mass:
-                        out["cost"] = float(cost[i])
-                        out["plan"] = plan[i, :m, :n]
+                        out["cost"] = sol.cost
+                        out["plan"] = sol.plan()
                     else:
-                        out["cost"] = float(cost[i]) / m
-                        out["matching"] = matching[i, :m]
+                        y_b, y_a = sol.duals()
+                        out["cost"] = sol.cost / m
+                        out["matching"] = sol.matching()
                         out["dual_lower_bound"] = float(
-                            (y_b[i, :m].sum() + y_a[i, :n].sum()) / m
+                            (y_b.sum() + y_a.sum()) / m
                         )
-                    self.stats.requests += 1
-                    self.stats.total_wait_s += out["wait_s"]
                     _fulfil(req.future, out)
                 self._done(item.reqs)
             except Exception as e:

@@ -1,0 +1,457 @@
+"""The typed Solution result surface (core/solution.py + solve(want=...)).
+
+Invariants under test:
+  * sparse/dense round trip: ``Solution.plan_sparse().to_dense()`` equals
+    the dense plan BIT FOR BIT, across every DispatchPolicy mode, and the
+    COO support is compact (O(m + n), the paper's "readily provides a
+    compact transport plan");
+  * lazy fetch: a cost-only ``want=`` never materializes the dense
+    (B, M, N) plan on host — asserted on ``fetched_bytes`` — and
+    un-requested accessors raise ``ArtifactNotRequested``;
+  * certificates as API: ``dual_feasible()`` and ``additive_gap() <=
+    eps * m * max(c)`` under ``guaranteed=True`` for BOTH specs across
+    lockstep/compact/mesh (the paper's Theorem 1.2/1.3 bound validated
+    a-posteriori from the approximate duals alone);
+  * the keep_state asymmetry is gone: lockstep and ragged-list dispatch
+    retain the pre-completion state when asked (want=("state",)), where
+    they previously raised, and the state passes the integer
+    certificates;
+  * legacy adapters: solve_*_ragged / OTService.run_batch /
+    AsyncOTScheduler emit values bit-identical to the Solution surface,
+    with the historical conditional ``dispatches``/``devices`` keys;
+  * ``Solution.stats`` is uniform (devices/dispatches/placement exist
+    with explicit defaults on every path).
+
+The slow 8-device variant reruns round-trip + certificates + cost-only
+fetch accounting across a real mesh (subprocess, forced host devices).
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.api import ASSIGNMENT, OT, DispatchPolicy, dispatch, solve
+from repro.core.feasibility import check_invariants
+from repro.core.pushrelabel import assignment_prologue
+from repro.core.solution import (
+    ArtifactNotRequested,
+    Solution,
+    SolutionBatch,
+    SolveStats,
+)
+
+
+def _mixed_instances(b, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    ot, cs = [], []
+    for _ in range(b):
+        m = int(rng.integers(lo, hi))
+        n = int(rng.integers(m, hi + 4))
+        x = rng.uniform(size=(m, 2))
+        y = rng.uniform(size=(n, 2))
+        d = x[:, None, :] - y[None, :, :]
+        ci = np.sqrt((d * d).sum(-1) + 1e-30).astype(np.float32)
+        nu = rng.dirichlet(np.ones(m)).astype(np.float32)
+        mu = rng.dirichlet(np.ones(n)).astype(np.float32)
+        ot.append((ci, nu, mu))
+        cs.append(ci)
+    eps = np.where(np.arange(b) % 2 == 0, 0.1, 0.05)
+    return ot, cs, eps
+
+
+def _bucket(b, m, n, seed):
+    """One pre-batched OT bucket (padded dict inputs + sizes)."""
+    rng = np.random.default_rng(seed)
+    c = np.zeros((b, m, n), np.float32)
+    nu = np.zeros((b, m), np.float32)
+    mu = np.zeros((b, n), np.float32)
+    sizes = np.zeros((b, 2), np.int32)
+    for i in range(b):
+        mi = int(rng.integers(m // 2, m + 1))
+        ni = int(rng.integers(mi, n + 1))
+        c[i, :mi, :ni] = rng.uniform(size=(mi, ni))
+        nu[i, :mi] = rng.dirichlet(np.ones(mi)).astype(np.float32)
+        mu[i, :ni] = rng.dirichlet(np.ones(ni)).astype(np.float32)
+        sizes[i] = (mi, ni)
+    return {"c": c, "nu": nu, "mu": mu}, sizes
+
+
+POLICIES = {
+    "lockstep": DispatchPolicy(mode="lockstep"),
+    "compact": DispatchPolicy(mode="compact", chunk=3),
+    "mesh": DispatchPolicy(mode="mesh"),       # default host mesh
+}
+
+
+# --------------------------------------------------------------------------
+# Sparse plans: bit-identical round trip, compact support
+# --------------------------------------------------------------------------
+
+def test_sparse_plan_roundtrip_every_policy():
+    ot, _, eps = _mixed_instances(6, 10, 30, seed=0)
+    for name, pol in POLICIES.items():
+        sols = solve(OT, ot, eps, pol,
+                     want=("cost", "plan", "plan_sparse"))
+        for i, s in enumerate(sols):
+            dense = s.plan()
+            sp = s.plan_sparse()
+            assert np.array_equal(sp.to_dense(), dense), (name, i)
+            mi, ni = s.shape
+            # compact support (the paper's claim): way below dense m*n
+            assert sp.nnz <= 4 * (mi + ni), (name, i, sp.nnz)
+            # and cheaper to ship than the dense plan
+            assert sp.nbytes < dense.nbytes, (name, i)
+
+
+def test_sparse_plan_roundtrip_assignment():
+    _, cs, eps = _mixed_instances(5, 10, 24, seed=1)
+    sols = solve(ASSIGNMENT, cs, eps, POLICIES["compact"],
+                 want=("cost", "matching", "plan", "plan_sparse"))
+    for s in sols:
+        dense = s.plan()
+        sp = s.plan_sparse()
+        assert np.array_equal(sp.to_dense(), dense)
+        mi, _ = s.shape
+        assert sp.nnz <= mi
+        # the unit plan agrees with the matching
+        matching = s.matching()
+        rows = np.flatnonzero(matching >= 0)
+        assert np.array_equal(sp.rows, rows)
+        assert np.array_equal(sp.cols, matching[rows])
+
+
+# --------------------------------------------------------------------------
+# Lazy fetch: cost-only traffic never ships dense plans
+# --------------------------------------------------------------------------
+
+def test_cost_only_want_fetches_scalars_not_plans():
+    inputs, sizes = _bucket(8, 24, 28, seed=2)
+    b, m, n = inputs["c"].shape
+    dense_bytes = b * m * n * 4
+    batch = solve(OT, inputs, 0.1, DispatchPolicy(mode="compact"),
+                  sizes=sizes, want=("cost",))
+    assert isinstance(batch, SolutionBatch)
+    cost = batch.cost()
+    assert cost.shape == (b,)
+    # O(B) scalars, not O(B * m * n) plans
+    assert batch.fetched_bytes <= 16 * b
+    assert batch.fetched_bytes < dense_bytes / 100
+    with pytest.raises(ArtifactNotRequested):
+        batch.plan()
+    with pytest.raises(ArtifactNotRequested):
+        batch.plan_sparse()
+    with pytest.raises(ArtifactNotRequested):
+        batch[0].duals()
+    # sparse fetch moves less than a dense fetch even on tiny instances
+    sp_batch = solve(OT, inputs, 0.1, DispatchPolicy(mode="compact"),
+                     sizes=sizes, want=("cost", "plan_sparse"))
+    sp = sp_batch.plan_sparse()
+    assert sp_batch.fetched_bytes < dense_bytes
+    # ... and the O(nnz) vs O(m * n) gap opens with the instance size
+    big, big_sizes = _bucket(2, 64, 64, seed=11)
+    big_dense = 2 * 64 * 64 * 4
+    bb = solve(OT, big, 0.1, DispatchPolicy(mode="compact"),
+               sizes=big_sizes, want=("plan_sparse",))
+    bb.plan_sparse()
+    assert bb.fetched_bytes < big_dense / 4
+
+
+def test_want_validation():
+    inputs, sizes = _bucket(2, 12, 12, seed=3)
+    with pytest.raises(ValueError, match="unknown artifact"):
+        solve(OT, inputs, 0.1, sizes=sizes, want=("cost", "warp"))
+    with pytest.raises(ValueError, match="unknown artifact"):
+        solve(ASSIGNMENT, {"c": inputs["c"]}, 0.1, sizes=sizes,
+              want=("plan", "theta"))
+
+
+# --------------------------------------------------------------------------
+# Certificates: the paper's guarantees as API
+# --------------------------------------------------------------------------
+
+def test_additive_gap_bound_guaranteed_every_policy():
+    """Under guaranteed=True the a-posteriori primal-dual gap respects the
+    paper's <= eps * m * max(c) bound, and the approximate duals are
+    eps-feasible — for BOTH specs, across every policy."""
+    ot, cs, _ = _mixed_instances(5, 10, 28, seed=4)
+    eps = 0.1
+    for name, pol in POLICIES.items():
+        pol = DispatchPolicy(mode=pol.mode, mesh=pol.mesh,
+                             chunk=pol.chunk, guaranteed=True)
+        for spec, insts in ((OT, ot), (ASSIGNMENT, cs)):
+            sols = solve(spec, insts, eps, pol, want=("cost", "duals"))
+            for i, s in enumerate(sols):
+                assert s.dual_feasible(), (name, spec.name, i)
+                gap = s.additive_gap()
+                bound = s.additive_gap_bound()
+                assert gap <= bound, (name, spec.name, i, gap, bound)
+                # the bound is the paper's eps * m * scale
+                mi, _ = s.shape
+                mass = mi if spec is ASSIGNMENT else 1.0
+                assert bound <= eps * mass * 1.5 + 1e-6
+                # ... and the dual objective is a lower bound on OPT up
+                # to the eps-feasibility slack: it can exceed the primal
+                # cost by at most eps * m * scale (gap >= -bound)
+                assert gap >= -bound - 1e-6
+
+
+def test_certificates_on_lockstep_state():
+    """want=("state",) retains the pre-completion state on the LOCKSTEP
+    path (which used to raise), and it passes the integer invariants."""
+    _, cs, _ = _mixed_instances(4, 10, 20, seed=5)
+    eps = 0.1
+    sols = solve(ASSIGNMENT, cs, eps, DispatchPolicy(mode="lockstep"),
+                 want=("cost", "state"))
+    for idx, s in enumerate(sols):
+        st = s.state()
+        mi, ni = s.shape
+        mb, nb = s.stats.bucket
+        # rebuild the padded instance the bucket dispatched
+        ci = np.zeros((mb, nb), np.float32)
+        ci[:mi, :ni] = cs[idx]
+        _, c_int, _, _, _ = assignment_prologue(
+            jnp.asarray(ci), eps, jnp.int32(mi), jnp.int32(ni))
+        out = check_invariants(np.asarray(c_int), np.asarray(st.y_b),
+                               np.asarray(st.y_a), np.asarray(st.match_ba),
+                               eps)
+        assert all(out.values()), out
+
+
+def test_keep_state_asymmetry_fixed():
+    """dispatch(keep_state=True) now works under lockstep, and the ragged
+    legacy surface carries a per-instance state instead of raising."""
+    inputs, sizes = _bucket(3, 14, 16, seed=6)
+    r, st = dispatch(OT, inputs, 0.1, sizes=sizes,
+                     policy=DispatchPolicy(mode="lockstep"),
+                     keep_state=True)
+    assert st is not None and st.final_state is not None
+    assert st.dispatches == 1
+    # lockstep state equals the compact driver's state bit for bit
+    _, st_c = dispatch(OT, inputs, 0.1, sizes=sizes,
+                       policy=DispatchPolicy(mode="compact"),
+                       keep_state=True)
+    for a, b in zip(jax.tree_util.tree_leaves(st.final_state),
+                    jax.tree_util.tree_leaves(st_c.final_state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # ragged + keep_state: per-instance "state" key (used to raise)
+    ot, _, _ = _mixed_instances(3, 10, 16, seed=7)
+    outs = solve(OT, ot, 0.1, DispatchPolicy(mode="lockstep"),
+                 keep_state=True)
+    assert all("state" in o for o in outs)
+
+    # explicit keep_state with a want that forgot "state": the flag is
+    # promoted into the declaration instead of retaining a state the
+    # gating would then refuse to hand over
+    sb = solve(OT, inputs, 0.1, sizes=sizes, keep_state=True,
+               want=("cost",))
+    assert sb.state() is not None
+
+
+# --------------------------------------------------------------------------
+# Legacy adapters: bit-identical values, uniform Solution.stats
+# --------------------------------------------------------------------------
+
+def test_legacy_ragged_dicts_match_solution_surface():
+    ot, cs, eps = _mixed_instances(6, 10, 26, seed=8)
+    for name, pol in POLICIES.items():
+        legacy = solve(OT, ot, eps, pol)
+        sols = solve(OT, ot, eps, pol,
+                     want=("cost", "plan", "duals", "plan_sparse"))
+        for d, s in zip(legacy, sols):
+            assert d["cost"] == s.cost, name
+            assert d["phases"] == s.phases, name
+            assert d["theta"] == s.theta, name
+            assert np.array_equal(d["plan"], s.plan()), name
+            assert np.array_equal(d["plan"], s.plan_sparse().to_dense())
+            assert d["batch_size"] == s.stats.batch, name
+            assert d["bucket"] == s.stats.bucket, name
+            # conditional legacy keys preserved for one release
+            if name == "lockstep":
+                assert "dispatches" not in d, name
+            else:
+                assert d["dispatches"] == s.stats.dispatches, name
+            if name == "mesh":
+                assert d["devices"] == s.stats.devices, name
+            else:
+                assert "devices" not in d, name
+        la = solve(ASSIGNMENT, cs, eps, pol)
+        sa = solve(ASSIGNMENT, cs, eps, pol,
+                   want=("cost", "matching", "duals"))
+        for d, s in zip(la, sa):
+            assert d["cost"] == s.cost, name
+            assert np.array_equal(d["matching"], s.matching()), name
+            y_b, y_a = s.duals()
+            assert np.array_equal(d["y_b"], y_b), name
+            assert np.array_equal(d["y_a"], y_a), name
+
+
+def test_solution_stats_uniform_defaults():
+    ot, _, eps = _mixed_instances(4, 10, 18, seed=9)
+    for name, pol in POLICIES.items():
+        s = solve(OT, ot, eps, pol, want=("cost",))[0]
+        st = s.stats
+        assert isinstance(st, SolveStats)
+        assert st.mode == pol.resolved_mode()
+        assert st.dispatches >= 1
+        assert st.devices >= 1
+        assert st.placement in ("batch", "matrix")
+        d = st.as_dict()
+        assert {"mode", "devices", "dispatches", "placement"} <= set(d)
+
+
+def test_serve_layers_want_roundtrip():
+    from repro.serve.engine import OTService
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    rng = np.random.default_rng(10)
+    x = rng.uniform(size=(18, 2)).astype(np.float32)
+    y = rng.uniform(size=(20, 2)).astype(np.float32)
+    nu = rng.dirichlet(np.ones(18)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(20)).astype(np.float32)
+
+    legacy = OTService(eps=0.1).distance(x, y, nu=nu, mu=mu)
+    typed = OTService(eps=0.1, want=("cost", "plan_sparse"))
+    typed.submit(x, y, nu=nu, mu=mu)
+    s = typed.run_batch()[0]
+    assert isinstance(s, Solution)
+    assert s.cost == legacy["cost"]
+    assert np.array_equal(s.plan_sparse().to_dense(), legacy["plan"])
+
+    with AsyncOTScheduler(eps=0.1) as sched:
+        f_legacy = sched.submit(x, y, nu=nu, mu=mu)
+        f_typed = sched.submit(x, y, nu=nu, mu=mu,
+                               want=("cost", "duals"))
+        assert sched.flush(timeout=300)
+        rl = f_legacy.result(timeout=5)
+        rt = f_typed.result(timeout=5)
+        assert isinstance(rt, Solution)
+        assert rt.cost == rl["cost"]
+        assert rt.stats.devices == rl["devices"]
+
+
+def test_serve_layers_want_without_cost():
+    """A declared want that excludes 'cost' must not crash the serving
+    layers (their completion sync is ungated) nor poison co-tenants."""
+    from repro.serve.engine import OTService
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    rng = np.random.default_rng(12)
+    x = rng.uniform(size=(14, 2)).astype(np.float32)
+    y = rng.uniform(size=(16, 2)).astype(np.float32)
+    nu = rng.dirichlet(np.ones(14)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(16)).astype(np.float32)
+
+    svc = OTService(eps=0.1, want=("plan_sparse",))
+    svc.submit(x, y, nu=nu, mu=mu)
+    s = svc.run_batch()[0]
+    assert s.plan_sparse().nnz > 0
+    with pytest.raises(ArtifactNotRequested):
+        _ = s.cost
+
+    with AsyncOTScheduler(eps=0.1) as sched:
+        f = sched.submit(x, y, nu=nu, mu=mu, want=("duals",))
+        assert sched.flush(timeout=300)
+        rs = f.result(timeout=5)
+        y_b, y_a = rs.duals()
+        assert y_b.shape == (14,) and y_a.shape == (16,)
+
+
+# --------------------------------------------------------------------------
+# Forced 8-device mesh (subprocess, same harness as test_problem_api.py)
+# --------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+from repro.core.api import ASSIGNMENT, OT, DispatchPolicy, solve
+from repro.launch.mesh import make_batch_mesh
+
+rng = np.random.default_rng(21)
+b = 20
+ot = []
+for _ in range(b):
+    m = int(rng.integers(16, 40))
+    n = int(rng.integers(m, 44))
+    x = rng.uniform(size=(m, 2))
+    y = rng.uniform(size=(n, 2))
+    d = x[:, None, :] - y[None, :, :]
+    ci = np.sqrt((d * d).sum(-1) + 1e-30).astype(np.float32)
+    ot.append((ci, rng.dirichlet(np.ones(m)).astype(np.float32),
+               rng.dirichlet(np.ones(n)).astype(np.float32)))
+eps = np.where(np.arange(b) % 3 == 0, 0.05, 0.1)
+
+mesh = make_batch_mesh()
+out = {"devices": int(mesh.shape["data"])}
+pol_mesh = DispatchPolicy(mode="mesh", mesh=mesh, chunk=4)
+pol_cmp = DispatchPolicy(mode="compact", chunk=4)
+
+legacy = solve(OT, ot, eps, pol_mesh)
+sols = solve(OT, ot, eps, pol_mesh,
+             want=("cost", "plan", "plan_sparse", "duals"))
+cmp_sols = solve(OT, ot, eps, pol_cmp, want=("cost", "plan_sparse"))
+ok_rt = ok_par = ok_stats = True
+for d, s, sc in zip(legacy, sols, cmp_sols):
+    ok_rt = ok_rt and np.array_equal(s.plan_sparse().to_dense(), s.plan())
+    ok_rt = ok_rt and np.array_equal(d["plan"], s.plan())
+    ok_par = ok_par and s.cost == sc.cost
+    ok_par = ok_par and np.array_equal(
+        s.plan_sparse().to_dense(), sc.plan_sparse().to_dense())
+    ok_stats = ok_stats and s.stats.mode == "mesh"
+out["roundtrip"] = bool(ok_rt)
+out["parity"] = bool(ok_par)
+out["stats_mode"] = bool(ok_stats)
+out["mesh_used"] = any(s.stats.devices > 1 for s in sols)
+
+# cost-only fetch accounting across the mesh
+from repro.core.batched import pad_stack
+mb = max(c.shape[0] for c, _, _ in ot)
+nb = max(c.shape[1] for c, _, _ in ot)
+inputs = {"c": pad_stack([c for c, _, _ in ot], (mb, nb)),
+          "nu": pad_stack([v for _, v, _ in ot], (mb,)),
+          "mu": pad_stack([v for _, _, v in ot], (nb,))}
+sizes = np.asarray([c.shape for c, _, _ in ot], np.int32)
+batch = solve(OT, inputs, eps, pol_mesh, sizes=sizes, want=("cost",))
+batch.cost()
+out["cost_only_bytes"] = int(batch.fetched_bytes)
+out["dense_bytes"] = int(b * mb * nb * 4)
+
+# certificates across the mesh (guaranteed bound)
+gsols = solve(OT, ot, 0.1,
+              DispatchPolicy(mode="mesh", mesh=mesh, chunk=4,
+                             guaranteed=True),
+              want=("cost", "duals"))
+out["certificates"] = bool(all(
+    s.dual_feasible() and s.additive_gap() <= s.additive_gap_bound()
+    for s in gsols))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_solution_surface_eight_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # skip the TPU-backend probe (60s timeout in this image)
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["devices"] == 8, out
+    assert out["roundtrip"], out
+    assert out["parity"], out
+    assert out["stats_mode"], out
+    assert out["mesh_used"], out
+    assert out["certificates"], out
+    assert out["cost_only_bytes"] < out["dense_bytes"] / 100, out

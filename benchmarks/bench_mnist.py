@@ -21,14 +21,15 @@ def run(full: bool = False):
     nu = jnp.full((n,), 1.0 / n)
     rows = []
     for eps in epss:
-        t_pr = time_call(lambda: solve_assignment(c, eps), repeats=3)
+        t_pr = time_call(lambda eps=eps: solve_assignment(c, eps), repeats=3)
         r = solve_assignment(c, eps)
         emit(f"mnist/pushrelabel/n={n}/eps={eps}", t_pr,
              f"phases={int(r.phases)};cost={float(r.cost)/n:.4f}")
         reg = reg_for_additive_eps(eps, n)
         t_sk = time_call(
-            lambda: sinkhorn(c, nu, nu, reg=reg, tol=eps / 8.0,
-                             max_iters=2000),
+            lambda reg=reg, eps=eps: sinkhorn(c, nu, nu, reg=reg,
+                                              tol=eps / 8.0,
+                                              max_iters=2000),
             repeats=3,
         )
         rs = sinkhorn(c, nu, nu, reg=reg, tol=eps / 8.0, max_iters=2000)

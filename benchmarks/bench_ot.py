@@ -25,7 +25,7 @@ def run(full: bool = False, tiny: bool = False):
         opt = exact_ot_cost(np.asarray(c), np.asarray(nu), np.asarray(mu)) \
             if n <= 512 else None
         for eps in [0.1, 0.05]:
-            t = time_call(lambda: solve_ot(c, nu, mu, eps), repeats=2)
+            t = time_call(lambda eps=eps: solve_ot(c, nu, mu, eps), repeats=2)
             r = solve_ot(c, nu, mu, eps)
             gap = (float(r.cost) - opt) / float(np.asarray(c).max()) \
                 if opt else float("nan")
@@ -33,8 +33,9 @@ def run(full: bool = False, tiny: bool = False):
                  f"phases={int(r.phases)};gap={gap:.5f};theta={r.theta:.0f}")
             reg = reg_for_additive_eps(eps, n)
             t_sk = time_call(
-                lambda: sinkhorn(c, nu, mu, reg=reg, tol=eps / 8.0,
-                                 max_iters=2000), repeats=2)
+                lambda reg=reg, eps=eps: sinkhorn(c, nu, mu, reg=reg,
+                                                  tol=eps / 8.0,
+                                                  max_iters=2000), repeats=2)
             rs = sinkhorn(c, nu, mu, reg=reg, tol=eps / 8.0, max_iters=2000)
             gap_s = (float(rs.cost) - opt) / float(np.asarray(c).max()) \
                 if opt else float("nan")

@@ -18,7 +18,7 @@ def run(full: bool = False):
     scale = c.max()
     for eps in [0.2, 0.1, 0.05, 0.02, 0.01]:
         c_int = round_costs(jnp.asarray(c / scale), eps)
-        t = time_call(lambda: solve_assignment_int(c_int, eps), repeats=2)
+        t = time_call(lambda eps=eps, c_int=c_int: solve_assignment_int(c_int, eps), repeats=2)
         st = solve_assignment_int(c_int, eps)
         bound_t = (1 + 2 * eps) / eps ** 2
         bound_ni = n * (1 + 2 * eps) / eps

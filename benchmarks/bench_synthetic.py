@@ -26,7 +26,7 @@ def run(full: bool = False):
         opt = exact_assignment_cost(c_np) if n <= 2048 else None
         scale = float(c_np.max())
         for eps in epss:
-            t_pr = time_call(lambda: solve_assignment(c, eps), repeats=3)
+            t_pr = time_call(lambda eps=eps: solve_assignment(c, eps), repeats=3)
             r = solve_assignment(c, eps)
             gap = ((float(r.cost) - opt) / (n * scale)) if opt else float("nan")
             emit(f"synthetic/pushrelabel/n={n}/eps={eps}", t_pr,
@@ -34,8 +34,9 @@ def run(full: bool = False):
             reg = reg_for_additive_eps(eps, n)
             nu = jnp.full((n,), 1.0 / n)
             t_sk = time_call(
-                lambda: sinkhorn(c, nu, nu, reg=reg, tol=eps / 8.0,
-                                 max_iters=2000),
+                lambda reg=reg, eps=eps: sinkhorn(c, nu, nu, reg=reg,
+                                                  tol=eps / 8.0,
+                                                  max_iters=2000),
                 repeats=3,
             )
             rs = sinkhorn(c, nu, nu, reg=reg, tol=eps / 8.0, max_iters=2000)

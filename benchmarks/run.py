@@ -15,6 +15,10 @@ import sys
 
 DIFF_THRESHOLD = 0.2     # flag >20% instances/sec regressions
 
+# (name, old, new, ratio, tag) rows accumulated across diff_records calls,
+# rendered as a markdown table into GITHUB_STEP_SUMMARY when CI sets it
+_DIFF_ROWS: list = []
+
 
 def diff_records(fresh: list, committed_path: str,
                  threshold: float = DIFF_THRESHOLD) -> list:
@@ -42,9 +46,33 @@ def diff_records(fresh: list, committed_path: str,
         tag = "REGRESSION" if regressed else "ok"
         print(f"# {r['name']}: {old:.1f} -> {new:.1f} inst/s "
               f"({ratio - 1.0:+.1%}) {tag}", file=sys.stderr, flush=True)
+        _DIFF_ROWS.append((r["name"], old, new, ratio, tag))
         if regressed:
             regressions.append(r["name"])
     return regressions
+
+
+def write_step_summary(regressions: list,
+                       path: str = "") -> None:
+    """Render the accumulated diff rows as a markdown table into the CI
+    step summary (``GITHUB_STEP_SUMMARY``); no-op outside CI."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY", "")
+    if not path or not _DIFF_ROWS:
+        return
+    lines = ["## Benchmark diff vs committed baselines", "",
+             f"Threshold: >{DIFF_THRESHOLD:.0%} instances/sec regression "
+             f"fails the job.", "",
+             "| bench | baseline inst/s | fresh inst/s | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for name, old, new, ratio, tag in _DIFF_ROWS:
+        status = ":x: REGRESSION" if tag == "REGRESSION" else ":white_check_mark: ok"
+        lines.append(f"| `{name}` | {old:.1f} | {new:.1f} | "
+                     f"{ratio - 1.0:+.1%} | {status} |")
+    lines.append("")
+    lines.append(f"**{len(regressions)} regression(s)**" if regressions
+                 else "**diff clean**")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> None:
@@ -114,6 +142,7 @@ def main() -> None:
             else:
                 bench_solution.write_json("BENCH_solution.json")
     if args.diff:
+        write_step_summary(regressions)
         if regressions:
             print(f"# PERF REGRESSIONS ({len(regressions)}): "
                   + ", ".join(regressions), file=sys.stderr, flush=True)

@@ -28,7 +28,7 @@ def main():
     engine = Engine(cfg, params, max_len=128)
 
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
+    for _ in range(args.requests):
         plen = int(rng.integers(8, 24))
         engine.submit(Request(
             prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
@@ -48,7 +48,7 @@ def main():
     # size distance requests are bucketed and each bucket dispatched as one
     # XLA program through the batched solver subsystem.
     svc = OTService(eps=0.1)
-    for i in range(args.requests):
+    for _ in range(args.requests):
         m = int(rng.integers(40, 160))
         svc.submit(rng.uniform(size=(m, 2)).astype(np.float32),
                    rng.uniform(size=(m, 2)).astype(np.float32))

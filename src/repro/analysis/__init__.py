@@ -1,0 +1,50 @@
+"""repro.analysis: jaxpr-level static audit + sanitizer layer for the solver
+entry points.
+
+The three worst bugs in this repo's history were silent device-semantics
+bugs (see each rule's docstring in ``rules.py`` for the mapping):
+
+  * PR 2: the OT termination threshold computed on device in f32 rounded
+    the wrong way for some (eps, total_mass) pairs;
+  * PR 3: ``init_ot_state`` aliased the caller's rounded masses into the
+    donated solver state, so the first chunk dispatch deleted them out
+    from under the epilogue;
+  * recompile churn when eps leaked into a jit cache key as a Python
+    scalar instead of riding along as traced data.
+
+This package catches those classes statically: every jitted entry point
+self-registers into ``registry``, the CLI (``python -m repro.analysis``)
+traces each one to a ClosedJaxpr and runs the rule passes in ``rules.py``,
+plus an AST hot-loop sync audit (``syncaudit.py``) and a lock-discipline
+scan (``locks.py``). ``checkified.py`` provides the runtime companion: a
+checkify-instrumented variant of the chunked phase dispatch, enabled with
+``set_debug_checks(True)`` or ``REPRO_DEBUG_CHECKS=1``.
+
+This module stays import-light on purpose: core modules import it (and
+``registry``) at import time to self-register, so nothing here may import
+back into ``repro.core``.
+"""
+from __future__ import annotations
+
+import os
+
+from . import registry  # noqa: F401  (re-export: the self-registration hub)
+
+_DEBUG_CHECKS: bool | None = None
+
+
+def debug_checks_enabled() -> bool:
+    """Whether drivers should dispatch the checkify-instrumented stepped
+    cores (``checkified.py``) instead of the plain donated ones. Off by
+    default; enable programmatically (``set_debug_checks``) or via the
+    ``REPRO_DEBUG_CHECKS`` environment variable."""
+    if _DEBUG_CHECKS is not None:
+        return _DEBUG_CHECKS
+    return os.environ.get("REPRO_DEBUG_CHECKS", "").lower() not in (
+        "", "0", "false", "off")
+
+
+def set_debug_checks(enabled: bool | None) -> None:
+    """Override the debug-checks flag (None restores the env-var default)."""
+    global _DEBUG_CHECKS
+    _DEBUG_CHECKS = enabled

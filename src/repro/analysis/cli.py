@@ -1,0 +1,174 @@
+"""``python -m repro.analysis``: run every audit pass over the repo.
+
+Passes, in order:
+
+  1. jaxpr rules (``rules.py``) over every registered entry point;
+  2. hot-loop sync audit (``syncaudit.py``) over the chunk-loop drivers;
+  3. lock-discipline static scan (``locks.py``) over the serving layer;
+  4. dynamic bucket-ladder audit: one compiled program per (shape, k, B)
+     across a pow2 compaction descent, and eps-as-data (re-running with
+     different eps values must not grow the jit cache).
+
+Findings are filtered through the baseline suppressions
+(``baseline.py``); ``--strict`` exits 1 on any unsuppressed finding or
+stale baseline entry. This is the CI gate (the ``analysis`` job) and the
+gate the upcoming fused-Pallas-kernel PR must pass.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Tuple
+
+from . import registry
+from .baseline import DEFAULT_BASELINE, apply_baseline, load_baseline
+from .rules import Finding, audit_entries
+
+
+def audit_bucket_ladder(spec_name: str = "assignment", b: int = 16,
+                        mn: int = 8, k: int = 3) -> List[Finding]:
+    """Dynamic recompile audit over a real compaction descent.
+
+    Solves a skewed mixed-eps batch (half loose, half tight eps) with a
+    DEDICATED chunk size ``k`` so the jit-cache deltas below are exact,
+    then asserts:
+
+      * exactly one compiled chunk program per batch bucket the pow2
+        descent visited (one program per (shape, k, B));
+      * a second identical solve compiles nothing new;
+      * a third solve with DIFFERENT eps values compiles nothing new
+        (eps is traced data, never a cache key).
+    """
+    import numpy as np
+
+    from repro.core import compaction as C
+    from repro.core.problem import ASSIGNMENT, OT
+
+    spec = {"assignment": ASSIGNMENT, "ot": OT}[spec_name]
+    fns = C.spec_fns(spec, k)
+    chunk = fns[2]
+    findings: List[Finding] = []
+
+    rng = np.random.default_rng(0)
+    c = rng.random((b, mn, mn)).astype(np.float32)
+    eps = np.where(np.arange(b) < b // 2, 0.45, 0.02)
+    inputs = {"c": c}
+    if spec_name == "ot":
+        inputs["nu"] = np.full((b, mn), 1.0 / mn, np.float32)
+        inputs["mu"] = np.full((b, mn), 1.0 / mn, np.float32)
+
+    base = chunk._cache_size()
+    _, stats = C.solve_compacting(spec, inputs, eps, k=k)
+    buckets = sorted({bb for bb, _ in stats.occupancy})
+    compiled = chunk._cache_size() - base
+    if len(buckets) < 2:
+        findings.append(Finding(
+            rule="recompile-hazard", entry=f"bucket-ladder[{spec_name}]",
+            detail="no-descent",
+            message=(f"the audit batch never descended (buckets "
+                     f"{buckets}): the mixed-eps workload no longer "
+                     "exercises the pow2 ladder — retune the audit"),
+        ))
+    if compiled != len(buckets):
+        findings.append(Finding(
+            rule="recompile-hazard", entry=f"bucket-ladder[{spec_name}]",
+            detail="programs-per-bucket",
+            message=(f"{compiled} chunk programs compiled for "
+                     f"{len(buckets)} distinct batch buckets {buckets}: "
+                     "expected exactly one program per (shape, k, B) — "
+                     "something data-dependent leaked into the cache key"),
+        ))
+    for round_name, e in (("identical", eps),
+                          ("different-eps", eps * 0.9)):
+        before = chunk._cache_size()
+        C.solve_compacting(spec, inputs, e, k=k)
+        grew = chunk._cache_size() - before
+        if grew:
+            findings.append(Finding(
+                rule="recompile-hazard",
+                entry=f"bucket-ladder[{spec_name}]",
+                detail=f"retrace:{round_name}",
+                message=(f"re-solving ({round_name}) compiled {grew} new "
+                         "chunk programs: the descent must reuse every "
+                         "bucket's program — eps or another traced "
+                         "operand leaked into the jit cache key"),
+            ))
+    return findings
+
+
+def collect_findings(dynamic: bool = True
+                     ) -> Tuple[List[Finding], List[str]]:
+    """All findings plus human-readable coverage lines."""
+    from . import locks, syncaudit
+
+    report: List[str] = []
+    findings: List[Finding] = []
+
+    entries = registry.build_entries()
+    fs, n = audit_entries(entries)
+    findings += fs
+    report.append(f"jaxpr rules: {n} entry points audited")
+
+    sync_targets = syncaudit.default_targets()
+    findings += syncaudit.audit_targets(sync_targets)
+    report.append("hot-loop sync audit: "
+                  + ", ".join(t.label for t in sync_targets))
+
+    for t in locks.default_targets():
+        fs = locks.scan_lock_discipline(t)
+        findings += fs
+        if t.lock_attr is None:
+            report.append(f"lock scan: {t.class_name} exempt ({t.note})")
+        else:
+            report.append(f"lock scan: {t.class_name} "
+                          f"({len(t.fields)} shared fields)")
+
+    if dynamic:
+        findings += audit_bucket_ladder()
+        report.append("bucket-ladder audit: one program per (shape, k, B)")
+    return findings, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level static audit of the solver entry points")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unsuppressed finding or stale "
+                         "baseline entry")
+    ap.add_argument("--no-dynamic", action="store_true",
+                    help="skip the dynamic bucket-ladder audit")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline suppressions file")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entry points and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for spec in registry.entry_specs():
+            print(spec.name)
+        return 0
+
+    findings, report = collect_findings(dynamic=not args.no_dynamic)
+    baseline = load_baseline(args.baseline)
+    active, suppressed, stale = apply_baseline(findings, baseline)
+
+    for line in report:
+        print(f"  {line}")
+    if suppressed:
+        print(f"{len(suppressed)} suppressed (baselined) finding(s):")
+        for f, reason in suppressed:
+            print(f"  {f.key}\n      accepted: {reason}")
+    if stale:
+        print(f"{len(stale)} STALE baseline entr(ies) matched nothing:")
+        for key in stale:
+            print(f"  {key}")
+    if active:
+        print(f"{len(active)} finding(s):")
+        for f in active:
+            print(f"  {f.key}\n      {f.message}")
+    else:
+        print("no unsuppressed findings")
+
+    if args.strict and (active or stale):
+        return 1
+    return 0

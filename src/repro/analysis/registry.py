@@ -1,0 +1,203 @@
+"""Entry-point registry for the static audit.
+
+Solver modules self-register every jitted entry point (stepped cores,
+compaction chunk dispatches, mesh dispatches, Pallas kernel wrappers,
+Solution certificate reductions) by calling :func:`register` at import
+time with a *lazy builder*: a zero-argument callable that traces the
+entry to a ClosedJaxpr over representative tiny operands and returns a
+:class:`TracedEntry`. Building is deferred until the CLI (or a test)
+iterates the registry, so registration itself costs nothing at import.
+
+The registry records, per entry, the audit-relevant contracts the jaxpr
+alone cannot express:
+
+  * ``donated``    — argument roots whose buffers the dispatch donates;
+  * ``retained``   — argument roots Python code still reads AFTER the
+                     dispatch (the donation-safety rule cross-checks the
+                     two: the PR-3 bug class);
+  * ``must_trace`` — operands that must enter the program as traced data,
+                     never baked constants (eps, theta, thresholds,
+                     masks: the recompile-churn bug class);
+  * ``tags``       — rule-selection labels ("threshold", "certificate",
+                     "state-init-chain", ...).
+
+This module must not import ``repro.core`` (core modules import it to
+self-register); jax is imported lazily inside the trace helper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Tuple
+
+# Modules that self-register entry points on import. ``load_all`` imports
+# them so iterating the registry sees every entry regardless of what the
+# caller happened to import first.
+BUILTIN_MODULES: Tuple[str, ...] = (
+    "repro.core.pushrelabel",
+    "repro.core.transport",
+    "repro.core.problem",
+    "repro.core.compaction",
+    "repro.core.distributed",
+    "repro.core.solution",
+    "repro.kernels.ops",
+)
+
+
+@dataclass(frozen=True)
+class TracedEntry:
+    """One audited entry point, traced to a ClosedJaxpr.
+
+    ``in_names``/``out_names`` are flat leaf names aligned with the
+    jaxpr's invars/outvars (``state.free_b``, ``ops['c']``, ...); the
+    contract sets (``donated``/``retained``/``must_trace``) hold argument
+    ROOT names and are matched against leaf names by prefix."""
+    name: str
+    jaxpr: Any                      # jax.core.ClosedJaxpr
+    in_names: Tuple[str, ...]
+    out_names: Tuple[str, ...]
+    arg_roots: Tuple[str, ...]
+    donated: FrozenSet[str] = frozenset()
+    retained: FrozenSet[str] = frozenset()
+    must_trace: FrozenSet[str] = frozenset()
+    tags: FrozenSet[str] = frozenset()
+    source: str = ""
+
+    def leaves_of(self, root: str, names: Iterable[str]) -> List[int]:
+        """Indices in ``names`` of the leaves belonging to arg ``root``."""
+        out = []
+        for i, n in enumerate(names):
+            if n == root or n.startswith(root + ".") or \
+                    n.startswith(root + "["):
+                out.append(i)
+        return out
+
+
+@dataclass(frozen=True)
+class EntrySpec:
+    name: str
+    build: Callable[[], TracedEntry]
+    source: str = ""
+
+
+_REGISTRY: Dict[str, EntrySpec] = {}
+_LOADED = False
+
+
+def register(name: str, build: Callable[[], TracedEntry],
+             source: str = "") -> None:
+    """Register (or re-register) a lazy entry builder under ``name``."""
+    _REGISTRY[name] = EntrySpec(name=name, build=build, source=source)
+
+
+def load_all() -> None:
+    """Import every builtin self-registering module exactly once."""
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+
+    for mod in BUILTIN_MODULES:
+        importlib.import_module(mod)
+    _LOADED = True
+
+
+def entry_specs() -> List[EntrySpec]:
+    load_all()
+    return [spec for _, spec in sorted(_REGISTRY.items())]
+
+
+def build_entries() -> List[TracedEntry]:
+    """Trace every registered entry (the expensive step; CLI/test only)."""
+    return [spec.build() for spec in entry_specs()]
+
+
+# --------------------------------------------------------------------------
+# Trace helper
+# --------------------------------------------------------------------------
+
+def _leaf_names(root: str, val: Any) -> List[str]:
+    """Flat leaf names for one argument, in jax tree-flatten order
+    (dict keys sorted; NamedTuple fields by position, named)."""
+    if isinstance(val, tuple) and hasattr(val, "_fields"):
+        out: List[str] = []
+        for f, v in zip(val._fields, val):
+            out += _leaf_names(f"{root}.{f}", v)
+        return out
+    if isinstance(val, dict):
+        out = []
+        for k in sorted(val):
+            out += _leaf_names(f"{root}[{k!r}]", val[k])
+        return out
+    if isinstance(val, (tuple, list)):
+        out = []
+        for i, v in enumerate(val):
+            out += _leaf_names(f"{root}[{i}]", v)
+        return out
+    return [root]
+
+
+def _inline_trivial_call(closed):
+    """make_jaxpr of a jitted fn yields a single opaque ``pjit`` eqn;
+    descend into it (invars/outvars permitting) so rules see the body."""
+    jaxpr = closed.jaxpr
+    while (len(jaxpr.eqns) == 1
+           and jaxpr.eqns[0].primitive.name == "pjit"
+           and list(jaxpr.eqns[0].invars) == list(jaxpr.invars)
+           and list(jaxpr.outvars) == list(jaxpr.eqns[0].outvars)):
+        closed = jaxpr.eqns[0].params["jaxpr"]
+        jaxpr = closed.jaxpr
+    return closed
+
+
+def trace_entry(
+    name: str,
+    fn: Callable,
+    args: Dict[str, Any],
+    *,
+    donated: Iterable[str] = (),
+    retained: Iterable[str] = (),
+    must_trace: Iterable[str] = (),
+    tags: Iterable[str] = (),
+    source: str = "",
+) -> TracedEntry:
+    """Trace ``fn(*args.values())`` to a ClosedJaxpr and wrap it as a
+    :class:`TracedEntry`. ``args`` is an ORDERED name->value mapping (its
+    order is the positional order). Output leaf names come from the traced
+    output's own structure: a dict output names leaves by its keys (so
+    chain builders returning ``{"state": ..., "retained": ...}`` get
+    ``state.*``/``retained[...]`` out-names the rules can group on)."""
+    import jax
+
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args.values())
+    closed = _inline_trivial_call(closed)
+
+    in_names: List[str] = []
+    for root, val in args.items():
+        in_names += _leaf_names(root, val)
+    if len(in_names) != len(closed.jaxpr.invars):
+        raise ValueError(
+            f"{name}: flattened arg names ({len(in_names)}) do not match "
+            f"jaxpr invars ({len(closed.jaxpr.invars)})")
+
+    if isinstance(out_shape, dict):
+        out_names = tuple(sum((_leaf_names(k, out_shape[k])
+                               for k in sorted(out_shape)), []))
+    else:
+        out_names = tuple(_leaf_names("out", out_shape))
+    if len(out_names) != len(closed.jaxpr.outvars):
+        raise ValueError(
+            f"{name}: out names ({len(out_names)}) do not match jaxpr "
+            f"outvars ({len(closed.jaxpr.outvars)})")
+
+    return TracedEntry(
+        name=name,
+        jaxpr=closed,
+        in_names=tuple(in_names),
+        out_names=out_names,
+        arg_roots=tuple(args.keys()),
+        donated=frozenset(donated),
+        retained=frozenset(retained),
+        must_trace=frozenset(must_trace),
+        tags=frozenset(tags),
+        source=source,
+    )

@@ -1,0 +1,381 @@
+"""Rule-based audit passes over traced entry points.
+
+Each rule guards against a bug class this repo has actually shipped:
+
+``donation-safety``
+    PR 3: ``init_ot_state`` built ``free_b = s_int.astype(int32)``; the
+    same-dtype astype is elided, so the state output ALIASED the caller's
+    rounded masses. ``run_ot_phases`` donates the state, so the first
+    chunk dispatch deleted ``s_int`` out from under the epilogue. The rule
+    flags (a) any state-init output that aliases a retained input/output
+    at the jaxpr level (the buffer-sharing proxy: an output var reachable
+    from the aliased var through identity-only equations), and (b) any
+    entry whose registry contract both donates and retains an argument.
+
+``dtype-drift``
+    PR 2: the OT termination threshold computed ON DEVICE as
+    ``f32(eps) * f32(total)`` rounds the wrong way for some (eps, total)
+    pairs — e.g. eps=0.1, total=10 gives 1 in f32 but 0 in the host-f64
+    contract. The rule flags float32 round-trips int -> f32 arithmetic ->
+    int (the exact shape of that bug) in any entry, plus — for
+    ``certificate``-tagged reductions — weak-typed float literals mixed
+    into the arithmetic (silent promotion hazards) and f32 accumulations
+    (reported so the accepted ones are explicit baseline entries).
+
+``recompile-hazard``
+    eps leaked as a Python scalar bakes a constant into the jaxpr: every
+    distinct value compiles a fresh program and the pow2 bucket ladder
+    churns the jit cache. The rule checks every ``must_trace`` operand is
+    (a) an actual input of the traced program and (b) used by it. The
+    dynamic half (one compiled program per (shape, k, B) across a bucket
+    descent) lives in ``cli.audit_bucket_ladder``.
+
+The hot-loop sync audit (rule 4) is AST-based and lives in
+``syncaudit.py``; lock discipline in ``locks.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Set, Tuple
+
+from .registry import TracedEntry
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    entry: str
+    detail: str          # stable discriminator (no line numbers)
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.entry}:{self.detail}"
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.entry}: {self.message}"
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking helpers
+# --------------------------------------------------------------------------
+
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr",
+                  "branches")
+
+
+def _sub_jaxprs(params: Dict[str, Any]):
+    from jax.extend import core as jex_core  # noqa: F401
+
+    for key in _SUBJAXPR_KEYS:
+        if key not in params:
+            continue
+        val = params[key]
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            inner = getattr(v, "jaxpr", v)   # ClosedJaxpr -> Jaxpr
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def iter_jaxprs(jaxpr):
+    """Yield ``jaxpr`` and every nested sub-jaxpr (while/cond/pjit/scan
+    bodies), depth-first."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    yield inner
+    for eqn in inner.eqns:
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_jaxprs(sub)
+
+
+def _is_literal(v) -> bool:
+    return hasattr(v, "val") and not hasattr(v, "count")
+
+
+def _identity_eqn(eqn) -> bool:
+    """Equations XLA may lower to a buffer alias (identity chains for the
+    donation-safety rule). ``copy`` is deliberately NOT here — inserting
+    one is exactly how the PR-3 fix breaks the alias."""
+    name = eqn.primitive.name
+    if len(eqn.invars) != 1 or len(eqn.outvars) != 1 or \
+            _is_literal(eqn.invars[0]):
+        return False
+    iv, ov = eqn.invars[0], eqn.outvars[0]
+    if name == "convert_element_type":
+        return iv.aval.dtype == ov.aval.dtype
+    if name in ("reshape", "squeeze", "expand_dims"):
+        return iv.aval.shape == ov.aval.shape
+    if name == "broadcast_in_dim":
+        return iv.aval.shape == ov.aval.shape
+    return False
+
+
+def _alias_origin(jaxpr) -> Dict[Any, Any]:
+    """Map each var of the TOP-LEVEL jaxpr to the var it may alias:
+    itself for invars, or the transitive source through identity-only
+    equations. Vars produced by real computation map to themselves."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    origin: Dict[Any, Any] = {}
+    for v in list(inner.invars) + list(inner.constvars):
+        origin[v] = v
+    for eqn in inner.eqns:
+        if _identity_eqn(eqn):
+            src = eqn.invars[0]
+            origin[eqn.outvars[0]] = origin.get(src, src)
+        else:
+            for ov in eqn.outvars:
+                origin[ov] = ov
+    return origin
+
+
+# --------------------------------------------------------------------------
+# Rule 1: donation safety
+# --------------------------------------------------------------------------
+
+def rule_donation_safety(entry: TracedEntry) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # (b) contract-level: a donated argument the caller also retains is
+    # read-after-free by construction (the PR-3 symptom at the driver
+    # level: Python code touching a donated buffer after dispatch).
+    for root in sorted(entry.donated & entry.retained):
+        findings.append(Finding(
+            rule="donation-safety", entry=entry.name,
+            detail=f"donated-retained:{root}",
+            message=(f"argument '{root}' is DONATED by the dispatch but "
+                     "declared retained (read by host code afterwards): "
+                     "the dispatch deletes the buffer out from under the "
+                     "reader"),
+        ))
+
+    # (a) jaxpr-level: in a state-init chain, a 'state.*' output aliasing
+    # a retained input or a 'retained*' output shares its buffer with it;
+    # the downstream donating run_phases then frees both.
+    if "state-init-chain" in entry.tags:
+        inner = entry.jaxpr.jaxpr
+        origin = _alias_origin(entry.jaxpr)
+        invar_of = {v: entry.in_names[i]
+                    for i, v in enumerate(inner.invars)}
+        retained_in = {v for i, v in enumerate(inner.invars)
+                       for root in entry.retained
+                       if i in entry.leaves_of(root, entry.in_names)}
+        out_origin = [(entry.out_names[i], origin.get(v, v))
+                      for i, v in enumerate(inner.outvars)
+                      if not _is_literal(v)]
+        retained_out_origins = {
+            o for n, o in out_origin if n.startswith("retained")}
+        for n, o in out_origin:
+            if not n.startswith("state"):
+                continue
+            if o in retained_in:
+                findings.append(Finding(
+                    rule="donation-safety", entry=entry.name,
+                    detail=f"alias:{n}",
+                    message=(f"state output '{n}' aliases retained input "
+                             f"'{invar_of[o]}' (identity chain, no copy): "
+                             "the donating chunk dispatch will delete the "
+                             "retained buffer — insert jnp.array(..., "
+                             "copy=True) as in init_ot_state"),
+                ))
+            elif o in retained_out_origins:
+                findings.append(Finding(
+                    rule="donation-safety", entry=entry.name,
+                    detail=f"alias:{n}",
+                    message=(f"state output '{n}' aliases a retained "
+                             "output of the same program (shared origin, "
+                             "identity chain): the donating chunk "
+                             "dispatch will delete the retained buffer — "
+                             "insert jnp.array(..., copy=True) as in "
+                             "init_ot_state"),
+                ))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Rule 2: dtype drift
+# --------------------------------------------------------------------------
+
+_F32_WALK_PRIMS = {"mul", "add", "sub", "div", "neg", "max", "min",
+                   "reduce_sum", "reduce_max", "reduce_min", "floor",
+                   "ceil", "round"}
+_FLOATS = ("float16", "bfloat16", "float32")
+
+
+def _producers(jaxpr) -> Dict[Any, Any]:
+    prod = {}
+    for eqn in jaxpr.eqns:
+        for ov in eqn.outvars:
+            prod[ov] = eqn
+    return prod
+
+
+def _f32_roundtrips(jaxpr) -> Iterable[str]:
+    """Yield descriptions of int -> small-float arithmetic -> int round
+    trips within one jaxpr body (the PR-2 threshold bug shape)."""
+    prod = _producers(jaxpr)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        iv, ov = eqn.invars[0], eqn.outvars[0]
+        if _is_literal(iv):
+            continue
+        if str(iv.aval.dtype) not in _FLOATS or \
+                ov.aval.dtype.kind not in "iu":
+            continue
+        # walk float arithmetic upstream looking for an int->float convert
+        seen: Set[Any] = set()
+        frontier = [iv]
+        passed_arith = False
+        for _ in range(8):
+            nxt = []
+            for v in frontier:
+                e = prod.get(v)
+                if e is None or id(e) in seen:
+                    continue
+                seen.add(id(e))
+                name = e.primitive.name
+                if name == "convert_element_type":
+                    src = e.invars[0]
+                    if not _is_literal(src) and passed_arith and \
+                            src.aval.dtype.kind in "iu":
+                        yield (f"int -> {iv.aval.dtype} arithmetic -> "
+                               f"{ov.aval.dtype} round trip")
+                        return
+                    if not _is_literal(src):
+                        nxt.append(src)
+                elif name in _F32_WALK_PRIMS:
+                    passed_arith = True
+                    nxt.extend(x for x in e.invars if not _is_literal(x))
+            frontier = nxt
+            if not frontier:
+                break
+
+
+def rule_dtype_drift(entry: TracedEntry) -> List[Finding]:
+    findings: List[Finding] = []
+    for sub in iter_jaxprs(entry.jaxpr):
+        for desc in _f32_roundtrips(sub):
+            findings.append(Finding(
+                rule="dtype-drift", entry=entry.name,
+                detail="f32-int-roundtrip",
+                message=(f"{desc}: device small-float arithmetic feeding "
+                         "an integer (termination-threshold shape) rounds "
+                         "differently from the host-float64 contract for "
+                         "some operand values — compute the threshold on "
+                         "host in float64 (ot_termination_threshold) and "
+                         "pass it in as traced data"),
+            ))
+            break   # one per entry is enough signal
+        else:
+            continue
+        break
+
+    # weakly-typed float outputs leak promotion behavior to callers
+    for i, v in enumerate(entry.jaxpr.jaxpr.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and getattr(aval, "weak_type", False) and \
+                getattr(aval, "dtype", None) is not None and \
+                aval.dtype.kind == "f":
+            findings.append(Finding(
+                rule="dtype-drift", entry=entry.name,
+                detail=f"weak-out:{entry.out_names[i]}",
+                message=(f"output '{entry.out_names[i]}' is weakly typed "
+                         "float: downstream promotion depends on the "
+                         "consumer — anchor the dtype explicitly"),
+            ))
+
+    if "certificate" in entry.tags:
+        # weak float literals inside certificate arithmetic promote
+        # silently if the operand dtype ever changes
+        found_weak = set()
+        for sub in iter_jaxprs(entry.jaxpr):
+            for eqn in sub.eqns:
+                for v in eqn.invars:
+                    if _is_literal(v) and \
+                            getattr(v.aval, "weak_type", False) and \
+                            v.aval.dtype.kind == "f":
+                        found_weak.add(eqn.primitive.name)
+        for prim in sorted(found_weak):
+            findings.append(Finding(
+                rule="dtype-drift", entry=entry.name,
+                detail=f"weak-literal:{prim}",
+                message=(f"weakly-typed float literal feeds '{prim}' in a "
+                         "certificate reduction: use jnp.float32(...) so "
+                         "the arithmetic dtype cannot drift with the "
+                         "operand"),
+            ))
+        # f32 accumulation: the certificate contract is host-f64; device
+        # f32 sums are ACCEPTED (x64 is disabled on device) but must be
+        # explicit baseline entries, not silent.
+        for sub in iter_jaxprs(entry.jaxpr):
+            if any(e.primitive.name == "reduce_sum"
+                   and str(e.outvars[0].aval.dtype) in _FLOATS
+                   for e in sub.eqns):
+                findings.append(Finding(
+                    rule="dtype-drift", entry=entry.name,
+                    detail="f32-accum",
+                    message=("certificate reduction accumulates in "
+                             "float32 on device (host contract is "
+                             "float64): acceptable only as an explicit "
+                             "baseline entry"),
+                ))
+                break
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Rule 3: recompile hazard
+# --------------------------------------------------------------------------
+
+def rule_recompile_hazard(entry: TracedEntry) -> List[Finding]:
+    findings: List[Finding] = []
+    roots = set(entry.arg_roots)
+    for name in sorted(entry.must_trace - roots):
+        findings.append(Finding(
+            rule="recompile-hazard", entry=entry.name,
+            detail=f"baked:{name}",
+            message=(f"must-trace operand '{name}' is not an input of the "
+                     "traced program — it was baked in as a compile-time "
+                     "constant, so every distinct value recompiles "
+                     "(compile-cache churn across the bucket ladder)"),
+        ))
+
+    # a must-trace input that exists but is never consumed usually means
+    # the kernel read a baked copy from somewhere else
+    used: Set[Any] = set()
+    for sub in iter_jaxprs(entry.jaxpr):
+        for eqn in sub.eqns:
+            used.update(v for v in eqn.invars if not _is_literal(v))
+        used.update(v for v in sub.outvars if not _is_literal(v))
+    inner = entry.jaxpr.jaxpr
+    for root in sorted(entry.must_trace & roots):
+        idxs = entry.leaves_of(root, entry.in_names)
+        if idxs and not any(inner.invars[i] in used for i in idxs):
+            findings.append(Finding(
+                rule="recompile-hazard", entry=entry.name,
+                detail=f"unused:{root}",
+                message=(f"must-trace operand '{root}' enters the program "
+                         "but is never used — the value most likely got "
+                         "baked into the jaxpr elsewhere as a constant"),
+            ))
+    return findings
+
+
+RULES = (rule_donation_safety, rule_dtype_drift, rule_recompile_hazard)
+
+
+def audit_entry(entry: TracedEntry) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in RULES:
+        out.extend(rule(entry))
+    return out
+
+
+def audit_entries(entries: Iterable[TracedEntry]
+                  ) -> Tuple[List[Finding], int]:
+    findings: List[Finding] = []
+    n = 0
+    for e in entries:
+        n += 1
+        findings.extend(audit_entry(e))
+    return findings, n

@@ -1,0 +1,140 @@
+"""Rule 4: hot-loop sync audit (AST-based).
+
+The compacting drivers' value proposition is that the phase loops never
+synchronize with the host: the ONLY device->host transfer allowed inside
+a chunk loop is the per-chunk converged-mask fetch (which doubles as the
+phase-counter fetch — the two ride one ``jax.device_get``). This repo
+once paid a second hidden sync per chunk fetching ``state.phases``
+separately; this audit pins the contract so it cannot regress.
+
+The scan parses the driver module, finds the registered loop functions
+(``compaction._drive``, ``distributed._drive_distributed``), and flags
+every host-transfer marker inside a ``for``/``while`` body:
+
+  * ``np.asarray(...)`` / ``np.array(...)`` on device values,
+  * ``jax.device_get(...)``,
+  * ``.block_until_ready()`` / ``.item()``.
+
+Whitelisted: a ``jax.device_get`` whose result is unpacked as
+``conv, ph = ...`` — the one sanctioned converged-mask (+ phases) fetch.
+(``jnp.asarray`` / ``jax.device_put`` are host->device and stay legal.)
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from .rules import Finding
+
+_NP_CALLS = {"asarray", "array"}
+_METHOD_CALLS = {"item", "block_until_ready"}
+_ALLOWED_TARGETS = (("conv", "ph"),)
+
+
+@dataclass(frozen=True)
+class SyncTarget:
+    path: str           # module file path
+    func: str           # function whose loops are audited
+    label: str          # entry label used in finding keys
+
+
+def _call_marker(node: ast.Call) -> Optional[str]:
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name):
+            if f.value.id == "np" and f.attr in _NP_CALLS:
+                return f"np.{f.attr}"
+            if f.value.id == "jax" and f.attr == "device_get":
+                return "jax.device_get"
+        if f.attr in _METHOD_CALLS:
+            return f".{f.attr}()"
+    if isinstance(f, ast.Name) and f.id == "device_get":
+        return "device_get"
+    return None
+
+
+def _assign_targets(node: ast.Assign) -> Optional[Tuple[str, ...]]:
+    if len(node.targets) != 1:
+        return None
+    t = node.targets[0]
+    if isinstance(t, ast.Tuple) and all(
+            isinstance(e, ast.Name) for e in t.elts):
+        return tuple(e.id for e in t.elts)
+    if isinstance(t, ast.Name):
+        return (t.id,)
+    return None
+
+
+def _scan_loop_body(loop: ast.AST, label: str, func: str) -> List[Finding]:
+    findings: List[Finding] = []
+    whitelisted: set = set()
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Assign):
+            targets = _assign_targets(node)
+            if targets in _ALLOWED_TARGETS and \
+                    isinstance(node.value, ast.Call) and \
+                    _call_marker(node.value) in ("jax.device_get",
+                                                 "device_get"):
+                whitelisted.add(id(node.value))
+    for node in ast.walk(loop):
+        if not isinstance(node, ast.Call):
+            continue
+        marker = _call_marker(node)
+        if marker is None or id(node) in whitelisted:
+            continue
+        findings.append(Finding(
+            rule="hot-loop-sync", entry=label,
+            detail=f"{func}:{marker}:{ast.unparse(node)[:60]}",
+            message=(f"host transfer '{ast.unparse(node)[:80]}' inside "
+                     f"the chunk loop of {func} (line {node.lineno}): "
+                     "only the converged-mask fetch (conv, ph = "
+                     "jax.device_get(...)) is whitelisted — fold the "
+                     "value into the conv dispatch or move it out of "
+                     "the loop"),
+        ))
+    return findings
+
+
+def audit_function_source(source: str, func: str, label: str
+                          ) -> List[Finding]:
+    """Audit every loop inside ``func`` of ``source``; also flags the
+    function missing entirely (a rename must update the audit)."""
+    tree = ast.parse(source)
+    fn = next((n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and n.name == func), None)
+    if fn is None:
+        return [Finding(
+            rule="hot-loop-sync", entry=label, detail=f"missing:{func}",
+            message=(f"audited function '{func}' not found — update the "
+                     "sync-audit target list to follow the rename"))]
+    findings: List[Finding] = []
+    seen: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.For, ast.While)):
+            for f in _scan_loop_body(node, label, func):
+                if f.key not in seen:      # nested loops are re-walked
+                    seen.add(f.key)
+                    findings.append(f)
+    return findings
+
+
+def audit_targets(targets: Sequence[SyncTarget]) -> List[Finding]:
+    findings: List[Finding] = []
+    for t in targets:
+        with open(t.path, "r", encoding="utf-8") as fh:
+            findings.extend(audit_function_source(fh.read(), t.func,
+                                                  t.label))
+    return findings
+
+
+def default_targets() -> List[SyncTarget]:
+    from repro.core import compaction, distributed
+
+    return [
+        SyncTarget(path=compaction.__file__, func="_drive",
+                   label="core.compaction._drive"),
+        SyncTarget(path=distributed.__file__, func="_drive_distributed",
+                   label="core.distributed._drive_distributed"),
+    ]

@@ -105,9 +105,15 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     ``run_fn(data, state) -> state`` advances every lane by at most
     ``stats.chunk`` phases (the chunk size is baked into ``run_fn``) and
     DONATES the state buffers (re-dispatch never holds two copies of the
-    solver state in device memory); ``conv_fn(data, state) -> (B,) bool``
-    is the per-lane termination predicate. Returns the full-size state
-    pytree with every lane terminated, in original batch order."""
+    solver state in device memory); ``conv_fn(data, state) ->
+    ((B,) bool, (B,) int32)`` is the per-lane termination predicate
+    bundled with the per-lane phase counters. Returns the full-size state
+    pytree with every lane terminated, in original batch order.
+
+    The ``conv, ph = jax.device_get(...)`` fetch is the ONLY device->host
+    sync in the loop (one per chunk) — the phase counters ride the same
+    dispatch as the mask precisely so they don't cost a second blocking
+    fetch. ``repro.analysis``'s hot-loop sync audit pins this contract."""
     idx = np.arange(stats.dispatched_batch)
     # The result buffer is born at the FIRST flush (where ``idx`` is still
     # the identity, so the flush is just the current state) rather than
@@ -119,8 +125,8 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     for _ in range(max_chunks):
         cur_s = run_fn(cur_d, cur_s)
         stats.dispatches += 1
-        conv = np.asarray(conv_fn(cur_d, cur_s))
-        ph = np.asarray(cur_s.phases, np.int64)
+        conv, ph = jax.device_get(conv_fn(cur_d, cur_s))
+        ph = ph.astype(np.int64)
         bb = int(conv.shape[0])
         # the vmapped while_loop runs every lane for the max phase delta
         stats.slot_phases += bb * int((ph - ph_prev).max(initial=0))
@@ -169,7 +175,10 @@ def spec_fns(spec, k: int):
     """(prologue, init, chunk, conv, epilogue): the spec's per-instance
     stepped-core functions vmapped over the batch and jitted. The chunk
     dispatch donates the state buffers (one copy of solver state on
-    device, not two)."""
+    device, not two). ``conv`` returns ``(mask, phases)`` in one program
+    so the driver's per-chunk device->host sync fetches both in a single
+    blocking transfer (the hot-loop sync audit in repro.analysis holds
+    the loop to exactly that one fetch)."""
     prologue = jax.jit(lambda ops: jax.vmap(spec.prologue)(ops))
     init = jax.jit(lambda data, ctx: jax.vmap(spec.init_state)(data, ctx))
     chunk = jax.jit(
@@ -178,7 +187,8 @@ def spec_fns(spec, k: int):
         donate_argnums=(1,),
     )
     conv = jax.jit(
-        lambda data, state: jax.vmap(spec.converged)(data, state))
+        lambda data, state: (jax.vmap(spec.converged)(data, state),
+                             state.phases))
     epilogue = jax.jit(
         lambda ctx, state: jax.vmap(spec.epilogue)(ctx, state))
     return prologue, init, chunk, conv, epilogue
@@ -228,7 +238,14 @@ def solve_compacting(
     # so the descent B -> B/2 -> ... visits only power-of-two shapes.
     p = spec.prepare(inputs, eps, sizes=sizes, guaranteed=guaranteed,
                      **prep_kw)
-    prologue, init, chunk, conv, epilogue = spec_fns(spec, k)
+    if _audit_debug_checks():
+        # Sanitizer mode: checkify-instrumented (nan/index/div + solver
+        # invariants) variants of the dispatched programs. Slower (no
+        # donation, per-chunk error sync) — never on by default.
+        from ..analysis.checkified import checkified_spec_fns
+        prologue, init, chunk, conv, epilogue = checkified_spec_fns(spec, k)
+    else:
+        prologue, init, chunk, conv, epilogue = spec_fns(spec, k)
     ops = {kk: jnp.asarray(v) for kk, v in p.ops.items()}
     data, ctx = prologue(ops)
     # epilogue operands the prologue does not transform are taken straight
@@ -290,3 +307,63 @@ def solve_ot_batched_compacting(
     return solve_compacting(OT, {"c": c, "nu": nu, "mu": mu}, eps,
                             sizes=sizes, k=k, guaranteed=guaranteed,
                             keep_state=keep_state, theta=theta)
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the vmapped chunk/conv dispatches are the
+# programs the compacting loop actually re-issues per bucket, so they are
+# what the donation-safety and dtype-drift rules must see.
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+from ..analysis import debug_checks_enabled as _audit_debug_checks  # noqa: E402
+
+
+def _tiny_batch(spec_name: str):
+    """A deterministic (2, 4, 4) prepared batch for tracing dispatches."""
+    spec = ASSIGNMENT if spec_name == "assignment" else OT
+    b, mn = 2, 4
+    c = np.linspace(0.0, 1.0, b * mn * mn, dtype=np.float32)
+    inputs = {"c": c.reshape(b, mn, mn)}
+    if spec_name == "ot":
+        inputs["nu"] = np.full((b, mn), 1.0 / mn, np.float32)
+        inputs["mu"] = np.full((b, mn), 1.0 / mn, np.float32)
+    p = spec.prepare(spec.canonicalize(inputs), 0.25)
+    prologue, init, chunk, conv, _ = spec_fns(spec, 2)
+    ops = {kk: jnp.asarray(v) for kk, v in p.ops.items()}
+    data, ctx = prologue(ops)
+    state = init(data, ctx)
+    return chunk, conv, data, state
+
+
+def _trace_chunk(spec_name: str):
+    chunk, _, data, state = _tiny_batch(spec_name)
+    return _audit.trace_entry(
+        name=f"core.compaction.chunk[{spec_name}]",
+        fn=chunk,
+        args={"data": data, "state": state},
+        donated={"state"},
+        tags={"chunk-dispatch", spec_name},
+        source=__name__,
+    )
+
+
+def _trace_conv(spec_name: str):
+    _, conv, data, state = _tiny_batch(spec_name)
+    return _audit.trace_entry(
+        name=f"core.compaction.conv[{spec_name}]",
+        fn=conv,
+        args={"data": data, "state": state},
+        tags={"conv-dispatch", spec_name},
+        source=__name__,
+    )
+
+
+_audit.register("core.compaction.chunk[assignment]",
+                lambda: _trace_chunk("assignment"), source=__name__)
+_audit.register("core.compaction.chunk[ot]",
+                lambda: _trace_chunk("ot"), source=__name__)
+_audit.register("core.compaction.conv[assignment]",
+                lambda: _trace_conv("assignment"), source=__name__)
+_audit.register("core.compaction.conv[ot]",
+                lambda: _trace_conv("ot"), source=__name__)

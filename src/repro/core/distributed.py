@@ -181,7 +181,8 @@ def _mesh_fns(spec, mesh: Mesh, axis: str, k: int):
         donate=(1,),
     )
     conv = _wrap(mesh, axis,
-                 lambda data, state: jax.vmap(spec.converged)(data, state))
+                 lambda data, state: (jax.vmap(spec.converged)(data, state),
+                                      state.phases))
     epilogue = _wrap(mesh, axis,
                      lambda ctx, state: jax.vmap(spec.epilogue)(ctx, state))
     return prologue, init, chunk, conv, epilogue
@@ -241,9 +242,13 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
     for _ in range(max_chunks):
         cur_s = (run_s if sharded else run_1)(cur_d, cur_s)
         stats.dispatches += 1
-        # global converged-mask gather: ONE (B,) device->host sync per chunk
-        conv = np.asarray((conv_s if sharded else conv_1)(cur_d, cur_s))
-        ph = np.asarray(cur_s.phases, np.int64)
+        # global converged-mask + phase-counter gather: ONE (B,)
+        # device->host sync per chunk (conv bundles both outputs, so the
+        # phase counters don't cost a second blocking fetch — the
+        # repro.analysis hot-loop sync audit pins this)
+        conv, ph = jax.device_get((conv_s if sharded else conv_1)(cur_d,
+                                                                  cur_s))
+        ph = ph.astype(np.int64)
         bb = int(conv.shape[0])
         d_now = d0 if sharded else 1
         stats.devices_per_dispatch.append(d_now)
@@ -481,3 +486,35 @@ def solve_ot_distributed(
                       sizes=sizes, k=k, guaranteed=guaranteed,
                       batch_axis=batch_axis, placement=placement,
                       theta=theta)
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the shard_map'ed mesh chunk dispatch (the
+# program `_drive_distributed` re-issues per bucket while sharded).
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_mesh_chunk(spec_name: str):
+    from .compaction import _tiny_batch
+    from ..launch.mesh import make_batch_mesh
+
+    spec = ASSIGNMENT if spec_name == "assignment" else OT
+    mesh = make_batch_mesh()
+    _, _, chunk_s, conv_s, _ = _mesh_fns(spec, mesh, "data", 2)
+    _, _, data, state = _tiny_batch(spec_name)
+    return _audit.trace_entry(
+        name=f"core.distributed.mesh_chunk[{spec_name}]",
+        fn=chunk_s,
+        args={"data": data, "state": state},
+        donated={"state"},
+        tags={"mesh-dispatch", spec_name},
+        source=__name__,
+    )
+
+
+_audit.register("core.distributed.mesh_chunk[assignment]",
+                lambda: _trace_mesh_chunk("assignment"), source=__name__)
+_audit.register("core.distributed.mesh_chunk[ot]",
+                lambda: _trace_mesh_chunk("ot"), source=__name__)

@@ -716,3 +716,78 @@ class OTSpec:
 
 ASSIGNMENT = AssignmentSpec()
 OT = OTSpec()
+
+
+# --------------------------------------------------------------------------
+# Static-audit registration (repro.analysis): the prologue -> init_state
+# chains are where the PR-3 donated-buffer aliasing bug lived — the state
+# handed to the donating chunk dispatch must not share buffers with
+# anything the epilogue (or the driver) still reads. The "state-init-chain"
+# tag makes the donation-safety rule run its jaxpr alias analysis here.
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_assignment_state_chain():
+    m = n = 8
+
+    def chain(c, eps, m_valid, n_valid):
+        data, ctx = ASSIGNMENT.prologue({
+            "c": c, "eps": eps, "m_valid": m_valid, "n_valid": n_valid,
+            "threshold": jnp.int32(0), "phase_cap": jnp.int32(8)})
+        state = ASSIGNMENT.init_state(data, ctx)
+        return {"state": state,
+                "retained": {"c_int": data["c_int"], "cm": ctx["cm"],
+                             "scale": ctx["scale"]}}
+
+    return _audit.trace_entry(
+        name="core.problem.assignment_state_chain",
+        fn=chain,
+        args={
+            "c": jnp.zeros((m, n), jnp.float32),
+            "eps": jnp.float32(0.1),
+            "m_valid": jnp.int32(m),
+            "n_valid": jnp.int32(n),
+        },
+        retained={"c"},
+        must_trace={"eps", "m_valid", "n_valid"},
+        tags={"state-init-chain", "assignment"},
+        source=__name__,
+    )
+
+
+def _trace_ot_state_chain():
+    m = n = 8
+
+    def chain(c, nu, mu, theta, eps):
+        data, ctx = OT.prologue({
+            "c": c, "nu": nu, "mu": mu, "theta": theta, "eps": eps,
+            "threshold": jnp.int32(0), "phase_cap": jnp.int32(8)})
+        state = OT.init_state(data, ctx)
+        return {"state": state,
+                "retained": {"c_int": data["c_int"],
+                             "s_int": ctx["s_int"], "d_int": ctx["d_int"],
+                             "scale": ctx["scale"]}}
+
+    return _audit.trace_entry(
+        name="core.problem.ot_state_chain",
+        fn=chain,
+        args={
+            "c": jnp.zeros((m, n), jnp.float32),
+            "nu": jnp.full((m,), 1.0 / m, jnp.float32),
+            "mu": jnp.full((n,), 1.0 / n, jnp.float32),
+            "theta": jnp.float32(4.0 * m / 0.1),
+            "eps": jnp.float32(0.1),
+        },
+        retained={"c", "nu", "mu"},
+        must_trace={"eps", "theta"},
+        tags={"state-init-chain", "ot"},
+        source=__name__,
+    )
+
+
+_audit.register("core.problem.assignment_state_chain",
+                _trace_assignment_state_chain, source=__name__)
+_audit.register("core.problem.ot_state_chain", _trace_ot_state_chain,
+                source=__name__)

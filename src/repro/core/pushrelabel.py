@@ -352,3 +352,37 @@ def solve_assignment(
     if guaranteed:
         eps = eps / 3.0
     return assignment_pipeline(c, eps, propose_fn=propose_fn)
+
+
+# --------------------------------------------------------------------------
+# Static-audit registration (repro.analysis): the stepped core is a solver
+# entry point — the chunk dispatch donates its state and its termination
+# operands must stay traced data (never baked constants).
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_assignment_chunk():
+    m = n = 8
+    return _audit.trace_entry(
+        name="core.pushrelabel.run_assignment_phases",
+        fn=lambda c_int, state, threshold, phase_cap, m_valid:
+            run_assignment_phases(c_int, state, threshold, phase_cap, 4,
+                                  m_valid=m_valid),
+        args={
+            "c_int": jnp.zeros((m, n), jnp.int32),
+            "state": init_assignment_state(m, n),
+            "threshold": jnp.int32(0),
+            "phase_cap": jnp.int32(8),
+            "m_valid": jnp.int32(m),
+        },
+        donated={"state"},
+        must_trace={"threshold", "phase_cap", "m_valid"},
+        tags={"stepped-core", "assignment"},
+        source=__name__,
+    )
+
+
+_audit.register("core.pushrelabel.run_assignment_phases",
+                _trace_assignment_chunk, source=__name__)

@@ -153,7 +153,9 @@ def _masked_max(c, m_valid, n_valid):
     rok = jnp.arange(m)[None, :] < m_valid[:, None]
     cok = jnp.arange(n)[None, :] < n_valid[:, None]
     mask = rok[:, :, None] & cok[:, None, :]
-    return jnp.max(jnp.where(mask, c, 0.0), axis=(1, 2))
+    # strong-typed zero: a weak `0.0` here would silently re-promote if a
+    # caller ever fed f16/bf16 costs (dtype-drift audit, rule weak-literal)
+    return jnp.max(jnp.where(mask, c, jnp.float32(0.0)), axis=(1, 2))
 
 
 @jax.jit
@@ -162,8 +164,9 @@ def _dual_obj_assignment(y_b, y_a, m_valid, n_valid):
     _, n = y_a.shape
     rok = jnp.arange(m)[None, :] < m_valid[:, None]
     cok = jnp.arange(n)[None, :] < n_valid[:, None]
-    return (jnp.sum(jnp.where(rok, y_b, 0.0), axis=1)
-            + jnp.sum(jnp.where(cok, y_a, 0.0), axis=1))
+    z = jnp.float32(0.0)
+    return (jnp.sum(jnp.where(rok, y_b, z), axis=1)
+            + jnp.sum(jnp.where(cok, y_a, z), axis=1))
 
 
 @jax.jit
@@ -172,8 +175,9 @@ def _dual_obj_ot(y_b, y_a, nu, mu, m_valid, n_valid):
     _, n = y_a.shape
     rok = jnp.arange(m)[None, :] < m_valid[:, None]
     cok = jnp.arange(n)[None, :] < n_valid[:, None]
-    return (jnp.sum(jnp.where(rok, nu * y_b, 0.0), axis=1)
-            + jnp.sum(jnp.where(cok, mu * y_a, 0.0), axis=1))
+    z = jnp.float32(0.0)
+    return (jnp.sum(jnp.where(rok, nu * y_b, z), axis=1)
+            + jnp.sum(jnp.where(cok, mu * y_a, z), axis=1))
 
 
 @jax.jit
@@ -193,7 +197,7 @@ def _feasibility_margin(c, y_b, y_a, m_valid, n_valid, col_live):
 def _masked_sum(v, valid):
     _, m = v.shape
     ok = jnp.arange(m)[None, :] < valid[:, None]
-    return jnp.sum(jnp.where(ok, v, 0.0), axis=1)
+    return jnp.sum(jnp.where(ok, v, jnp.float32(0.0)), axis=1)
 
 
 # --------------------------------------------------------------------------
@@ -646,3 +650,54 @@ def sparse_from_dense_device(plan, batch: int) -> SparsePlanBatch:
     return SparsePlanBatch(idx=np.asarray(idx)[:batch],
                            vals=np.asarray(vals)[:batch],
                            nnz=nnz, shape=(int(m), int(n)))
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the certificate reductions. These carry the
+# "certificate" tag, which turns on the strict dtype rules (no weak-typed
+# float literals, flag f32 sum accumulation) — a silently re-promoted
+# certificate is the PR-2 termination-threshold bug class applied to the
+# paper's additive-gap bound instead of the solver loop.
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_certificates():
+    b, m, n = 2, 4, 4
+    c = jnp.zeros((b, m, n), jnp.float32)
+    y_b = jnp.zeros((b, m), jnp.float32)
+    y_a = jnp.zeros((b, n), jnp.float32)
+    nu = jnp.full((b, m), 0.25, jnp.float32)
+    mu = jnp.full((b, n), 0.25, jnp.float32)
+    mv = jnp.full((b,), m, jnp.int32)
+    nv = jnp.full((b,), n, jnp.int32)
+    live = jnp.ones((b, n), bool)
+    plan = jnp.zeros((b, m, n), jnp.float32)
+    mk = lambda name, fn, args: _audit.EntrySpec(  # noqa: E731
+        name=name,
+        build=lambda: _audit.trace_entry(
+            name=name, fn=fn, args=args, tags={"certificate"},
+            source=__name__),
+        source=__name__,
+    )
+    return [
+        mk("core.solution._masked_max", _masked_max,
+           {"c": c, "m_valid": mv, "n_valid": nv}),
+        mk("core.solution._dual_obj_assignment", _dual_obj_assignment,
+           {"y_b": y_b, "y_a": y_a, "m_valid": mv, "n_valid": nv}),
+        mk("core.solution._dual_obj_ot", _dual_obj_ot,
+           {"y_b": y_b, "y_a": y_a, "nu": nu, "mu": mu,
+            "m_valid": mv, "n_valid": nv}),
+        mk("core.solution._feasibility_margin", _feasibility_margin,
+           {"c": c, "y_b": y_b, "y_a": y_a, "m_valid": mv, "n_valid": nv,
+            "col_live": live}),
+        mk("core.solution._masked_sum", _masked_sum,
+           {"v": y_b, "valid": mv}),
+        mk("core.solution._count_nnz", _count_nnz, {"plan": plan}),
+    ]
+
+
+for _es in _trace_certificates():
+    _audit.register(_es.name, _es.build, source=_es.source)
+del _es

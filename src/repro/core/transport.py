@@ -415,3 +415,58 @@ def solve_ot(
         # a device sync when called under jit/vmap, where this is a tracer)
         res = res._replace(theta=float(res.theta))
     return res
+
+
+# --------------------------------------------------------------------------
+# Static-audit registration (repro.analysis): the OT stepped core donates
+# its state (the PR-3 bug lived in its init chain, registered from
+# core/problem.py), and the one-shot solve's threshold=None fallback is the
+# PR-2 on-device f32 threshold — registered under the "threshold" tag so
+# the dtype-drift rule keeps it visible as an explicit baseline entry.
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_ot_chunk():
+    m = n = 8
+    return _audit.trace_entry(
+        name="core.transport.run_ot_phases",
+        fn=lambda c_int, state, threshold, phase_cap:
+            run_ot_phases(c_int, state, threshold, phase_cap, 4,
+                          max_rounds=int(m + n + 2)),
+        args={
+            "c_int": jnp.zeros((m, n), jnp.int32),
+            "state": init_ot_state(jnp.ones((m,), jnp.int32),
+                                   jnp.ones((n,), jnp.int32)),
+            "threshold": jnp.int32(0),
+            "phase_cap": jnp.int32(8),
+        },
+        donated={"state"},
+        must_trace={"threshold", "phase_cap"},
+        tags={"stepped-core", "ot"},
+        source=__name__,
+    )
+
+
+def _trace_solve_ot_int_fallback():
+    m = n = 8
+    return _audit.trace_entry(
+        name="core.transport.solve_ot_int[threshold=None]",
+        fn=lambda c_int, s_int, d_int:
+            solve_ot_int(c_int, s_int, d_int, 0.25, 8, max_rounds=18,
+                         threshold=None),
+        args={
+            "c_int": jnp.zeros((m, n), jnp.int32),
+            "s_int": jnp.ones((m,), jnp.int32),
+            "d_int": jnp.ones((n,), jnp.int32),
+        },
+        tags={"threshold", "ot"},
+        source=__name__,
+    )
+
+
+_audit.register("core.transport.run_ot_phases", _trace_ot_chunk,
+                source=__name__)
+_audit.register("core.transport.solve_ot_int[threshold=None]",
+                _trace_solve_ot_int_fallback, source=__name__)

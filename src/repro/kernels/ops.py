@@ -83,3 +83,74 @@ def make_pallas_propose_fn(block_m: int = 128, block_n: int = 128):
         return jnp.where(active_b & found, col, jnp.int32(-1))
 
     return propose
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the jitted Pallas wrappers. make_jaxpr only
+# TRACES them (pallas_call becomes an eqn; the kernel body never executes),
+# so registration-time tracing is cheap and backend-independent.
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_slack_propose():
+    m = n = 128
+    return _audit.trace_entry(
+        name="kernels.ops.slack_propose",
+        fn=lambda c_int, y_b, y_a, avail_a, salt: slack_propose(
+            c_int, y_b, y_a, avail_a, salt),
+        args={
+            "c_int": jnp.zeros((m, n), jnp.int32),
+            "y_b": jnp.zeros((m,), jnp.int32),
+            "y_a": jnp.zeros((n,), jnp.int32),
+            "avail_a": jnp.ones((n,), bool),
+            "salt": jnp.uint32(0),
+        },
+        must_trace={"salt"},
+        tags={"pallas", "assignment"},
+        source=__name__,
+    )
+
+
+def _trace_cost_matrix(batched: bool):
+    m, n, d = 128, 128, 32
+    if batched:
+        x = jnp.zeros((2, m, d), jnp.float32)
+        y = jnp.zeros((2, n, d), jnp.float32)
+        fn = lambda x, y: cost_matrix_batched(x, y)  # noqa: E731
+        name = "kernels.ops.cost_matrix_batched"
+    else:
+        x = jnp.zeros((m, d), jnp.float32)
+        y = jnp.zeros((n, d), jnp.float32)
+        fn = lambda x, y: cost_matrix(x, y)  # noqa: E731
+        name = "kernels.ops.cost_matrix"
+    return _audit.trace_entry(
+        name=name, fn=fn, args={"x": x, "y": y},
+        tags={"pallas"}, source=__name__,
+    )
+
+
+def _trace_sinkhorn_row_update():
+    m, n = 128, 128
+    return _audit.trace_entry(
+        name="kernels.ops.sinkhorn_row_update",
+        fn=lambda c, g, log_nu: sinkhorn_row_update(c, g, log_nu, 0.05),
+        args={
+            "c": jnp.zeros((m, n), jnp.float32),
+            "g": jnp.zeros((n,), jnp.float32),
+            "log_nu": jnp.zeros((m,), jnp.float32),
+        },
+        tags={"pallas", "sinkhorn"},
+        source=__name__,
+    )
+
+
+_audit.register("kernels.ops.slack_propose", _trace_slack_propose,
+                source=__name__)
+_audit.register("kernels.ops.cost_matrix",
+                lambda: _trace_cost_matrix(False), source=__name__)
+_audit.register("kernels.ops.cost_matrix_batched",
+                lambda: _trace_cost_matrix(True), source=__name__)
+_audit.register("kernels.ops.sinkhorn_row_update", _trace_sinkhorn_row_update,
+                source=__name__)

@@ -171,7 +171,7 @@ def apply_layer(lp, cfg, lt, ffn, x, positions, memory=None, causal=True):
 
 def stages_forward(stage_params, cfg, stages, x, positions, memory=None,
                    causal=True, remat=True):
-    for (spec, n), sp in zip(stages, stage_params):
+    for (spec, _n), sp in zip(stages, stage_params):
         def body(x_, lp, spec=spec):
             for i, (lt, ffn) in enumerate(spec):
                 x_ = apply_layer(lp[f"l{i}"], cfg, lt, ffn, x_, positions,
@@ -278,7 +278,7 @@ def _period_decode(lp, cfg, spec, x, cache, pos):
 
 def stages_prefill(stage_params, cfg, stages, x, positions, memory=None):
     caches = []
-    for (spec, n), sp in zip(stages, stage_params):
+    for (spec, _n), sp in zip(stages, stage_params):
         def body(x_, lp, spec=spec):
             return _period_prefill(lp, cfg, spec, x_, positions, memory)
 
@@ -289,7 +289,7 @@ def stages_prefill(stage_params, cfg, stages, x, positions, memory=None):
 
 def stages_decode(stage_params, cfg, stages, x, caches, pos):
     new_caches = []
-    for (spec, n), sp, cache in zip(stages, stage_params, caches):
+    for (spec, _n), sp, cache in zip(stages, stage_params, caches):
         def body(x_, inp, spec=spec):
             lp, cl = inp
             return _period_decode(lp, cfg, spec, x_, cl, pos)

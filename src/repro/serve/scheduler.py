@@ -258,7 +258,11 @@ class AsyncOTScheduler:
                 # wake periodically to re-check worker liveness
                 self._lock.wait(timeout=0.2 if remaining is None
                                 else min(0.2, remaining))
-        if self._outstanding > 0:
+            # read the verdict while still holding the lock — a bare
+            # re-read outside it races _done()/_abort_pending (the
+            # lock-discipline scan in repro.analysis flags that pattern)
+            stranded = self._outstanding > 0
+        if stranded:
             self._abort_pending(RuntimeError(
                 "scheduler worker thread died; request abandoned"))
         return True
@@ -306,9 +310,18 @@ class AsyncOTScheduler:
         self._submit_q.put(None)          # collate sentinel
         self._collate_t.join(timeout=30)
         self._dispatch_t.join(timeout=30)
-        if self._pending:
+        with self._lock:
+            stranded = bool(self._pending)
+        if stranded:
             # belt-and-braces: a worker hung past the join timeout
             self._abort_pending(RuntimeError("scheduler closed"))
+
+    def stats_dict(self) -> dict:
+        """Locked snapshot of the aggregate stats — the supported way to
+        read ``stats`` from a caller thread while the workers run (direct
+        field reads race the dispatch worker's updates)."""
+        with self._lock:
+            return self.stats.as_dict()
 
     def __enter__(self):
         return self
@@ -360,7 +373,7 @@ class AsyncOTScheduler:
             except queue.Full:
                 if not self._dispatch_t.is_alive():
                     raise RuntimeError("dispatch worker died; work "
-                                       "item abandoned")
+                                       "item abandoned") from None
 
     def _collate_loop(self):
         B = self._B
@@ -456,14 +469,20 @@ class AsyncOTScheduler:
                 # one shared (read-only) occupancy curve for the whole
                 # batch, not a copy per request
                 occupancy = st.occupancy
-                self.stats.batches += 1
-                self.stats.total_solve_s += solve_s
-                self.stats.dispatches += st.dispatches
-                self.stats.occupancy.append(occupancy)
+                waits = [t0 - req.t_submit for req in item.reqs]
+                # all SchedulerStats mutation under the scheduler lock:
+                # stats_dict() readers run concurrently on caller threads,
+                # and the dataclass's += read-modify-writes are not atomic
+                # (the lock-discipline scan in repro.analysis pins this)
+                with self._lock:
+                    self.stats.batches += 1
+                    self.stats.total_solve_s += solve_s
+                    self.stats.dispatches += st.dispatches
+                    self.stats.occupancy.append(occupancy)
+                    self.stats.requests += len(item.reqs)
+                    self.stats.total_wait_s += sum(waits)
                 for i, req in enumerate(item.reqs):
-                    self.stats.requests += 1
-                    wait_s = t0 - req.t_submit
-                    self.stats.total_wait_s += wait_s
+                    wait_s = waits[i]
                     if req.want is not None:
                         # typed surface: the Future resolves to the
                         # per-request Solution view (lazy artifacts,

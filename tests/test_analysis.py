@@ -1,0 +1,310 @@
+"""Tests for the repro.analysis static-audit layer.
+
+The centerpiece fixtures RE-INTRODUCE the repo's two historical bug
+classes in tiny throwaway functions and assert the analyzer flags them:
+
+  * PR-3 shipped ``init_ot_state`` aliasing ``s_int`` into a
+    donated-buffer state — the first chunk dispatch then overwrote the
+    retained supply vector (donation-safety rule);
+  * PR-2 shipped the OT termination threshold computed in on-device f32
+    (int -> f32 arithmetic -> int round trip), rounding differently from
+    the host-f64 contract (dtype-drift rule).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import registry
+from repro.analysis.baseline import apply_baseline, load_baseline
+from repro.analysis.rules import audit_entry
+from repro.analysis.syncaudit import SyncTarget, audit_function_source
+
+
+def _keys(findings):
+    return {f.key for f in findings}
+
+
+# --------------------------------------------------------------------------
+# Seeded regression fixture 1: the PR-3 donated-buffer aliasing bug
+# --------------------------------------------------------------------------
+
+def _buggy_ot_chain():
+    """init_ot_state as PR 3 shipped it: the state's supply vector IS the
+    retained d_int buffer (no copy). chunk donates the state, so the first
+    dispatch frees/overwrites the buffer the epilogue still reads."""
+
+    def chain(c, mu):
+        c_int = jnp.floor(c * 64.0).astype(jnp.int32)
+        d_int = jnp.ceil(mu * 32.0).astype(jnp.int32)
+        # BUG (seeded): free_a aliases d_int instead of copying it
+        state = {"free_a": d_int.astype(jnp.int32),
+                 "y_a": jnp.zeros_like(d_int)}
+        return {"state": state, "retained": {"c_int": c_int,
+                                             "d_int": d_int}}
+
+    args = {"c": jnp.zeros((4, 4), jnp.float32),
+            "mu": jnp.full((4,), 0.25, jnp.float32)}
+    return registry.trace_entry(
+        name="fixture.buggy_ot_chain", fn=chain, args=args,
+        retained={"c", "mu"}, tags={"state-init-chain"}, source=__name__)
+
+
+def _fixed_ot_chain():
+    def chain(c, mu):
+        c_int = jnp.floor(c * 64.0).astype(jnp.int32)
+        d_int = jnp.ceil(mu * 32.0).astype(jnp.int32)
+        state = {"free_a": jnp.array(d_int, copy=True),
+                 "y_a": jnp.zeros_like(d_int)}
+        return {"state": state, "retained": {"c_int": c_int,
+                                             "d_int": d_int}}
+
+    args = {"c": jnp.zeros((4, 4), jnp.float32),
+            "mu": jnp.full((4,), 0.25, jnp.float32)}
+    return registry.trace_entry(
+        name="fixture.fixed_ot_chain", fn=chain, args=args,
+        retained={"c", "mu"}, tags={"state-init-chain"}, source=__name__)
+
+
+def test_seeded_donation_alias_flagged():
+    findings = audit_entry(_buggy_ot_chain())
+    keys = _keys(findings)
+    assert any(k.startswith("donation-safety:fixture.buggy_ot_chain:alias")
+               for k in keys), keys
+
+
+def test_fixed_donation_chain_clean():
+    findings = audit_entry(_fixed_ot_chain())
+    assert not any(f.rule == "donation-safety" for f in findings), findings
+
+
+def test_donated_and_retained_root_flagged():
+    entry = registry.trace_entry(
+        name="fixture.donated_retained",
+        fn=lambda x: x * 2,
+        args={"x": jnp.zeros((4,), jnp.float32)},
+        donated={"x"}, retained={"x"}, source=__name__)
+    keys = _keys(audit_entry(entry))
+    assert "donation-safety:fixture.donated_retained:donated-retained:x" \
+        in keys
+
+
+# --------------------------------------------------------------------------
+# Seeded regression fixture 2: the PR-2 f32 termination-threshold bug
+# --------------------------------------------------------------------------
+
+def _buggy_threshold():
+    """The OT termination threshold as PR 2 shipped it: computed on
+    device from integer operands via f32 arithmetic, then floored back to
+    int32 — rounds differently from the host-f64 contract."""
+
+    def threshold(d_int):
+        m = jnp.sum(d_int)                       # int32
+        # BUG (seeded): int -> f32 arithmetic -> int round trip
+        t = jnp.float32(0.12) * m.astype(jnp.float32)
+        return jnp.floor(t).astype(jnp.int32)
+
+    return registry.trace_entry(
+        name="fixture.buggy_threshold", fn=threshold,
+        args={"d_int": jnp.ones((8,), jnp.int32)}, source=__name__)
+
+
+def _fixed_threshold():
+    """Threshold passed in as traced data (computed host-side in f64)."""
+
+    def threshold(d_int, t):
+        return jnp.minimum(t, jnp.sum(d_int))
+
+    return registry.trace_entry(
+        name="fixture.fixed_threshold", fn=threshold,
+        args={"d_int": jnp.ones((8,), jnp.int32), "t": jnp.int32(3)},
+        must_trace={"t"}, source=__name__)
+
+
+def test_seeded_f32_roundtrip_flagged():
+    keys = _keys(audit_entry(_buggy_threshold()))
+    assert ("dtype-drift:fixture.buggy_threshold:f32-int-roundtrip"
+            in keys), keys
+
+
+def test_fixed_threshold_clean():
+    findings = audit_entry(_fixed_threshold())
+    assert not any(f.rule == "dtype-drift" for f in findings), findings
+
+
+def test_pure_float_rounding_not_flagged():
+    """floor(c / eps).astype(int32) is the rounding prologue's legitimate
+    pattern — float arithmetic floored to int, with no int origin."""
+    entry = registry.trace_entry(
+        name="fixture.rounding", fn=lambda c: jnp.floor(c / 0.25).astype(
+            jnp.int32),
+        args={"c": jnp.zeros((4, 4), jnp.float32)}, source=__name__)
+    findings = audit_entry(entry)
+    assert not any("f32-int-roundtrip" in f.key for f in findings), findings
+
+
+# --------------------------------------------------------------------------
+# Recompile-hazard rule
+# --------------------------------------------------------------------------
+
+def test_baked_operand_flagged():
+    """eps captured as a Python float is baked into the program — every
+    new eps would recompile."""
+    eps = 0.25
+
+    def f(c):
+        return jnp.floor(c / eps).astype(jnp.int32)
+
+    entry = registry.trace_entry(
+        name="fixture.baked_eps", fn=f,
+        args={"c": jnp.zeros((4, 4), jnp.float32)},
+        must_trace={"eps"}, source=__name__)
+    keys = _keys(audit_entry(entry))
+    assert "recompile-hazard:fixture.baked_eps:baked:eps" in keys
+
+
+def test_traced_operand_clean():
+    entry = registry.trace_entry(
+        name="fixture.traced_eps",
+        fn=lambda c, eps: jnp.floor(c / eps).astype(jnp.int32),
+        args={"c": jnp.zeros((4, 4), jnp.float32),
+              "eps": jnp.float32(0.25)},
+        must_trace={"eps"}, source=__name__)
+    findings = audit_entry(entry)
+    assert not any(f.rule == "recompile-hazard" for f in findings), findings
+
+
+def test_unused_must_trace_flagged():
+    """A must-trace operand that reaches the jaxpr but feeds nothing is a
+    silently-dead knob (the value changes, the program doesn't)."""
+    entry = registry.trace_entry(
+        name="fixture.dead_knob",
+        fn=lambda c, eps: jnp.floor(c * 4.0).astype(jnp.int32),
+        args={"c": jnp.zeros((4, 4), jnp.float32),
+              "eps": jnp.float32(0.25)},
+        must_trace={"eps"}, source=__name__)
+    keys = _keys(audit_entry(entry))
+    assert "recompile-hazard:fixture.dead_knob:unused:eps" in keys
+
+
+# --------------------------------------------------------------------------
+# Hot-loop sync audit (AST fixtures)
+# --------------------------------------------------------------------------
+
+_LOOP_WITH_EXTRA_SYNC = '''
+def drive(run_fn, conv_fn, data, state, n):
+    for _ in range(n):
+        state = run_fn(data, state)
+        conv, ph = jax.device_get(conv_fn(data, state))
+        extra = np.asarray(state.phases)
+        if conv.all():
+            break
+    return state
+'''
+
+_LOOP_CLEAN = '''
+def drive(run_fn, conv_fn, data, state, n):
+    for _ in range(n):
+        state = run_fn(data, state)
+        conv, ph = jax.device_get(conv_fn(data, state))
+        if conv.all():
+            break
+    return state
+'''
+
+
+def test_syncaudit_flags_second_fetch():
+    fs = audit_function_source(_LOOP_WITH_EXTRA_SYNC, "drive", "fixture")
+    assert any("np.asarray" in f.detail for f in fs), fs
+
+
+def test_syncaudit_whitelists_conv_fetch():
+    assert audit_function_source(_LOOP_CLEAN, "drive", "fixture") == []
+
+
+def test_syncaudit_default_targets_clean():
+    from repro.analysis.syncaudit import audit_targets, default_targets
+    assert audit_targets(default_targets()) == []
+
+
+def test_syncaudit_missing_function():
+    fs = audit_function_source("x = 1", "drive", "fixture")
+    assert any(f.detail.startswith("missing") for f in fs)
+
+
+def test_synctarget_paths_exist():
+    import os
+
+    from repro.analysis.syncaudit import default_targets
+    for t in default_targets():
+        assert os.path.exists(str(t.path)), t
+
+
+# --------------------------------------------------------------------------
+# Registry mechanics over the real entry set
+# --------------------------------------------------------------------------
+
+def test_builtin_entries_trace():
+    registry.load_all()
+    entries = registry.build_entries()
+    names = {e.name for e in entries}
+    assert "core.pushrelabel.run_assignment_phases" in names
+    assert "core.transport.run_ot_phases" in names
+    assert "core.compaction.chunk[assignment]" in names
+    assert "core.distributed.mesh_chunk[ot]" in names
+    assert "kernels.ops.slack_propose" in names
+    for e in entries:
+        assert e.jaxpr.jaxpr.eqns, f"{e.name} traced to an empty jaxpr"
+
+
+def test_repo_strict_audit_passes():
+    """The repo's own entry points pass --strict with the checked-in
+    baseline (this is the same gate CI runs)."""
+    from repro.analysis.cli import main
+    assert main(["--strict", "--no-dynamic"]) == 0
+
+
+# --------------------------------------------------------------------------
+# Baseline machinery
+# --------------------------------------------------------------------------
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "base.txt"
+    p.write_text("some-rule:entry:detail\n")
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(p)
+
+
+def test_baseline_suppresses_and_reports_stale(tmp_path):
+    from repro.analysis.rules import Finding
+    p = tmp_path / "base.txt"
+    p.write_text("r:e:d -- accepted for reasons\n"
+                 "r:gone:d -- entry was removed\n")
+    base = load_baseline(p)
+    f = Finding(rule="r", entry="e", detail="d", message="m")
+    g = Finding(rule="r", entry="e", detail="other", message="m")
+    active, suppressed, stale = apply_baseline([f, g], base)
+    assert active == [g]
+    assert suppressed == [(f, "accepted for reasons")]
+    assert stale == ["r:gone:d"]
+
+
+# --------------------------------------------------------------------------
+# Bucket-ladder compile audit (dynamic; exercises the real driver)
+# --------------------------------------------------------------------------
+
+def test_bucket_ladder_one_program_per_bucket():
+    from repro.analysis.cli import audit_bucket_ladder
+    findings = audit_bucket_ladder()
+    assert findings == [], [f.key for f in findings]
+
+
+def test_leaves_of_prefix_matching():
+    lo = registry.TracedEntry.leaves_of
+    assert lo(None, "state",
+              ["state.y_b", "state.y_a", "stateful"]) == [0, 1]
+    assert lo(None, "x", ["x"]) == [0]
+    assert lo(None, "ops", ["ops['c']", "ops['nu']", "out"]) == [0, 1]

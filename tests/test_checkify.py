@@ -1,0 +1,130 @@
+"""Sanitizer-mode (checkify) tests: poisoned inputs and corrupted solver
+states must raise USEFUL errors under ``set_debug_checks(True)`` instead
+of silently converging to garbage (the production path is numerically
+silent by design)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.analysis import set_debug_checks
+from repro.analysis.checkified import checkified_spec_fns
+from repro.core.compaction import (
+    _tiny_batch,
+    solve_assignment_batched_compacting,
+    solve_ot_batched_compacting,
+)
+from repro.core.problem import ASSIGNMENT, OT
+
+
+@pytest.fixture
+def debug_checks():
+    set_debug_checks(True)
+    yield
+    set_debug_checks(None)
+
+
+def _rand(b=4, mn=8, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.random((b, mn, mn)).astype(np.float32)
+    nu = np.full((b, mn), 1.0 / mn, np.float32)
+    mu = np.full((b, mn), 1.0 / mn, np.float32)
+    return c, nu, mu
+
+
+# --------------------------------------------------------------------------
+# Clean inputs: debug mode must be a pure no-op on results
+# --------------------------------------------------------------------------
+
+def test_debug_mode_bit_identical_assignment(debug_checks):
+    c, _, _ = _rand()
+    set_debug_checks(None)
+    plain, _ = solve_assignment_batched_compacting(c, 0.1, k=3)
+    set_debug_checks(True)
+    dbg, _ = solve_assignment_batched_compacting(c, 0.1, k=3)
+    np.testing.assert_array_equal(np.asarray(plain.cost),
+                                  np.asarray(dbg.cost))
+    np.testing.assert_array_equal(np.asarray(plain.matching),
+                                  np.asarray(dbg.matching))
+
+
+def test_debug_mode_bit_identical_ot(debug_checks):
+    c, nu, mu = _rand()
+    set_debug_checks(None)
+    plain, _ = solve_ot_batched_compacting(c, nu, mu, 0.25, k=3)
+    set_debug_checks(True)
+    dbg, _ = solve_ot_batched_compacting(c, nu, mu, 0.25, k=3)
+    np.testing.assert_array_equal(np.asarray(plain.cost),
+                                  np.asarray(dbg.cost))
+
+
+# --------------------------------------------------------------------------
+# NaN-poisoned cost matrices
+# --------------------------------------------------------------------------
+
+def test_nan_cost_raises_assignment(debug_checks):
+    c, _, _ = _rand()
+    c[1, 2, 3] = np.nan
+    with pytest.raises(Exception, match="nan"):
+        solve_assignment_batched_compacting(c, 0.1, k=3)
+
+
+def test_nan_cost_raises_ot(debug_checks):
+    c, nu, mu = _rand()
+    c[0, 0, 0] = np.nan
+    with pytest.raises(Exception, match="nan"):
+        solve_ot_batched_compacting(c, nu, mu, 0.25, k=3)
+
+
+def test_nan_cost_silent_without_debug():
+    """The production path stays numerically silent — that asymmetry is
+    the reason the sanitizer layer exists."""
+    c, _, _ = _rand()
+    c[1, 2, 3] = np.nan
+    r, _ = solve_assignment_batched_compacting(c, 0.1, k=3)
+    assert np.asarray(r.cost).shape == (4,)   # no exception
+
+
+# --------------------------------------------------------------------------
+# Corrupted solver state (the invariant checks)
+# --------------------------------------------------------------------------
+
+def test_out_of_range_matching_index_raises():
+    _, _, data, state = _tiny_batch("assignment")
+    bad = state._replace(
+        match_ba=jnp.full_like(state.match_ba, 99))
+    _, _, chunk, _, _ = checkified_spec_fns(ASSIGNMENT, 2)
+    with pytest.raises(Exception, match="matching index out of range"):
+        chunk(data, bad)
+
+
+def test_negative_free_mass_raises():
+    _, _, data, state = _tiny_batch("ot")
+    bad = state._replace(free_b=jnp.full_like(state.free_b, -5))
+    _, _, chunk, _, _ = checkified_spec_fns(OT, 2)
+    with pytest.raises(Exception, match="negative free mass"):
+        chunk(data, bad)
+
+
+def test_clean_state_passes_invariants():
+    for name, spec in (("assignment", ASSIGNMENT), ("ot", OT)):
+        _, _, data, state = _tiny_batch(name)
+        _, _, chunk, _, _ = checkified_spec_fns(spec, 2)
+        out = chunk(data, state)      # must not raise
+        assert out.phases.shape == state.phases.shape
+
+
+# --------------------------------------------------------------------------
+# The env-var switch
+# --------------------------------------------------------------------------
+
+def test_env_var_enables_debug(monkeypatch):
+    from repro.analysis import debug_checks_enabled
+    monkeypatch.setenv("REPRO_DEBUG_CHECKS", "1")
+    assert debug_checks_enabled()
+    monkeypatch.setenv("REPRO_DEBUG_CHECKS", "0")
+    assert not debug_checks_enabled()
+    monkeypatch.setenv("REPRO_DEBUG_CHECKS", "off")
+    assert not debug_checks_enabled()

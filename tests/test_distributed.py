@@ -188,7 +188,7 @@ def test_certificates_distributed_assignment():
         )
         import jax
 
-        state_i = jax.tree_util.tree_map(lambda a: a[i], st.final_state)
+        state_i = jax.tree_util.tree_map(lambda a, i=i: a[i], st.final_state)
         out = check_invariants(np.asarray(c_int),
                                np.asarray(state_i.y_b),
                                np.asarray(state_i.y_a),
@@ -212,7 +212,7 @@ def test_certificates_distributed_ot():
         )
         np.testing.assert_array_equal(np.asarray(s_int),
                                       np.asarray(r.s_int)[i])
-        state_i = jax.tree_util.tree_map(lambda a: a[i], r.state)
+        state_i = jax.tree_util.tree_map(lambda a, i=i: a[i], r.state)
         out = check_ot_invariants(np.asarray(c_int), state_i,
                                   np.asarray(r.s_int)[i],
                                   np.asarray(r.d_int)[i], eps)
@@ -234,7 +234,7 @@ def test_certificates_lockstep_batched_ot():
             jnp.asarray(c[i]), jnp.asarray(nu[i]), jnp.asarray(mu[i]),
             float(theta[i]), eps
         )
-        state_i = jax.tree_util.tree_map(lambda a: a[i], r.state)
+        state_i = jax.tree_util.tree_map(lambda a, i=i: a[i], r.state)
         out = check_ot_invariants(np.asarray(c_int), state_i,
                                   np.asarray(r.s_int)[i],
                                   np.asarray(r.d_int)[i], eps)

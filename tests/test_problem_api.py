@@ -115,7 +115,7 @@ def test_parity_duals_pass_certificates():
             _, c_int, _, _, _ = assignment_prologue(
                 jnp.asarray(c[i]), float(eps[i]),
                 jnp.int32(sizes[i][0]), jnp.int32(sizes[i][1]))
-            s_i = jax.tree_util.tree_map(lambda a: a[i], st.final_state)
+            s_i = jax.tree_util.tree_map(lambda a, i=i: a[i], st.final_state)
             out = check_invariants(np.asarray(c_int),
                                    np.asarray(s_i.y_b),
                                    np.asarray(s_i.y_a),
@@ -130,7 +130,7 @@ def test_parity_duals_pass_certificates():
             c_int, _, _, _ = ot_prologue(
                 jnp.asarray(c[i]), jnp.asarray(nu[i]), jnp.asarray(mu[i]),
                 float(theta[i]), float(eps[i]))
-            s_i = jax.tree_util.tree_map(lambda a: a[i], ro.state)
+            s_i = jax.tree_util.tree_map(lambda a, i=i: a[i], ro.state)
             out = check_ot_invariants(np.asarray(c_int), s_i,
                                       np.asarray(ro.s_int)[i],
                                       np.asarray(ro.d_int)[i],

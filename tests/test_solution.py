@@ -292,7 +292,7 @@ def test_legacy_ragged_dicts_match_solution_surface():
 
 def test_solution_stats_uniform_defaults():
     ot, _, eps = _mixed_instances(4, 10, 18, seed=9)
-    for name, pol in POLICIES.items():
+    for pol in POLICIES.values():
         s = solve(OT, ot, eps, pol, want=("cost",))[0]
         st = s.stats
         assert isinstance(st, SolveStats)

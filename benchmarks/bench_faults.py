@@ -1,0 +1,183 @@
+"""Fault-tolerance subsystem: what robustness costs on the healthy path,
+and what recovery costs when a bucket is actually poisoned.
+
+  * admission - the pre-dispatch validation gate (core/validate.py): one
+    jitted O(B*M*N) reduction per collated bucket. Measured as end-to-end
+    batched solves with the gate on vs off — the healthy-path overhead
+    budget is <5% instances/sec (asserted here, and diffable against the
+    committed BENCH_batched.json throughput rows).
+  * recovery - a 1-poisoned-in-256 bucket through OTService: wall time
+    for detect + quarantine + solve-the-survivors, vs the same 256
+    requests clean. The gate catches the NaN pre-dispatch; the dominant
+    recovery cost is the survivors' one-off program compile (slicing the
+    bucket to B-1 is a novel batch shape), which later poisoned buckets
+    of the same size reuse.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults [--full|--tiny]
+
+``--json OUT`` (and benchmarks/run.py) writes BENCH_faults.json:
+instances/sec with/without the gate, overhead fraction, and recovery
+latency for the poisoned bucket.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.api import OT, DispatchPolicy, solve
+from repro.core.validate import admission_codes
+from .bench_batched import _skewed_batch
+from .common import emit
+
+RECORDS: list = []
+
+#: healthy-path budget: the admission gate may cost at most this fraction
+#: of instances/sec (asserted per record; run.py --diff also compares
+#: against the committed baseline rows)
+OVERHEAD_BUDGET = 0.05
+
+
+def record(name, seconds, derived="", **extra):
+    emit(name, seconds, derived)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived, **extra})
+
+
+def write_json(path="BENCH_faults.json"):
+    payload = {
+        "schema": 1,
+        "bench": "faults",
+        "backend": jax.default_backend(),
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def _best(fn, repeats=3):
+    _once(fn)  # warm / compile
+    return min(_once(fn) for _ in range(repeats))
+
+
+def run_admission_overhead(b, n, eps, k=4, repeats=3):
+    """Healthy-path cost of the gate: one O(B*M*N) jitted scan (plus its
+    O(B) int32 host fetch) in front of a solve that runs many phases over
+    the same operands.
+
+    The asserted budget uses the deterministic ratio ``gate time /
+    ungated solve time`` — the end-to-end on-vs-off difference is also
+    recorded, but on a shared CPU runner its run-to-run noise exceeds the
+    ~1-2ms gate itself, so it is context, not the gate."""
+    c, nu, mu, sizes = _skewed_batch(b, n, seed=5 * n + b, n_slow=2)
+    ins = {"c": c, "nu": nu, "mu": mu}
+    off = DispatchPolicy(mode="compact", chunk=k, validate=False)
+    on = DispatchPolicy(mode="compact", chunk=k, validate=True)
+
+    t_off = _best(lambda: solve(OT, ins, eps, off, sizes=sizes,
+                                want=("cost",)).cost(), repeats)
+    t_on = _best(lambda: solve(OT, ins, eps, on, sizes=sizes,
+                               want=("cost",)).cost(), repeats)
+    t_gate = _best(lambda: admission_codes(ins, sizes=sizes), repeats)
+    overhead = t_gate / t_off
+    assert overhead < OVERHEAD_BUDGET, (
+        f"admission gate costs {overhead:.1%} of the healthy-path solve "
+        f"(budget {OVERHEAD_BUDGET:.0%}) at B={b} n={n}")
+    record(
+        f"faults/admission_overhead/B={b}/n={n}/eps={eps}", t_on / b,
+        f"inst_per_s={b / t_on:.1f};ungated_inst_per_s={b / t_off:.1f};"
+        f"gate_ms={t_gate * 1e3:.2f};overhead={overhead:.2%};"
+        f"budget={OVERHEAD_BUDGET:.0%}",
+        instances_per_s=b / t_on,
+        ungated_instances_per_s=b / t_off,
+        gate_s=t_gate,
+        overhead_fraction=overhead,
+    )
+    return overhead
+
+
+def run_poisoned_recovery(b, n, eps, n_poison=1):
+    """1-poisoned-in-``b`` bucket through OTService: detect + quarantine
+    + solve the survivors, vs the same bucket clean. Reported as recovery
+    latency (absolute) and the poisoned/clean wall-time ratio."""
+    from repro.core.validate import RequestRejected
+    from repro.serve.engine import OTService
+
+    rng = np.random.default_rng(n + b)
+    reqs = [(np.float32(rng.standard_normal((n, 2))),
+             np.float32(rng.standard_normal((n, 2)))) for _ in range(b)]
+
+    def run_service(poison: bool):
+        svc = OTService(eps=eps)
+        for i, (x, y) in enumerate(reqs):
+            if poison and i < n_poison:
+                x = x.copy()
+                x[0, 0] = np.nan
+            svc.submit(x, y)
+        t0 = time.perf_counter()
+        res = svc.run_batch()
+        return time.perf_counter() - t0, res
+
+    run_service(False)                        # warm the bucket's programs
+    t_clean, _ = run_service(False)
+    t_poisoned, res = run_service(True)
+    rejected = sum(isinstance(r, RequestRejected) for r in res)
+    assert rejected == n_poison, (rejected, n_poison)
+    survivors = b - n_poison
+    record(
+        f"faults/poisoned_recovery/B={b}/n={n}/poisoned={n_poison}",
+        t_poisoned / survivors,
+        f"recovery_s={t_poisoned:.3f};clean_s={t_clean:.3f};"
+        f"ratio={t_poisoned / t_clean:.2f}x;quarantined={rejected}",
+        instances_per_s=survivors / t_poisoned,
+        clean_instances_per_s=b / t_clean,
+        recovery_ratio=t_poisoned / t_clean,
+        quarantined=rejected,
+    )
+
+
+def run(full: bool = False, tiny: bool = False):
+    """Returns the record list (also kept in RECORDS for write_json)."""
+    if tiny:
+        # CI smoke: gate + quarantine end to end in seconds on a CPU
+        # runner, overhead budget asserted (the solve must be big enough
+        # to amortize the gate's ~1ms, hence n=48/eps=0.05 not 32/0.1)
+        run_admission_overhead(16, 48, 0.05, k=2, repeats=2)
+        run_poisoned_recovery(16, 16, 0.2)
+        return RECORDS
+    run_admission_overhead(32, 64, 0.1)
+    run_admission_overhead(32, 128, 0.1)
+    run_poisoned_recovery(256, 16, 0.2)
+    if full:
+        run_admission_overhead(64, 128, 0.05)
+        run_poisoned_recovery(256, 32, 0.2)
+    return RECORDS
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: seconds on a CPU runner")
+    ap.add_argument("--json", default="",
+                    help="machine-readable output path (off by default so "
+                         "ad-hoc/tiny runs don't overwrite the committed "
+                         "BENCH_faults.json baseline; benchmarks/run.py "
+                         "writes the canonical one)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, tiny=args.tiny)
+    if args.json:
+        write_json(args.json)

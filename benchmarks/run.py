@@ -90,7 +90,7 @@ def main() -> None:
 
     from . import bench_synthetic, bench_mnist, bench_phases, \
         bench_routing, bench_ot, bench_batched, bench_sharded, \
-        bench_solution
+        bench_solution, bench_faults
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
@@ -101,14 +101,16 @@ def main() -> None:
         "batched": bench_batched.run,       # batched serving subsystem
         "sharded": bench_sharded.run,       # mesh-distributed dispatch
         "solution": bench_solution.run,     # typed result surface fetch
+        "faults": bench_faults.run,         # admission gate + recovery
     }
     if args.diff and args.only is None:
         # diff mode only makes sense for the JSON-emitting families
-        args.only = "batched,sharded,solution"
+        args.only = "batched,sharded,solution,faults"
     only = set(args.only.split(",")) if args.only else set(benches)
-    if args.diff and not ({"batched", "sharded", "solution"} & only):
+    if args.diff and not ({"batched", "sharded", "solution",
+                           "faults"} & only):
         ap.error("--diff compares the JSON-emitting families; include "
-                 "batched, sharded and/or solution in --only")
+                 "batched, sharded, solution and/or faults in --only")
     regressions: list = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -141,6 +143,14 @@ def main() -> None:
                                             "BENCH_solution.json")
             else:
                 bench_solution.write_json("BENCH_solution.json")
+        if name == "faults":
+            # healthy-path admission overhead (<5% budget asserted) +
+            # poisoned-bucket recovery latency
+            if args.diff:
+                regressions += diff_records(bench_faults.RECORDS,
+                                            "BENCH_faults.json")
+            else:
+                bench_faults.write_json("BENCH_faults.json")
     if args.diff:
         write_step_summary(regressions)
         if regressions:

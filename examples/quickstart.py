@@ -230,6 +230,58 @@ def main():
           f"in repro/analysis/baseline_suppressions.txt; debug-mode "
           f"sanitizers: REPRO_DEBUG_CHECKS=1)")
 
+    # 13. fault-tolerant serving: deadlines, degraded answers you can
+    #     re-validate, and poisoned-instance quarantine.
+    #     solve(..., deadline=) gives the chunked drivers an absolute
+    #     wall-clock budget: the chunk loop stops dispatching when the
+    #     budget is at risk and returns best-so-far Solutions flagged
+    #     degraded=True. The duals stay eps-feasible at EVERY phase
+    #     (invariant I2), so a degraded answer still carries a valid
+    #     a-posteriori certificate — its additive_gap() is honestly
+    #     larger, not wrong.
+    import time as _time
+
+    budget = solve(OT, insts, 0.05, DispatchPolicy(mode="compact", chunk=1),
+                   want=("cost", "duals"), deadline=_time.monotonic())
+    d0 = budget[0]
+    print(f"deadline: degraded={d0.degraded} "
+          f"dual_feasible={d0.dual_feasible()} "
+          f"gap={float(d0.additive_gap()):.4f} "
+          f"(vs converged {float(s0.additive_gap()):.4f})")
+    assert d0.degraded and bool(d0.dual_feasible())
+
+    #     Poisoned inputs never take down a batch: the serving layers
+    #     (OTService / AsyncOTScheduler) run a vectorized admission gate
+    #     per collated bucket — a NaN-poisoned request is rejected with
+    #     RequestRejected while its healthy neighbors solve, bit-identical
+    #     to a clean run. Dispatch-time poison (with validation off and
+    #     REPRO_DEBUG_CHECKS=1, the checkify sanitizer trips mid-solve)
+    #     is isolated by bisection; transient dispatch failures retry
+    #     down a mesh -> compact -> host-CPU degradation ladder. The
+    #     chaos harness (serve/faults.py) injects all of it
+    #     deterministically:
+    from repro.serve.faults import FaultInjector, FaultPlan
+    from repro.serve.ft import RequestRejected
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    inj = FaultInjector(FaultPlan(poison_submits=(1,)))
+    pts = [np.random.default_rng(s).standard_normal((12, 2)).astype(
+        np.float32) for s in range(8)]
+    with AsyncOTScheduler(eps=0.1, linger_ms=50, faults=inj) as sched:
+        futs = [sched.submit(pts[2 * i], pts[2 * i + 1],
+                             tenant=f"tenant-{i}") for i in range(4)]
+        outcomes = []
+        for f in futs:
+            try:
+                outcomes.append(f"{f.result(timeout=300)['cost']:.4f}")
+            except RequestRejected as e:
+                outcomes.append(f"rejected({e.reason})")
+        sd = sched.stats_dict()
+    print(f"chaos: {outcomes} "
+          f"(rejected={sd['rejected']} quarantined={sd['quarantined']} "
+          f"retries={sd['retries']})")
+    assert sum(o.startswith("rejected") for o in outcomes) == 1
+
 
 if __name__ == "__main__":
     main()

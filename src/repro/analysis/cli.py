@@ -37,7 +37,24 @@ def audit_bucket_ladder(spec_name: str = "assignment", b: int = 16,
       * a second identical solve compiles nothing new;
       * a third solve with DIFFERENT eps values compiles nothing new
         (eps is traced data, never a cache key).
+
+    Debug checks are pinned OFF for the duration: the deltas below count
+    the PLAIN chunk's programs, and under ``REPRO_DEBUG_CHECKS=1`` the
+    driver dispatches the checkified cores instead (their cache
+    discipline is covered by tests/test_checkify.py).
     """
+    from . import _DEBUG_CHECKS, set_debug_checks
+
+    prior = _DEBUG_CHECKS
+    set_debug_checks(False)
+    try:
+        return _audit_bucket_ladder_plain(spec_name, b, mn, k)
+    finally:
+        set_debug_checks(prior)
+
+
+def _audit_bucket_ladder_plain(spec_name: str, b: int, mn: int,
+                               k: int) -> List[Finding]:
     import numpy as np
 
     from repro.core import compaction as C

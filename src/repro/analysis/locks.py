@@ -134,7 +134,7 @@ def default_targets() -> List[LockTarget]:
     from repro.serve import engine, scheduler
 
     shared = ("stats", "_outstanding", "_pending", "_closed",
-              "_close_called")
+              "_close_called", "_submit_seq")
     return [
         LockTarget(path=scheduler.__file__, class_name="AsyncOTScheduler",
                    fields=shared, lock_attr="_lock"),

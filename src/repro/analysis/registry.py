@@ -39,6 +39,7 @@ BUILTIN_MODULES: Tuple[str, ...] = (
     "repro.core.compaction",
     "repro.core.distributed",
     "repro.core.solution",
+    "repro.core.validate",
     "repro.kernels.ops",
 )
 

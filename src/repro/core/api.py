@@ -74,6 +74,13 @@ class DispatchPolicy:
       want: artifacts to expose on the typed Solution surface (e.g.
         ``("cost", "duals", "plan_sparse")``); None keeps the legacy
         return surface. ``solve(..., want=...)`` overrides this.
+      validate: run the vectorized admission check (core/validate.py) on
+        every dispatched bucket and raise
+        :class:`~repro.core.validate.RequestRejected` naming the
+        offending lanes before any solver program runs. The serving
+        layers do their own per-request quarantine instead (reject one
+        Future, keep the bucket); this flag is the all-or-nothing direct
+        API equivalent.
     """
     mode: str = "auto"
     mesh: Any = None
@@ -82,6 +89,7 @@ class DispatchPolicy:
     buckets: Optional[Tuple[int, ...]] = None
     guaranteed: bool = False
     want: Optional[Tuple[str, ...]] = None
+    validate: bool = False
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -126,6 +134,7 @@ def dispatch(
     sizes=None,
     policy: Optional[DispatchPolicy] = None,
     keep_state: bool = False,
+    deadline: Optional[float] = None,
     **prep_kw,
 ):
     """Solve ONE pre-batched bucket (dict of (B, ...) operands) under
@@ -133,10 +142,21 @@ def dispatch(
     plain lockstep path (it has no chunk/occupancy accounting),
     CompactionStats for compact (and for lockstep with
     ``keep_state=True``, which stashes the pre-completion state on a
-    minimal stats object), DistributedStats for mesh."""
+    minimal stats object), DistributedStats for mesh. ``deadline`` is an
+    absolute ``time.monotonic()`` wall-clock budget for the chunked
+    drivers (best-so-far cut; lockstep has no chunk loop to cut, so the
+    combination raises)."""
     policy = policy or DispatchPolicy()
     mode = policy.resolved_mode()
+    if policy.validate:
+        from .validate import check_admission
+        check_admission(spec.canonicalize(inputs), sizes=sizes)
     if mode == "lockstep":
+        if deadline is not None:
+            raise ValueError(
+                "deadline requires a chunked driver (mode='compact' or "
+                "'mesh'); the lockstep path dispatches one unbounded "
+                "program that cannot be cut mid-flight")
         eps_u = np.unique(np.asarray(eps, np.float64))
         if eps_u.size > 1:
             raise ValueError("per-instance eps requires compact=True")
@@ -153,12 +173,13 @@ def dispatch(
     if mode == "compact":
         return solve_compacting(
             spec, inputs, eps, sizes=sizes, k=k,
-            guaranteed=policy.guaranteed, keep_state=keep_state, **prep_kw)
+            guaranteed=policy.guaranteed, keep_state=keep_state,
+            deadline=deadline, **prep_kw)
     if mode == "mesh":
         return solve_mesh(
             spec, inputs, eps, policy.mesh, sizes=sizes, k=k,
             guaranteed=policy.guaranteed, placement=policy.placement,
-            keep_state=keep_state, **prep_kw)
+            keep_state=keep_state, deadline=deadline, **prep_kw)
     raise ValueError(f"unknown dispatch mode {mode!r}")
 
 
@@ -176,10 +197,13 @@ def _wrap_solution(
     sstats = SolveStats.from_driver(stats, mode=policy.resolved_mode(),
                                     batch=b, bucket=bucket)
     state = getattr(stats, "final_state", None) if stats is not None else None
+    un = getattr(stats, "unconverged", None) if stats is not None else None
+    degraded = None if un is None else np.asarray(un, bool)[:b]
     return SolutionBatch(
         spec, r, stats=sstats, driver_stats=stats, inputs=inputs_c,
         sizes=sizes, eps=eps_user, eps_internal=eps_internal,
-        guaranteed=policy.guaranteed, want=want, state=state)
+        guaranteed=policy.guaranteed, want=want, state=state,
+        degraded=degraded)
 
 
 def solve(
@@ -191,6 +215,7 @@ def solve(
     sizes=None,
     keep_state: bool = False,
     want: Optional[Sequence[str]] = None,
+    deadline: Optional[float] = None,
     **prep_kw,
 ) -> Union[SolutionBatch, List[Solution], Tuple[Any, Any], List[dict]]:
     """The front door. Two input forms:
@@ -216,6 +241,14 @@ def solve(
     pre-completion integer ``state`` is just another artifact: asking for
     it (or passing ``keep_state=True``) retains it on every dispatch
     path, including lockstep and the ragged form.
+
+    ``deadline`` (absolute ``time.monotonic()``) threads a wall-clock
+    budget into the chunked drivers: dispatching stops when the next
+    k-phase chunk would overrun it, and lanes cut before their
+    termination predicate fired come back flagged
+    ``Solution.degraded=True`` — still primal-feasible with eps-feasible
+    duals, so ``dual_feasible()``/``additive_gap()`` re-validate the
+    partial answer per request.
     """
     policy = policy or DispatchPolicy()
     if want is None:
@@ -235,13 +268,16 @@ def solve(
     if isinstance(instances, dict):
         if want is None:
             return dispatch(spec, instances, eps, sizes=sizes,
-                            policy=policy, keep_state=keep_state, **prep_kw)
+                            policy=policy, keep_state=keep_state,
+                            deadline=deadline, **prep_kw)
         r, stats = dispatch(spec, instances, eps, sizes=sizes,
-                            policy=policy, keep_state=keep_state, **prep_kw)
+                            policy=policy, keep_state=keep_state,
+                            deadline=deadline, **prep_kw)
         return _wrap_solution(spec, instances, eps, policy, r, stats,
                               sizes=sizes, want=want)
     sols = _solve_ragged(spec, list(instances), eps, policy,
-                         keep_state=keep_state, want=want, **prep_kw)
+                         keep_state=keep_state, want=want,
+                         deadline=deadline, **prep_kw)
     if want is not None:
         return sols
     # legacy adapter: the historical per-instance dicts, produced from the
@@ -259,6 +295,7 @@ def solve(
 def _solve_ragged(spec, instances: list, eps, policy: DispatchPolicy,
                   *, keep_state: bool = False,
                   want: Optional[Tuple[str, ...]] = None,
+                  deadline: Optional[float] = None,
                   **prep_kw) -> List[Solution]:
     from .batched import DEFAULT_BUCKETS, bucket_instances
 
@@ -284,7 +321,7 @@ def _solve_ragged(spec, instances: list, eps, policy: DispatchPolicy,
             sz = np.asarray([shapes[i] for i in idx], np.int32)
             r, stats = dispatch(spec, inputs, eps_arr[idx], sizes=sz,
                                 policy=policy, keep_state=keep_state,
-                                **prep_kw)
+                                deadline=deadline, **prep_kw)
             batch = _wrap_solution(spec, inputs, eps_arr[idx], policy, r,
                                    stats, sizes=sz, want=want,
                                    bucket=grp.key)

@@ -42,6 +42,7 @@ what compaction absorbs).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Any, List, Optional, Tuple
@@ -73,6 +74,14 @@ class CompactionStats:
     # pre-completion state (BatchedAssignmentResult carries no state; the
     # OT result's ``state`` field already does). Not serialized.
     final_state: Optional[Any] = None
+    # wall-clock deadline support: ``deadline_hit`` records that the chunk
+    # loop stopped dispatching because its next chunk would overrun the
+    # caller's budget; ``unconverged`` is the (dispatched_batch,) bool mask
+    # of lanes (original batch order) whose termination predicate had not
+    # yet fired at the cut — their answers are best-so-far (still
+    # primal-feasible with eps-feasible duals; see Solution.degraded).
+    deadline_hit: bool = False
+    unconverged: Optional[Any] = None
 
     def as_dict(self) -> dict:
         return {
@@ -84,6 +93,7 @@ class CompactionStats:
             "slot_phases": self.slot_phases,
             "phases_needed": self.phases_needed,
             "lockstep_slot_phases": self.lockstep_slot_phases,
+            "deadline_hit": self.deadline_hit,
         }
 
 
@@ -98,7 +108,7 @@ def _scatter(buf, tree, idx):
 
 
 def _drive(data, state, run_fn, conv_fn, max_chunks: int,
-           stats: CompactionStats):
+           stats: CompactionStats, deadline: Optional[float] = None):
     """Generic compacting loop over a per-instance ``data`` pytree (solver
     inputs: integer costs, thresholds, caps) and a solver-state pytree.
 
@@ -113,7 +123,14 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     The ``conv, ph = jax.device_get(...)`` fetch is the ONLY device->host
     sync in the loop (one per chunk) — the phase counters ride the same
     dispatch as the mask precisely so they don't cost a second blocking
-    fetch. ``repro.analysis``'s hot-loop sync audit pins this contract."""
+    fetch. ``repro.analysis``'s hot-loop sync audit pins this contract.
+
+    ``deadline`` is an absolute ``time.monotonic()`` instant: after each
+    chunk the driver compares the host clock (free — the conv fetch
+    already synced) plus the measured duration of the chunk that just ran
+    against it, and stops dispatching when the NEXT chunk would overrun,
+    flushing best-so-far state and recording the still-unconverged lanes
+    on ``stats``. At least one chunk always runs (progress guarantee)."""
     idx = np.arange(stats.dispatched_batch)
     # The result buffer is born at the FIRST flush (where ``idx`` is still
     # the identity, so the flush is just the current state) rather than
@@ -123,9 +140,11 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     cur_d, cur_s = data, state
     ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
     for _ in range(max_chunks):
+        t_chunk = time.monotonic()
         cur_s = run_fn(cur_d, cur_s)
         stats.dispatches += 1
         conv, ph = jax.device_get(conv_fn(cur_d, cur_s))
+        t_chunk = time.monotonic() - t_chunk
         ph = ph.astype(np.int64)
         bb = int(conv.shape[0])
         # the vmapped while_loop runs every lane for the max phase delta
@@ -134,6 +153,22 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
         live = int((~conv).sum())
         stats.occupancy.append((bb, live))
         if live == 0:
+            buf = cur_s if buf is None else _scatter(buf, cur_s,
+                                                     jnp.asarray(idx))
+            break
+        if deadline is not None and \
+                time.monotonic() + t_chunk >= deadline:
+            # the earliest deadline is at risk: another chunk (estimated
+            # by the one that just ran) would overrun it. Flush best-so-
+            # far state and mark the lanes that had not yet terminated —
+            # the epilogue is well-defined on any phase boundary (the
+            # phase-cap termination path already runs it on unconverged
+            # states), so callers get a primal-feasible answer whose
+            # certificate reports the true (larger) gap.
+            stats.deadline_hit = True
+            un = np.zeros((stats.dispatched_batch,), bool)
+            un[idx[~conv]] = True
+            stats.unconverged = un
             buf = cur_s if buf is None else _scatter(buf, cur_s,
                                                      jnp.asarray(idx))
             break
@@ -208,6 +243,7 @@ def solve_compacting(
     k: int = DEFAULT_CHUNK,
     guaranteed: bool = False,
     keep_state: bool = False,
+    deadline: Optional[float] = None,
     **prep_kw,
 ):
     """The generic compacting driver: solve a (B, M, N) batch of ``spec``
@@ -223,6 +259,9 @@ def solve_compacting(
       keep_state: stash the final pre-completion integer state on the
         returned stats (``final_state``) for feasibility certificates;
         off by default so serving paths don't retain an extra state copy.
+      deadline: absolute ``time.monotonic()`` budget; the chunk loop stops
+        dispatching when the next chunk would overrun it and returns
+        best-so-far answers (``stats.deadline_hit`` / ``unconverged``).
       prep_kw: spec-specific prep options (OT: ``theta``).
 
     Returns ``(result, CompactionStats)``; every result leaf is
@@ -256,7 +295,8 @@ def solve_compacting(
     state0 = init(data, ctx)
     stats = CompactionStats(batch=b, dispatched_batch=p.bp, chunk=k)
     final = _drive(data, state0, chunk, conv,
-                   max_chunk_dispatches(p.phase_cap, k), stats)
+                   max_chunk_dispatches(p.phase_cap, k), stats,
+                   deadline=deadline)
     r = epilogue(ctx, final)
 
     phases = np.asarray(final.phases[:b], np.int64)

@@ -58,6 +58,7 @@ caveat as any shape change of an XLA float reduction.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import List, Optional, Tuple
@@ -211,12 +212,15 @@ def _put(tree, target):
 
 def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
                        max_chunks: int, stats: DistributedStats,
-                       mesh: Mesh, axis: str):
+                       mesh: Mesh, axis: str,
+                       deadline: Optional[float] = None):
     """Mesh counterpart of compaction._drive. ``data``/``state`` arrive
     device_put onto ``NamedSharding(mesh, P(axis))``; ``run_s``/``conv_s``
     are the shard_map'ed chunk/converged dispatches and ``run_1``/``conv_1``
     the single-device ones used after the collapse. Chunk dispatches donate
-    the state buffers (one copy of solver state per bucket, not two)."""
+    the state buffers (one copy of solver state per bucket, not two).
+    ``deadline`` is an absolute ``time.monotonic()`` budget with the same
+    best-so-far cut semantics as compaction._drive."""
     d0 = int(mesh.shape[axis])
     sh = NamedSharding(mesh, P(axis))
     sh_rep = NamedSharding(mesh, P())
@@ -240,6 +244,7 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
 
     ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
     for _ in range(max_chunks):
+        t_chunk = time.monotonic()
         cur_s = (run_s if sharded else run_1)(cur_d, cur_s)
         stats.dispatches += 1
         # global converged-mask + phase-counter gather: ONE (B,)
@@ -248,6 +253,7 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
         # repro.analysis hot-loop sync audit pins this)
         conv, ph = jax.device_get((conv_s if sharded else conv_1)(cur_d,
                                                                   cur_s))
+        t_chunk = time.monotonic() - t_chunk
         ph = ph.astype(np.int64)
         bb = int(conv.shape[0])
         d_now = d0 if sharded else 1
@@ -262,6 +268,17 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
         live = int((~conv).sum())
         stats.occupancy.append((bb, live))
         if live == 0:
+            buf = flush(buf, cur_s, idx, sharded)
+            break
+        if deadline is not None and \
+                time.monotonic() + t_chunk >= deadline:
+            # earliest deadline at risk: stop dispatching, flush best-so-
+            # far state, and mark the unconverged lanes (original batch
+            # order) — same cut semantics as compaction._drive
+            stats.deadline_hit = True
+            un = np.zeros((stats.dispatched_batch,), bool)
+            un[idx[~conv]] = True
+            stats.unconverged = un
             buf = flush(buf, cur_s, idx, sharded)
             break
         nb = pow2_at_least(live)
@@ -319,6 +336,7 @@ def solve_mesh(
     batch_axis: str = "data",
     placement: str = "auto",
     keep_state: bool = False,
+    deadline: Optional[float] = None,
     **prep_kw,
 ):
     """Mesh-distributed counterpart of ``compaction.solve_compacting`` —
@@ -329,6 +347,10 @@ def solve_mesh(
     ``keep_state`` stashes the pre-completion integer state on the stats
     for feasibility certificates (batch placement only — the matrix path's
     epilogue consumes the state, so the combination raises).
+    ``deadline`` (absolute ``time.monotonic()``) gives the chunk loop a
+    wall-clock budget with best-so-far cut semantics (see
+    ``solve_compacting``); matrix placement solves instance-by-instance
+    with no chunk loop to cut, so it ignores the budget (best-effort).
 
     Returns ``(result, DistributedStats)``."""
     inputs = spec.canonicalize(inputs)
@@ -350,7 +372,7 @@ def solve_mesh(
         # below the mesh floor from the start: single-device dispatch
         out, cst = solve_compacting(
             spec, inputs, eps, sizes=sizes, k=k, guaranteed=guaranteed,
-            keep_state=keep_state, **prep_kw)
+            keep_state=keep_state, deadline=deadline, **prep_kw)
         stats = _wrap_stats(cst, d, batch_axis, collapsed_at=cst.
                             dispatched_batch or None)
         return out, stats
@@ -374,6 +396,7 @@ def solve_mesh(
     final = _drive_distributed(
         data, state0, chunk_s, conv_s, chunk_1, conv_1,
         max_chunk_dispatches(p.phase_cap, k), stats, mesh, batch_axis,
+        deadline=deadline,
     )
     r = epilogue_s(ctx, final)
 
@@ -396,6 +419,7 @@ def _wrap_stats(cst: CompactionStats, devices: int, batch_axis: str,
         phases_needed=cst.phases_needed,
         lockstep_slot_phases=cst.lockstep_slot_phases,
         final_state=cst.final_state,
+        deadline_hit=cst.deadline_hit, unconverged=cst.unconverged,
         devices=devices, batch_axis=batch_axis, placement="batch",
         collapsed_at=collapsed_at,
         devices_per_dispatch=[1] * cst.dispatches,

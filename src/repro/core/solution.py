@@ -92,6 +92,11 @@ class SolveStats:
     chunk: Optional[int] = None
     occupancy: Tuple[Tuple[int, int], ...] = ()
     collapsed_at: Optional[int] = None
+    # fault-tolerance accounting (serving layers fill these in)
+    deadline_hit: bool = False     # chunk loop cut by a wall-clock budget
+    attempts: int = 1              # dispatch attempts incl. ladder retries
+    ladder_level: int = 0          # 0 = configured policy; higher = degraded
+    quarantined: int = 0           # requests quarantined from this bucket
 
     @classmethod
     def from_driver(cls, st: Any, *, mode: str, batch: int,
@@ -108,6 +113,7 @@ class SolveStats:
             chunk=int(st.chunk) if st.chunk else None,
             occupancy=tuple(tuple(o) for o in st.occupancy),
             collapsed_at=getattr(st, "collapsed_at", None),
+            deadline_hit=bool(getattr(st, "deadline_hit", False)),
         )
 
     def as_dict(self) -> Dict[str, Any]:
@@ -117,6 +123,9 @@ class SolveStats:
             "placement": self.placement, "chunk": self.chunk,
             "occupancy": [list(o) for o in self.occupancy],
             "collapsed_at": self.collapsed_at,
+            "deadline_hit": self.deadline_hit, "attempts": self.attempts,
+            "ladder_level": self.ladder_level,
+            "quarantined": self.quarantined,
         }
 
 
@@ -280,7 +289,8 @@ class SolutionBatch:
                  sizes: Optional[np.ndarray], eps: np.ndarray,
                  eps_internal: np.ndarray, guaranteed: bool = False,
                  want: Optional[Tuple[str, ...]] = None,
-                 state: Any = None) -> None:
+                 state: Any = None,
+                 degraded: Optional[np.ndarray] = None) -> None:
         self.spec = spec
         self.stats = stats
         self.guaranteed = guaranteed
@@ -296,6 +306,8 @@ class SolutionBatch:
                 [np.full((self.batch,), m, np.int32),
                  np.full((self.batch,), n, np.int32)], axis=1)
         self.sizes = np.asarray(sizes, np.int32)
+        self._degraded = (None if degraded is None
+                          else np.asarray(degraded, bool)[:self.batch])
         self.eps = np.asarray(eps, np.float64)
         self.eps_internal = np.asarray(eps_internal, np.float64)
         self.want = None if want is None else tuple(want)
@@ -380,6 +392,19 @@ class SolutionBatch:
         """(B,) primal objective values (O(B) scalars fetched)."""
         self._check("cost")
         return self._fetch("cost")["cost"][:self.batch]
+
+    def degraded(self) -> np.ndarray:
+        """(B,) bool: lanes whose chunk loop was cut by a wall-clock
+        deadline BEFORE their termination predicate fired. A degraded
+        lane's answer is still primal-feasible with eps-feasible duals
+        (the paper maintains invariant I2 at every phase, not just the
+        last), so its certificate accessors remain valid — only its
+        ``additive_gap()`` is larger than a converged run's. Always
+        available (no ``want`` gating): it is O(B) bools computed at
+        dispatch time."""
+        if self._degraded is None:
+            return np.zeros((self.batch,), bool)
+        return self._degraded
 
     def phases(self) -> np.ndarray:
         return self._fetch("scalars")["phases"][:self.batch]
@@ -564,6 +589,12 @@ class Solution:
         return self._b.stats
 
     @property
+    def degraded(self) -> bool:
+        """True when this lane was cut by a deadline budget; re-validate
+        with ``dual_feasible()`` / ``additive_gap()`` (still sound)."""
+        return bool(self._b.degraded()[self._j])
+
+    @property
     def cost(self) -> float:
         return float(self._b.cost()[self._j])
 
@@ -632,6 +663,10 @@ class Solution:
             out["dispatches"] = st.dispatches
             if hasattr(st, "devices"):
                 out["devices"] = st.devices
+        if self.degraded:
+            # new-surface-only key: absent on every non-degraded result,
+            # so pre-deadline consumers see bit-identical dicts
+            out["degraded"] = True
         return out
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety

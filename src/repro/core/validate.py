@@ -1,0 +1,214 @@
+"""Pre-admission input validation: vectorized poison detection + quarantine.
+
+One NaN-poisoned cost matrix used to take down an entire collated bucket
+of unrelated requests: the checkify sanitizer (PR 6) detects the poison
+mid-dispatch, but detection without isolation fails every Future in the
+batch. This module is the cheap front gate — a single jitted reduction
+over the batched inputs that classifies each lane BEFORE dispatch:
+
+  ``NONFINITE_COST``   a NaN/inf cost inside the instance's valid block;
+  ``NEGATIVE_MASS``    a negative or non-finite supply/demand weight;
+  ``MASS_IMBALANCE``   ``|sum(nu) - sum(mu)|`` beyond a relative
+                       tolerance (the OT rounding step assumes balanced
+                       marginals; an imbalanced pair silently shifts the
+                       primal objective).
+
+Codes are a bitmask so one lane can carry several reasons. The serving
+layers (``serve/scheduler.py``, ``serve/engine.py``) call
+:func:`admission_codes` per collated bucket and quarantine offending
+lanes with a per-request :class:`RequestRejected` while the rest of the
+bucket proceeds untouched — the batched solve is lane-independent, so
+dropping a poisoned lane never perturbs a healthy neighbor's result.
+
+The reductions are ordinary audited entry points (they self-register
+with ``repro.analysis``): the tolerance is traced data (``must_trace``),
+never a baked constant, and every output is a strongly-typed int32 —
+the weak-float drift rules apply to this module like any other.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .problem import _sizes_arrays
+
+__all__ = [
+    "OK",
+    "NONFINITE_COST",
+    "NEGATIVE_MASS",
+    "MASS_IMBALANCE",
+    "DEFAULT_TOL",
+    "RequestRejected",
+    "describe",
+    "admission_codes",
+    "check_admission",
+]
+
+OK = 0
+NONFINITE_COST = 1
+NEGATIVE_MASS = 2
+MASS_IMBALANCE = 4
+
+#: Relative mass-imbalance tolerance: |sum(nu) - sum(mu)| may be at most
+#: this fraction of max(total mass, 1).
+DEFAULT_TOL = 1e-3
+
+_REASONS = (
+    (NONFINITE_COST, "non-finite cost"),
+    (NEGATIVE_MASS, "negative or non-finite mass"),
+    (MASS_IMBALANCE, "mass imbalance beyond tolerance"),
+)
+
+
+def describe(code: int) -> str:
+    """Human-readable reason string for a bitmask admission code."""
+    parts = [text for bit, text in _REASONS if code & bit]
+    return " + ".join(parts) if parts else "ok"
+
+
+class RequestRejected(RuntimeError):
+    """A request refused admission (or quarantined mid-dispatch).
+
+    Carries the machine-readable ``code`` bitmask alongside ``who`` (the
+    tenant/request name the serving layer supplies) so a client can
+    distinguish its own poisoned input from a neighbor's transient
+    infrastructure failure.
+    """
+
+    def __init__(self, who: str, code: int, reason: Optional[str] = None):
+        self.who = str(who)
+        self.code = int(code)
+        self.reason = reason if reason is not None else describe(int(code))
+        super().__init__(
+            f"{self.who} rejected at admission: {self.reason} "
+            f"(code {self.code})")
+
+
+# --------------------------------------------------------------------------
+# Jitted per-lane classification (O(B) int32 codes cross to host)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _admission_assignment(c, m_valid, n_valid):
+    """(B,) int32 codes for assignment instances: cost finiteness over
+    each instance's valid block (padding lanes/edges are exempt)."""
+    _, m, n = c.shape
+    rok = jnp.arange(m)[None, :] < m_valid[:, None]
+    cok = jnp.arange(n)[None, :] < n_valid[:, None]
+    mask = rok[:, :, None] & cok[:, None, :]
+    bad_c = jnp.any(~jnp.isfinite(c) & mask, axis=(1, 2))
+    return jnp.where(bad_c, jnp.int32(NONFINITE_COST), jnp.int32(OK))
+
+
+@jax.jit
+def _admission_ot(c, nu, mu, m_valid, n_valid, tol):
+    """(B,) int32 bitmask codes for OT instances.
+
+    ``tol`` is traced data (one program serves every tolerance); the
+    imbalance test is relative to ``max(total mass, 1)`` so tiny and
+    huge marginals are held to the same proportional standard.
+    """
+    _, m, n = c.shape
+    rok = jnp.arange(m)[None, :] < m_valid[:, None]
+    cok = jnp.arange(n)[None, :] < n_valid[:, None]
+    mask = rok[:, :, None] & cok[:, None, :]
+    bad_c = jnp.any(~jnp.isfinite(c) & mask, axis=(1, 2))
+    bad_nu = jnp.any((~jnp.isfinite(nu) | (nu < 0)) & rok, axis=1)
+    bad_mu = jnp.any((~jnp.isfinite(mu) | (mu < 0)) & cok, axis=1)
+    z = jnp.float32(0.0)
+    s_nu = jnp.sum(jnp.where(rok, nu, z), axis=1)
+    s_mu = jnp.sum(jnp.where(cok, mu, z), axis=1)
+    scale = jnp.maximum(jnp.maximum(s_nu, s_mu), jnp.float32(1.0))
+    imbalanced = jnp.abs(s_nu - s_mu) > tol * scale
+    zero = jnp.int32(OK)
+    return (jnp.where(bad_c, jnp.int32(NONFINITE_COST), zero)
+            | jnp.where(bad_nu | bad_mu, jnp.int32(NEGATIVE_MASS), zero)
+            | jnp.where(imbalanced, jnp.int32(MASS_IMBALANCE), zero))
+
+
+# --------------------------------------------------------------------------
+# Host wrappers
+# --------------------------------------------------------------------------
+
+def admission_codes(inputs: Dict[str, Any], *,
+                    sizes: Optional[np.ndarray] = None,
+                    tol: float = DEFAULT_TOL) -> np.ndarray:
+    """(B,) int32 admission codes for a canonical batched input dict.
+
+    ``inputs`` holds ``c`` (B, M, N) and, for OT, ``nu``/``mu``;
+    ``sizes`` is the usual (B, 2) true-shape array (``None`` = every lane
+    fills the padded block). 0 means admitted; nonzero is a bitmask of
+    rejection reasons (see :func:`describe`).
+    """
+    c = inputs["c"]
+    b, m, n = (int(s) for s in np.shape(c))
+    m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+    mv = jnp.asarray(m_valid, jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    if inputs.get("nu") is not None:
+        codes = _admission_ot(
+            jnp.asarray(c), jnp.asarray(inputs["nu"]),
+            jnp.asarray(inputs["mu"]), mv, nv, jnp.float32(tol))
+    else:
+        codes = _admission_assignment(jnp.asarray(c), mv, nv)
+    return np.asarray(codes)
+
+
+def check_admission(inputs: Dict[str, Any], *,
+                    sizes: Optional[np.ndarray] = None,
+                    tol: float = DEFAULT_TOL,
+                    who: str = "instance") -> np.ndarray:
+    """Run :func:`admission_codes` and raise :class:`RequestRejected`
+    naming every offending lane; returns the (all-zero) codes when clean."""
+    codes = admission_codes(inputs, sizes=sizes, tol=tol)
+    bad = np.flatnonzero(codes)
+    if bad.size:
+        shown = ", ".join(
+            f"{who} {int(j)}: {describe(int(codes[j]))}" for j in bad[:8])
+        more = "" if bad.size <= 8 else f" (+{int(bad.size) - 8} more)"
+        raise RequestRejected(
+            f"{int(bad.size)}/{int(codes.size)} lane(s)",
+            int(codes[bad[0]]), reason=shown + more)
+    return codes
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the admission reductions are dispatch-path
+# entry points (one runs per collated bucket), so they carry the same
+# contracts as the solver chunks — the tolerance must be traced data, not
+# a baked constant (the recompile-churn bug class), and the int32 codes
+# must not pick up weak-float drift.
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_admission():
+    b, m, n = 2, 4, 4
+    c = jnp.zeros((b, m, n), jnp.float32)
+    nu = jnp.full((b, m), 0.25, jnp.float32)
+    mu = jnp.full((b, n), 0.25, jnp.float32)
+    mv = jnp.full((b,), m, jnp.int32)
+    nv = jnp.full((b,), n, jnp.int32)
+    mk = lambda name, fn, args, must: _audit.EntrySpec(  # noqa: E731
+        name=name,
+        build=lambda: _audit.trace_entry(
+            name=name, fn=fn, args=args, must_trace=must,
+            tags={"admission"}, source=__name__),
+        source=__name__,
+    )
+    return [
+        mk("core.validate.admission[assignment]", _admission_assignment,
+           {"c": c, "m_valid": mv, "n_valid": nv}, ()),
+        mk("core.validate.admission[ot]", _admission_ot,
+           {"c": c, "nu": nu, "mu": mu, "m_valid": mv, "n_valid": nv,
+            "tol": jnp.float32(DEFAULT_TOL)}, ("tol",)),
+    ]
+
+
+for _es in _trace_admission():
+    _audit.register(_es.name, _es.build, source=_es.source)
+del _es

@@ -142,14 +142,23 @@ class OTService:
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
                  use_pallas: bool = True, buckets=None,
                  compact: bool = True, chunk: Optional[int] = None,
-                 mesh=None, want: Optional[tuple] = None):
+                 mesh=None, want: Optional[tuple] = None,
+                 validate: bool = True,
+                 admission_tol: Optional[float] = None):
         from repro.core import batched as B
         from repro.core import compaction as C
+        from repro.core import validate as V
         from repro.core.api import DispatchPolicy
         from repro.core.costs import COSTS, build_cost_matrix
 
         self.eps = eps
         self.metric = metric
+        # per-ticket admission gate: poisoned tickets get a
+        # RequestRejected INSTANCE in the result list, healthy co-bucketed
+        # tickets still solve (lane-independence of the batched drivers)
+        self.validate = bool(validate)
+        self.admission_tol = (V.DEFAULT_TOL if admission_tol is None
+                              else float(admission_tol))
         # Pallas cost kernels only where they compile (TPU); everywhere else
         # they would run in interpret mode, i.e. a pure emulation tax.
         self.kernel = ("pallas" if use_pallas
@@ -178,9 +187,9 @@ class OTService:
                mu: Optional[np.ndarray] = None) -> int:
         """Queue one distance request; returns its ticket (position in the
         result list of the next run_batch)."""
-        if (nu is None) != (mu is None):
-            raise ValueError("provide both nu and mu (general OT) or "
-                             "neither (assignment distance)")
+        from .ft import require_mass_pair
+
+        require_mass_pair(nu, mu, who=f"ticket #{len(self.queue)}")
         self.queue.append(OTRequest(x=np.asarray(x), y=np.asarray(y),
                                     nu=nu, mu=mu))
         return len(self.queue) - 1
@@ -198,7 +207,12 @@ class OTService:
         """Solve all queued requests via bucketed batched dispatch; returns
         results in submission order: the historical per-request dicts
         (``want=None``, bit-identical adapter), or per-request
-        ``Solution`` views when the service declared ``want=``."""
+        ``Solution`` views when the service declared ``want=``.
+
+        With ``validate=True`` (default) each bucket passes the admission
+        gate first: a poisoned ticket's slot holds its
+        :class:`~repro.core.validate.RequestRejected` instance (not a
+        result dict) while healthy co-bucketed tickets solve normally."""
         if not self.queue:
             return []
         from repro.core.api import ASSIGNMENT, OT, solve
@@ -220,9 +234,35 @@ class OTService:
                 xs = self._B.pad_stack([reqs[i].x for i in idx], (mb, d))
                 ys = self._B.pad_stack([reqs[i].y for i in idx], (nb, d))
                 c = self._batched_cost(xs, ys)
+                nu = mu = None
                 if has_mass:
                     nu = self._B.pad_stack([reqs[i].nu for i in idx], (mb,))
                     mu = self._B.pad_stack([reqs[i].mu for i in idx], (nb,))
+                if self.validate:
+                    from repro.core.validate import (RequestRejected,
+                                                     admission_codes)
+
+                    ins = ({"c": c, "nu": nu, "mu": mu} if has_mass
+                           else {"c": c})
+                    codes = admission_codes(ins, sizes=sizes,
+                                            tol=self.admission_tol)
+                    bad = np.flatnonzero(codes != 0)
+                    if bad.size:
+                        # quarantined tickets get their rejection IN the
+                        # result list (run_batch has no Future to fail);
+                        # the healthy rest of the bucket still solves
+                        for j in bad:
+                            results[idx[j]] = RequestRejected(
+                                f"ticket #{idx[j]}", int(codes[j]))
+                        keep = np.flatnonzero(codes == 0)
+                        if keep.size == 0:
+                            continue
+                        c = c[keep]
+                        if has_mass:
+                            nu, mu = nu[keep], mu[keep]
+                        sizes = sizes[keep]
+                        idx = [idx[j] for j in keep]
+                if has_mass:
                     spec, inputs = OT, {"c": c, "nu": nu, "mu": mu}
                     legacy_want = ("cost", "plan")
                 else:
@@ -293,6 +333,9 @@ class OTService:
         held, self.queue = self.queue, []
         try:
             self.submit(x, y, nu=nu, mu=mu)
-            return self.run_batch()[0]
+            out = self.run_batch()[0]
+            if isinstance(out, BaseException):
+                raise out        # one-shot callers want the exception
+            return out
         finally:
             self.queue = held

@@ -43,9 +43,33 @@ Results are identical to the synchronous service regardless of how
 requests happen to be batched: the distributed driver's per-lane results
 are composition-invariant (retiring or re-sharding a neighbor never
 perturbs a survivor — the property tests in tests/test_compaction.py).
+That composition invariance is also what makes the FAULT-TOLERANCE layer
+sound: quarantining a poisoned lane (admission gate or checkify-triggered
+bisection) or retrying the survivors on a lower ladder rung returns the
+healthy requests bit-identical results to a clean run.
+
+Fault tolerance (serve/ft.py, serve/faults.py):
+
+  * every collated bucket passes the vectorized admission gate
+    (core/validate.py); poisoned lanes fail their own Future with
+    ``RequestRejected`` while the rest of the bucket dispatches;
+  * a dispatch that trips the checkify sanitizer (or any other
+    data-dependent poison) is BISECTED: contiguous halves re-dispatch
+    until the offending request(s) are isolated and quarantined;
+  * transient dispatch failures (device OOM, collective errors) retry
+    with exponential backoff down the degradation ladder ``mesh ->
+    compact single-device -> host CPU`` (recorded on ``SolveStats``:
+    attempts / ladder_level / quarantined);
+  * ``submit(..., deadline=)`` gives a request a wall-clock budget; its
+    bucket stops dispatching k-phase chunks when the earliest budget is
+    at risk and resolves best-so-far ``Solution``s flagged
+    ``degraded=True`` — re-validated per request by their a-posteriori
+    certificates (``dual_feasible()`` / ``additive_gap()``).
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import queue
 import threading
 import time
@@ -56,6 +80,8 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+from . import ft as _ft
 
 
 def _fulfil(fut: Future, result) -> bool:
@@ -88,6 +114,16 @@ class _Pending:
     future: Future
     t_submit: float
     want: Optional[tuple] = None    # None -> legacy result dict
+    deadline: Optional[float] = None  # absolute time.monotonic() budget
+    tenant: Optional[str] = None
+    seq: int = -1                   # submit ordinal (fault plans key on it)
+
+
+def _who(req: _Pending) -> str:
+    """Name a request for exception messages: its tenant if it gave one,
+    its submit ordinal otherwise."""
+    return (f"tenant {req.tenant!r}" if req.tenant is not None
+            else f"request #{req.seq}")
 
 
 @dataclass
@@ -101,6 +137,29 @@ class _WorkItem:
     reqs: List[_Pending]
     bucket: tuple
     t_prepared: float
+    # mutable accounting shared across bisection halves of one original
+    # bucket (the dispatch worker processes halves sequentially, so no
+    # lock is needed): requests quarantined from the bucket so far
+    shared: dict = field(default_factory=dict)
+
+
+def _split_item(item: _WorkItem):
+    """Bisect a work item into contiguous halves (shared accounting dict
+    rides along). Lane-sliced operands keep per-lane results bit-identical
+    — batched solves are composition-invariant."""
+    h = len(item.reqs) // 2
+
+    def sub(lo: int, hi: int) -> _WorkItem:
+        sel = np.arange(lo, hi)
+        return _WorkItem(
+            has_mass=item.has_mass, c=item.c[sel],
+            nu=None if item.nu is None else item.nu[sel],
+            mu=None if item.mu is None else item.mu[sel],
+            sizes=item.sizes[sel], eps=item.eps[sel],
+            reqs=item.reqs[lo:hi], bucket=item.bucket,
+            t_prepared=item.t_prepared, shared=item.shared)
+
+    return sub(0, h), sub(h, len(item.reqs))
 
 
 @dataclass
@@ -115,6 +174,12 @@ class SchedulerStats:
     dispatches: int = 0
     occupancy: "deque" = field(
         default_factory=lambda: deque(maxlen=64))
+    # fault-tolerance accounting
+    rejected: int = 0        # failed the admission gate (pre-dispatch)
+    quarantined: int = 0     # isolated by dispatch-time bisection
+    retries: int = 0         # extra dispatch attempts (ladder/backoff)
+    degraded: int = 0        # requests resolved best-so-far on deadline
+    deadline_hits: int = 0   # buckets cut by a wall-clock budget
 
     def as_dict(self) -> dict:
         return {
@@ -124,6 +189,11 @@ class SchedulerStats:
                             if self.requests else 0.0),
             "total_solve_s": self.total_solve_s,
             "dispatches": self.dispatches,
+            "rejected": self.rejected,
+            "quarantined": self.quarantined,
+            "retries": self.retries,
+            "degraded": self.degraded,
+            "deadline_hits": self.deadline_hits,
         }
 
 
@@ -143,15 +213,33 @@ class AsyncOTScheduler:
         round arrives, keep draining for this long so co-tenant requests
         share a dispatch. 0 dispatches whatever is instantaneously queued.
       placement: "auto" | "batch" | "matrix" (core/distributed.py policy).
+      validate: run the vectorized admission gate on every collated
+        bucket; poisoned lanes fail their own Future with
+        ``RequestRejected``, the rest dispatch.
+      admission_tol: relative mass-imbalance tolerance of the gate.
+      faults: optional :class:`~repro.serve.faults.FaultInjector` (chaos
+        harness; tests only).
+      retries_per_level / retry_backoff_s: transient-failure retry policy
+        per degradation-ladder rung.
+      join_timeout_s: how long close() waits for each worker to exit
+        before declaring it hung, failing pending Futures, and raising.
+      policy: override the dispatch policy wholesale (e.g. a compact-mode
+        policy so the checkify sanitizer path is exercised); default is
+        the mesh-mode policy built from ``mesh``/``placement``/``chunk``.
     """
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
                  mesh=None, buckets=None, chunk: Optional[int] = None,
                  max_batch: int = 256, linger_ms: float = 0.0,
                  use_pallas: bool = True, placement: str = "auto",
-                 want: Optional[tuple] = None):
+                 want: Optional[tuple] = None, validate: bool = True,
+                 admission_tol: Optional[float] = None, faults=None,
+                 retries_per_level: int = 2, retry_backoff_s: float = 0.05,
+                 join_timeout_s: float = 30.0,
+                 policy=None):
         from repro.core import batched as B
         from repro.core import compaction as C
+        from repro.core import validate as V
         from repro.core.api import DispatchPolicy
         from repro.core.costs import COSTS
 
@@ -166,9 +254,21 @@ class AsyncOTScheduler:
         self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
         # every bucket dispatch goes through the unified core/api.solve
         # front door under this one policy
-        self._policy = DispatchPolicy(mode="mesh", mesh=mesh,
-                                      placement=placement, chunk=self.chunk,
-                                      buckets=self.buckets)
+        self._policy = policy if policy is not None else DispatchPolicy(
+            mode="mesh", mesh=mesh,
+            placement=placement, chunk=self.chunk,
+            buckets=self.buckets)
+        self.validate = bool(validate)
+        self.admission_tol = (V.DEFAULT_TOL if admission_tol is None
+                              else float(admission_tol))
+        self._faults = faults
+        self._retries_per_level = int(retries_per_level)
+        self._retry_backoff_s = float(retry_backoff_s)
+        self._join_timeout_s = float(join_timeout_s)
+        # transient dispatch failures walk this ladder (mesh -> compact
+        # single-device -> host CPU), never re-raising past the last rung
+        # until every retry is spent
+        self._ladder = _ft.degradation_ladder(self._policy)
         self.max_batch = int(max_batch)
         self.linger_s = float(linger_ms) / 1e3
         self.placement = placement
@@ -181,6 +281,7 @@ class AsyncOTScheduler:
         self._cost_batched = jax.jit(jax.vmap(COSTS[metric]))
         self.stats = SchedulerStats()
 
+        self._submit_seq = 0          # next submit ordinal (under _lock)
         self._submit_q: "queue.Queue" = queue.Queue()
         # bounded handoff: collate may run at most this many batches ahead
         # of the dispatcher (backpressure, and the overlap window)
@@ -206,7 +307,9 @@ class AsyncOTScheduler:
 
     def submit(self, x, y, nu=None, mu=None,
                eps: Optional[float] = None,
-               want: Optional[tuple] = None) -> Future:
+               want: Optional[tuple] = None,
+               deadline: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         """Queue one distance request; returns a Future. (nu, mu) both
         present -> general OT; both absent -> assignment distance.
 
@@ -217,25 +320,43 @@ class AsyncOTScheduler:
         declared artifacts is ever fetched from device — a bucket of
         cost-only tenants moves O(B) scalars, no dense plans. With
         ``want=None`` the Future resolves to the historical result dict
-        (bit-identical adapter)."""
-        if (nu is None) != (mu is None):
-            raise ValueError("provide both nu and mu (general OT) or "
-                             "neither (assignment distance)")
+        (bit-identical adapter).
+
+        ``deadline`` is a RELATIVE wall-clock budget in seconds. The
+        request's bucket stops dispatching solver chunks when the
+        earliest co-batched budget is at risk; any request still
+        unconverged resolves best-so-far with ``degraded=True`` and an
+        honestly larger ``additive_gap()`` (duals stay eps-feasible at
+        every phase, so the certificate remains valid). ``tenant`` is an
+        optional label used in rejection/validation messages."""
+        with self._lock:
+            who = (f"tenant {tenant!r}" if tenant is not None
+                   else f"request #{self._submit_seq}")
+        has_mass = _ft.require_mass_pair(nu, mu, who=who)
         fut: Future = Future()
-        req = _Pending(x=np.asarray(x), y=np.asarray(y),
-                       nu=None if nu is None else np.asarray(nu),
-                       mu=None if mu is None else np.asarray(mu),
-                       eps=self.eps if eps is None else float(eps),
-                       future=fut, t_submit=time.perf_counter(),
-                       want=(self.want if want is None else tuple(want)))
-        # closed-check and outstanding-increment share the lock close()
-        # takes to flip _closed, so a submit can never slip in after the
-        # shutdown sentinel and strand its Future
+        # closed-check, ordinal reservation, and outstanding-increment
+        # share the lock close() takes to flip _closed, so a submit can
+        # never slip in after the shutdown sentinel and strand its Future
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            seq = self._submit_seq
+            self._submit_seq += 1
             self._outstanding += 1
             self._pending.add(fut)
+        # the injector hook runs only after the reservation succeeded, so
+        # its submit ordinals stay aligned with ours
+        if self._faults is not None:
+            x, _ = self._faults.on_submit(np.asarray(x))
+        req = _Pending(x=np.asarray(x), y=np.asarray(y),
+                       nu=None if not has_mass else np.asarray(nu),
+                       mu=None if not has_mass else np.asarray(mu),
+                       eps=self.eps if eps is None else float(eps),
+                       future=fut, t_submit=time.perf_counter(),
+                       want=(self.want if want is None else tuple(want)),
+                       deadline=(None if deadline is None
+                                 else time.monotonic() + float(deadline)),
+                       tenant=tenant, seq=seq)
         self._submit_q.put(req)
         return fut
 
@@ -300,21 +421,39 @@ class AsyncOTScheduler:
         """Stop accepting work, drain what was submitted, stop workers.
         Every accepted Future is resolved (or failed) before this returns
         — shutdown never strands a pending Future, even racing in-flight
-        collate/dispatch work or a dead worker thread."""
+        collate/dispatch work or a dead worker thread. If a worker is
+        still ALIVE after ``join_timeout_s`` (hung, not dead), pending
+        Futures are failed and a ``RuntimeError`` naming the hung
+        worker(s) is raised — silently returning with live threads would
+        leak them and whatever device state they hold."""
         with self._lock:
             if self._close_called:
                 return
             self._close_called = True
             self._closed = True          # no new submits past this point
-        self.flush()
+        # bounded: a hung worker must not wedge close() before it even
+        # reaches the joins (the timeout only fires when a worker exceeds
+        # it — a draining pipeline returns as soon as it's empty)
+        self.flush(timeout=self._join_timeout_s)
         self._submit_q.put(None)          # collate sentinel
-        self._collate_t.join(timeout=30)
-        self._dispatch_t.join(timeout=30)
+        self._collate_t.join(timeout=self._join_timeout_s)
+        self._dispatch_t.join(timeout=self._join_timeout_s)
+        hung = [t.name for t in (self._collate_t, self._dispatch_t)
+                if t.is_alive()]
         with self._lock:
             stranded = bool(self._pending)
-        if stranded:
-            # belt-and-braces: a worker hung past the join timeout
-            self._abort_pending(RuntimeError("scheduler closed"))
+        if stranded or hung:
+            # a worker hung past the join timeout (or died with futures
+            # unaccounted): fail everything still pending, loudly
+            self._abort_pending(RuntimeError(
+                "scheduler closed with hung worker(s): "
+                f"{', '.join(hung)}" if hung
+                else "scheduler closed"))
+        if hung:
+            raise RuntimeError(
+                f"scheduler worker(s) {', '.join(hung)} still alive "
+                f"after join(timeout={self._join_timeout_s}); pending "
+                "futures were failed")
 
     def stats_dict(self) -> dict:
         """Locked snapshot of the aggregate stats — the supported way to
@@ -403,12 +542,44 @@ class AsyncOTScheduler:
                         if has_mass:
                             nu = B.pad_stack([r.nu for r in reqs], (mb,))
                             mu = B.pad_stack([r.mu for r in reqs], (nb,))
+                        sizes = grp.sizes
+                        quarantined = 0
+                        if self.validate:
+                            from repro.core.validate import (
+                                RequestRejected, admission_codes)
+
+                            ins = ({"c": c, "nu": nu, "mu": mu}
+                                   if has_mass else {"c": c})
+                            codes = admission_codes(
+                                ins, sizes=sizes, tol=self.admission_tol)
+                            bad = np.flatnonzero(codes != 0)
+                            if bad.size:
+                                # poisoned lanes fail their own Future;
+                                # the healthy rest of the bucket proceeds
+                                rejected = [reqs[j] for j in bad]
+                                for j in bad:
+                                    _fail(reqs[j].future, RequestRejected(
+                                        _who(reqs[j]), int(codes[j])))
+                                self._done(rejected)
+                                with self._lock:
+                                    self.stats.rejected += int(bad.size)
+                                packaged.update(id(r) for r in rejected)
+                                keep = np.flatnonzero(codes == 0)
+                                if keep.size == 0:
+                                    continue
+                                c = c[keep]
+                                if has_mass:
+                                    nu, mu = nu[keep], mu[keep]
+                                sizes = sizes[keep]
+                                reqs = [reqs[j] for j in keep]
+                                quarantined = int(bad.size)
                         item = _WorkItem(
                             has_mass=has_mass, c=c, nu=nu, mu=mu,
-                            sizes=grp.sizes,
+                            sizes=sizes,
                             eps=np.asarray([r.eps for r in reqs]),
                             reqs=reqs, bucket=grp.key,
                             t_prepared=time.perf_counter(),
+                            shared={"quarantined": quarantined},
                         )
                         self._handoff(item)      # blocks: backpressure
                         packaged.update(id(r) for r in reqs)
@@ -434,90 +605,175 @@ class AsyncOTScheduler:
         return tuple(sorted(union))
 
     def _dispatch_loop(self):
-        from repro.core.api import ASSIGNMENT, OT, solve
-
         while True:
             item = self._work_q.get()
             if item is None:
                 return
-            t0 = time.perf_counter()
-            try:
-                if item.has_mass:
-                    spec = OT
-                    inputs = {"c": item.c, "nu": item.nu, "mu": item.mu}
-                else:
-                    spec = ASSIGNMENT
-                    inputs = {"c": item.c}
-                batch = solve(spec, inputs, item.eps, self._policy,
-                              sizes=item.sizes, want=self._union_want(item))
-                # O(B)-scalar UNGATED fetch: blocks until the bucket is
-                # solved whatever the tenants' want union declares,
-                # without materializing any big artifact on host
-                batch.phases()
-                if any(r.want is None for r in item.reqs):
-                    # legacy solve_s includes the legacy artifact
-                    # device->host fetches, as the pre-Solution surface
-                    # measured it
-                    batch.cost()
-                    if item.has_mass:
-                        batch.plan()
-                    else:
-                        batch.matching()
-                        batch.duals()
-                solve_s = time.perf_counter() - t0
-                st = batch.stats
-                # one shared (read-only) occupancy curve for the whole
-                # batch, not a copy per request
-                occupancy = st.occupancy
-                waits = [t0 - req.t_submit for req in item.reqs]
-                # all SchedulerStats mutation under the scheduler lock:
-                # stats_dict() readers run concurrently on caller threads,
-                # and the dataclass's += read-modify-writes are not atomic
-                # (the lock-discipline scan in repro.analysis pins this)
+            self._dispatch_item(item)
+
+    def _solve_with_ladder(self, item):
+        """One bucket solve through the unified front door, with
+        transient failures retrying down the degradation ladder. Returns
+        ``(SolutionBatch, ladder_level, total_attempts)``; poison and
+        programming errors propagate to the caller's bisection/quarantine
+        logic untouched."""
+        from repro.core.api import ASSIGNMENT, OT, solve
+
+        if item.has_mass:
+            spec = OT
+            inputs = {"c": item.c, "nu": item.nu, "mu": item.mu}
+        else:
+            spec = ASSIGNMENT
+            inputs = {"c": item.c}
+        want = self._union_want(item)
+        budgets = [r.deadline for r in item.reqs if r.deadline is not None]
+        deadline = min(budgets) if budgets else None
+        seqs = tuple(r.seq for r in item.reqs)
+
+        tried = [0]
+
+        def attempt(name, pol, dev):
+            tried[0] += 1
+            if self._faults is not None:
+                self._faults.on_dispatch(seqs)
+            ctx = (jax.default_device(dev) if dev is not None
+                   else contextlib.nullcontext())
+            with ctx:
+                return solve(spec, inputs, item.eps, pol,
+                             sizes=item.sizes, want=want,
+                             deadline=deadline)
+
+        try:
+            return _ft.run_with_recovery(
+                attempt, self._ladder,
+                retries_per_level=self._retries_per_level,
+                backoff_s=self._retry_backoff_s)
+        finally:
+            # count retries even when the run ends in a poison raise —
+            # the transient retries before it still happened
+            if tried[0] > 1:
                 with self._lock:
-                    self.stats.batches += 1
-                    self.stats.total_solve_s += solve_s
-                    self.stats.dispatches += st.dispatches
-                    self.stats.occupancy.append(occupancy)
-                    self.stats.requests += len(item.reqs)
-                    self.stats.total_wait_s += sum(waits)
-                for i, req in enumerate(item.reqs):
-                    wait_s = waits[i]
-                    if req.want is not None:
-                        # typed surface: the Future resolves to the
-                        # per-request Solution view (lazy artifacts,
-                        # uniform Solution.stats)
-                        _fulfil(req.future, batch[i])
-                        continue
-                    m, n = item.sizes[i]
-                    sol = batch[i]
-                    out: Dict[str, Any] = {
-                        "phases": sol.phases,
-                        "batch_size": len(item.reqs),
-                        "bucket": item.bucket,
-                        "wait_s": wait_s,
-                        "solve_s": solve_s,
-                        "devices": st.devices,
-                        "dispatches": st.dispatches,
-                        "occupancy": occupancy,
-                        "eps": float(item.eps[i]),
-                    }
-                    if item.has_mass:
-                        out["cost"] = sol.cost
-                        out["plan"] = sol.plan()
-                    else:
-                        y_b, y_a = sol.duals()
-                        out["cost"] = sol.cost / m
-                        out["matching"] = sol.matching()
-                        out["dual_lower_bound"] = float(
-                            (y_b.sum() + y_a.sum()) / m
-                        )
-                    _fulfil(req.future, out)
+                    self.stats.retries += tried[0] - 1
+
+    def _dispatch_item(self, item):
+        """Solve one work item and resolve its Futures; on data-dependent
+        poison (checkify NaN trip, injected poisoned dispatch) BISECT into
+        contiguous halves until the offender(s) are isolated and
+        quarantined — composition invariance guarantees the survivors'
+        results are bit-identical to a clean run."""
+        t0 = time.perf_counter()
+        try:
+            batch, level, attempts = self._solve_with_ladder(item)
+        except Exception as e:
+            if _ft.is_poison(e) and len(item.reqs) > 1:
+                left, right = _split_item(item)
+                self._dispatch_item(left)
+                self._dispatch_item(right)
+                return
+            if _ft.is_poison(e):
+                # singleton: this IS the offender — quarantine it
+                req = item.reqs[0]
+                item.shared["quarantined"] = (
+                    item.shared.get("quarantined", 0) + 1)
+                with self._lock:
+                    self.stats.quarantined += 1
+                _fail(req.future, _ft.RequestRejected(
+                    _who(req), 0,
+                    reason=("dispatch-time poison isolated by "
+                            f"bisection: {e}")))
                 self._done(item.reqs)
-            except Exception as e:
-                for req in item.reqs:
-                    _fail(req.future, e)
-                self._done(item.reqs)
+                return
+            for req in item.reqs:
+                _fail(req.future, e)
+            self._done(item.reqs)
+            return
+        try:
+            self._resolve_item(item, batch, t0, level, attempts)
+        except Exception as e:
+            for req in item.reqs:
+                _fail(req.future, e)
+            self._done(item.reqs)
+
+    def _resolve_item(self, item, batch, t0, level, attempts):
+        """Fetch the batch's declared artifacts and resolve every Future
+        (typed Solution views or legacy dicts)."""
+        # O(B)-scalar UNGATED fetch: blocks until the bucket is
+        # solved whatever the tenants' want union declares,
+        # without materializing any big artifact on host
+        batch.phases()
+        if any(r.want is None for r in item.reqs):
+            # legacy solve_s includes the legacy artifact
+            # device->host fetches, as the pre-Solution surface
+            # measured it
+            batch.cost()
+            if item.has_mass:
+                batch.plan()
+            else:
+                batch.matching()
+                batch.duals()
+        solve_s = time.perf_counter() - t0
+        # graft the fault-tolerance accounting onto the batch's stats so
+        # every Solution view (and legacy dict) reports it uniformly
+        batch.stats = dataclasses.replace(
+            batch.stats, attempts=attempts, ladder_level=level,
+            quarantined=int(item.shared.get("quarantined", 0)))
+        st = batch.stats
+        deg = batch.degraded()
+        # one shared (read-only) occupancy curve for the whole
+        # batch, not a copy per request
+        occupancy = st.occupancy
+        waits = [t0 - req.t_submit for req in item.reqs]
+        # all SchedulerStats mutation under the scheduler lock:
+        # stats_dict() readers run concurrently on caller threads,
+        # and the dataclass's += read-modify-writes are not atomic
+        # (the lock-discipline scan in repro.analysis pins this)
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.total_solve_s += solve_s
+            self.stats.dispatches += st.dispatches
+            self.stats.occupancy.append(occupancy)
+            self.stats.requests += len(item.reqs)
+            self.stats.total_wait_s += sum(waits)
+            self.stats.degraded += int(deg.sum())
+            if st.deadline_hit:
+                self.stats.deadline_hits += 1
+        for i, req in enumerate(item.reqs):
+            wait_s = waits[i]
+            if req.want is not None:
+                # typed surface: the Future resolves to the
+                # per-request Solution view (lazy artifacts,
+                # uniform Solution.stats)
+                _fulfil(req.future, batch[i])
+                continue
+            m, n = item.sizes[i]
+            sol = batch[i]
+            out: Dict[str, Any] = {
+                "phases": sol.phases,
+                "batch_size": len(item.reqs),
+                "bucket": item.bucket,
+                "wait_s": wait_s,
+                "solve_s": solve_s,
+                "devices": st.devices,
+                "dispatches": st.dispatches,
+                "occupancy": occupancy,
+                "eps": float(item.eps[i]),
+            }
+            if deg[i]:
+                # new-surface-only key (absent on every converged
+                # result, so pre-deadline consumers see identical dicts)
+                out["degraded"] = True
+            if item.has_mass:
+                out["cost"] = sol.cost
+                out["plan"] = sol.plan()
+            else:
+                y_b, y_a = sol.duals()
+                out["cost"] = sol.cost / m
+                out["matching"] = sol.matching()
+                out["dual_lower_bound"] = float(
+                    (y_b.sum() + y_a.sum()) / m
+                )
+            _fulfil(req.future, out)
+        self._done(item.reqs)
 
     def _done(self, reqs):
         with self._lock:

@@ -1,0 +1,487 @@
+"""Fault-tolerant serving: admission gate, quarantine/bisection, the
+degradation ladder, deadlines, and the chaos harness (serve/faults.py).
+
+The three system-level properties every scenario re-asserts:
+  * no Future is ever stranded — every accepted request resolves
+    (normally, degraded, or exceptionally), whatever fails around it;
+  * no healthy request is lost to a neighbor's fault: survivors of a
+    poisoned bucket resolve BIT-IDENTICAL to a clean run (composition
+    invariance of the batched drivers is what makes quarantine sound);
+  * every degraded (deadline-cut) answer still carries a valid
+    a-posteriori certificate: ``dual_feasible()`` holds and the larger
+    ``additive_gap()`` is reported honestly.
+
+The slow test replays the poisoned-bucket scenario on 8 forced host CPU
+devices (subprocess, same harness as tests/test_distributed.py) so the
+mesh path's quarantine is exercised with real sharding.
+"""
+import json
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import validate as V
+from repro.core.api import ASSIGNMENT, OT, DispatchPolicy, dispatch, solve
+from repro.serve.engine import OTService
+from repro.serve.faults import (
+    FaultInjector,
+    FaultPlan,
+    PoisonedDispatchError,
+    WorkerDeath,
+)
+from repro.serve.ft import (
+    RequestRejected,
+    TransientDispatchError,
+    degradation_ladder,
+    is_poison,
+    is_transient,
+    require_mass_pair,
+    run_with_recovery,
+)
+from repro.serve.scheduler import AsyncOTScheduler
+
+
+def _pts(rng, m, d=2):
+    return rng.standard_normal((int(m), d)).astype(np.float32)
+
+
+def _cloud_batch(seed, n_req, m=10):
+    """Deterministic list of (x, y) point-cloud requests."""
+    rng = np.random.default_rng(seed)
+    return [(_pts(rng, m), _pts(rng, m)) for _ in range(n_req)]
+
+
+# --------------------------------------------------------------------------
+# admission gate (core/validate.py)
+# --------------------------------------------------------------------------
+
+def test_admission_codes_bitmask():
+    b, m, n = 4, 6, 6
+    rng = np.random.default_rng(0)
+    c = np.abs(rng.standard_normal((b, m, n))).astype(np.float32)
+    nu = np.full((b, m), 1.0 / m, np.float32)
+    mu = np.full((b, n), 1.0 / n, np.float32)
+    c[1, 2, 3] = np.nan                      # lane 1: poisoned cost
+    nu[2] *= 3.0                             # lane 2: imbalanced marginals
+    mu[3, 0] = -0.5                          # lane 3: negative mass (and
+    #                                          the removed mass imbalances)
+    codes = V.admission_codes({"c": c, "nu": nu, "mu": mu})
+    assert codes.dtype == np.int32
+    assert codes[0] == V.OK
+    assert codes[1] == V.NONFINITE_COST
+    assert codes[2] == V.MASS_IMBALANCE
+    assert codes[3] & V.NEGATIVE_MASS
+    assert "negative" in V.describe(int(codes[3]))
+    with pytest.raises(RequestRejected) as ei:
+        V.check_admission({"c": c, "nu": nu, "mu": mu})
+    assert ei.value.code != 0
+    # assignment mode only checks cost finiteness
+    codes_a = V.admission_codes({"c": c})
+    assert list(codes_a) == [V.OK, V.NONFINITE_COST, V.OK, V.OK]
+
+
+def test_admission_respects_sizes_padding():
+    """NaN in the PADDING region of a lane must not reject it."""
+    c = np.zeros((2, 4, 4), np.float32)
+    c[0, 3, 3] = np.nan                      # outside lane 0's 2x2 block
+    c[1, 1, 1] = np.nan                      # inside lane 1's block
+    sizes = np.array([[2, 2], [3, 3]], np.int32)
+    codes = V.admission_codes({"c": c}, sizes=sizes)
+    assert list(codes) == [V.OK, V.NONFINITE_COST]
+
+
+def test_dispatch_policy_validate_gate():
+    """DispatchPolicy(validate=True) is all-or-nothing at the direct API."""
+    c = np.abs(np.random.default_rng(1).standard_normal((2, 5, 5)))
+    c = c.astype(np.float32)
+    bad = c.copy()
+    bad[1, 0, 0] = np.inf
+    pol = DispatchPolicy(mode="compact", validate=True)
+    sol = solve(ASSIGNMENT, {"c": c}, 0.1, pol, want=("cost",))
+    assert np.isfinite(np.asarray(sol.cost())).all()
+    with pytest.raises(RequestRejected):
+        solve(ASSIGNMENT, {"c": bad}, 0.1, pol, want=("cost",))
+
+
+# --------------------------------------------------------------------------
+# request validation naming (ft.require_mass_pair — the one home)
+# --------------------------------------------------------------------------
+
+def test_mass_pair_rule_names_the_offender():
+    with pytest.raises(ValueError, match="tenant 'acme'.*only nu"):
+        with AsyncOTScheduler(eps=0.2) as sched:
+            sched.submit(np.ones((4, 2)), np.ones((4, 2)),
+                         nu=np.ones(4), tenant="acme")
+    svc = OTService(eps=0.2)
+    with pytest.raises(ValueError, match="ticket #0.*only mu"):
+        svc.submit(np.ones((4, 2)), np.ones((4, 2)), mu=np.ones(4))
+    assert require_mass_pair(np.ones(3), np.ones(3)) is True
+    assert require_mass_pair(None, None) is False
+
+
+# --------------------------------------------------------------------------
+# failure classification + ladder (ft.py unit behavior)
+# --------------------------------------------------------------------------
+
+def test_failure_taxonomy():
+    assert is_transient(TransientDispatchError("x"))
+    assert not is_transient(PoisonedDispatchError("x"))
+    assert is_poison(PoisonedDispatchError("x"))
+    assert is_poison(FloatingPointError("nan"))
+    assert not is_poison(TransientDispatchError("x"))
+    assert not is_poison(ValueError("x"))
+
+
+def test_run_with_recovery_walks_ladder_and_backoff():
+    ladder = [("mesh", "P0", None), ("compact", "P1", None),
+              ("cpu", "P2", "dev")]
+    calls, naps = [], []
+
+    def attempt(name, pol, dev):
+        calls.append((name, pol, dev))
+        if len(calls) < 4:
+            raise TransientDispatchError("boom")
+        return "ok"
+
+    out, level, total = run_with_recovery(
+        attempt, ladder, retries_per_level=2, backoff_s=0.01,
+        sleep=naps.append)
+    assert (out, level, total) == ("ok", 1, 4)
+    assert [c[0] for c in calls] == ["mesh", "mesh", "compact", "compact"]
+    assert naps == [0.01, 0.02, 0.01]        # exponential per rung
+
+    # poison propagates immediately — never retried
+    def poisoned(name, pol, dev):
+        raise PoisonedDispatchError("data")
+
+    with pytest.raises(PoisonedDispatchError):
+        run_with_recovery(poisoned, ladder, transient=is_transient,
+                          sleep=naps.append)
+
+    # exhausted ladder re-raises the last transient error
+    def always(name, pol, dev):
+        raise TransientDispatchError("always")
+
+    with pytest.raises(TransientDispatchError):
+        run_with_recovery(always, ladder, retries_per_level=1,
+                          backoff_s=0.0)
+
+
+def test_degradation_ladder_shape():
+    mesh_pol = DispatchPolicy(mode="mesh")
+    rungs = degradation_ladder(mesh_pol)
+    assert [r[0] for r in rungs][:2] == ["mesh", "compact"]
+    assert rungs[-1][0] == "cpu" and rungs[-1][2] is not None
+    compact_pol = DispatchPolicy(mode="compact")
+    names = [r[0] for r in degradation_ladder(compact_pol)]
+    assert names[0] == "compact" and "mesh" not in names
+
+
+# --------------------------------------------------------------------------
+# scheduler: quarantine, bisection, retries, deadlines (in-process)
+# --------------------------------------------------------------------------
+
+def test_scheduler_quarantine_survivors_bit_identical():
+    reqs = _cloud_batch(seed=7, n_req=5)
+    with AsyncOTScheduler(eps=0.2, linger_ms=100) as clean:
+        clean_costs = [f.result(timeout=300)["cost"]
+                       for f in [clean.submit(x, y) for x, y in reqs]]
+
+    inj = FaultInjector(FaultPlan(poison_submits=(2,)))
+    with AsyncOTScheduler(eps=0.2, linger_ms=100, faults=inj) as sched:
+        futs = [sched.submit(x, y) for x, y in reqs]
+        sched.flush(timeout=300)
+        assert all(f.done() for f in futs)             # nobody stranded
+        with pytest.raises(RequestRejected, match="request #2"):
+            futs[2].result(timeout=0)
+        for i in (0, 1, 3, 4):                         # healthy neighbors
+            assert futs[i].result(timeout=0)["cost"] == clean_costs[i]
+        sd = sched.stats_dict()
+        assert sd["rejected"] == 1 and sd["requests"] == 4
+    assert inj.log == [("poison", 2)]
+
+
+def test_scheduler_bisection_isolates_dispatch_poison():
+    """Dispatch-time poison (survives admission) is isolated by halving:
+    only the offender is quarantined, every survivor matches clean."""
+    reqs = _cloud_batch(seed=8, n_req=6)
+    with AsyncOTScheduler(eps=0.2, linger_ms=100) as clean:
+        clean_costs = [f.result(timeout=300)["cost"]
+                       for f in [clean.submit(x, y) for x, y in reqs]]
+
+    inj = FaultInjector(FaultPlan(poison_dispatch_of=(3,)))
+    with AsyncOTScheduler(eps=0.2, linger_ms=100, faults=inj,
+                          validate=False) as sched:
+        futs = [sched.submit(x, y) for x, y in reqs]
+        sched.flush(timeout=300)
+        with pytest.raises(RequestRejected, match="bisection"):
+            futs[3].result(timeout=0)
+        for i in (0, 1, 2, 4, 5):
+            assert futs[i].result(timeout=0)["cost"] == clean_costs[i]
+        sd = sched.stats_dict()
+        assert sd["quarantined"] == 1
+        # typed surface carries the accounting too
+        f = sched.submit(*reqs[0], want=("cost",))
+        assert f.result(timeout=300).stats.quarantined == 0
+    assert ("poison-dispatch", 0) in inj.log
+
+
+def test_scheduler_checkify_triggered_bisection():
+    """With validation OFF and the checkify sanitizer ON, a NaN input is
+    caught mid-dispatch (JaxRuntimeError) and bisection still isolates it
+    — the detection path the admission gate normally short-circuits."""
+    from repro.analysis import set_debug_checks
+
+    reqs = _cloud_batch(seed=9, n_req=4)
+    inj = FaultInjector(FaultPlan(poison_submits=(1,)))
+    set_debug_checks(True)
+    try:
+        # compact policy: the checkified stepped cores are dispatched by
+        # the single-device compacting driver
+        with AsyncOTScheduler(
+                eps=0.2, linger_ms=100, faults=inj, validate=False,
+                policy=DispatchPolicy(mode="compact")) as sched:
+            futs = [sched.submit(x, y) for x, y in reqs]
+            sched.flush(timeout=600)
+            assert all(f.done() for f in futs)
+            with pytest.raises(RequestRejected, match="request #1"):
+                futs[1].result(timeout=0)
+            for i in (0, 2, 3):
+                assert np.isfinite(futs[i].result(timeout=0)["cost"])
+            assert sched.stats_dict()["quarantined"] == 1
+    finally:
+        set_debug_checks(None)
+
+
+def test_scheduler_transient_retries_down_ladder():
+    reqs = _cloud_batch(seed=10, n_req=3)
+    with AsyncOTScheduler(eps=0.2, linger_ms=100) as clean:
+        clean_costs = [f.result(timeout=300).cost
+                       for f in [clean.submit(x, y, want=("cost",))
+                                 for x, y in reqs]]
+
+    # 2 transient failures with retries_per_level=2: attempt 1+2 fail on
+    # the configured rung, attempt 3 succeeds one rung down
+    inj = FaultInjector(FaultPlan(transient_dispatches=2))
+    with AsyncOTScheduler(eps=0.2, linger_ms=100, faults=inj,
+                          retries_per_level=2,
+                          retry_backoff_s=0.001) as sched:
+        futs = [sched.submit(x, y, want=("cost",)) for x, y in reqs]
+        sols = [f.result(timeout=300) for f in futs]
+        st = sols[0].stats
+        assert (st.attempts, st.ladder_level) == (3, 1)
+        # bit-identical results despite landing on a different rung (the
+        # distributed driver equals the compacting driver lane-for-lane)
+        for sol, ref in zip(sols, clean_costs):
+            assert sol.cost == ref
+        assert sched.stats_dict()["retries"] == 2
+    assert inj.log == [("transient", 0), ("transient", 1)]
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_death_strands_no_future():
+    """WorkerDeath derives from SystemExit: no recovery path catches it,
+    the dispatch thread dies mid-item (hence the ignored thread-exception
+    warning) — flush() must detect the dead worker and fail, not strand,
+    the in-flight Futures."""
+    reqs = _cloud_batch(seed=11, n_req=3)
+    inj = FaultInjector(FaultPlan(kill_worker_at_dispatch=0))
+    sched = AsyncOTScheduler(eps=0.2, linger_ms=50, faults=inj,
+                             join_timeout_s=5)
+    futs = [sched.submit(x, y) for x, y in reqs]
+    assert sched.flush(timeout=120)
+    for f in futs:                            # failed, not stranded
+        assert f.done()
+        with pytest.raises(RuntimeError):
+            f.result(timeout=0)
+    sched.close()                             # dead (joined) worker: no raise
+    assert not sched._pending
+    assert inj.log == [("kill", 0)]
+
+
+def test_chaos_combined_latency_transient_poison():
+    """Everything at once: latency on every attempt, transient failures,
+    an admission-poisoned lane AND a dispatch-poisoned lane. Every Future
+    resolves; the healthy ones match a clean run bit-identically."""
+    reqs = _cloud_batch(seed=12, n_req=6)
+    with AsyncOTScheduler(eps=0.2, linger_ms=100) as clean:
+        clean_costs = [f.result(timeout=300)["cost"]
+                       for f in [clean.submit(x, y) for x, y in reqs]]
+
+    inj = FaultInjector(FaultPlan(
+        poison_submits=(1,), poison_dispatch_of=(4,),
+        transient_dispatches=1, dispatch_latency_s=0.01))
+    with AsyncOTScheduler(eps=0.2, linger_ms=100, faults=inj,
+                          retries_per_level=2,
+                          retry_backoff_s=0.001) as sched:
+        futs = [sched.submit(x, y) for x, y in reqs]
+        sched.flush(timeout=600)
+        assert all(f.done() for f in futs)
+        for i in (1, 4):
+            with pytest.raises(RequestRejected):
+                futs[i].result(timeout=0)
+        for i in (0, 2, 3, 5):
+            assert futs[i].result(timeout=0)["cost"] == clean_costs[i]
+        sd = sched.stats_dict()
+        assert sd["rejected"] == 1 and sd["quarantined"] == 1
+        assert sd["retries"] >= 1
+    kinds = [k for k, _ in inj.log]
+    assert "poison" in kinds and "poison-dispatch" in kinds
+    assert "transient" in kinds
+
+
+# --------------------------------------------------------------------------
+# deadlines and degraded Solutions
+# --------------------------------------------------------------------------
+
+def test_deadline_degraded_certificate_direct_api():
+    """An already-expired budget cuts after the mandatory first chunk:
+    the answer is flagged degraded, its duals are still eps-feasible
+    (invariant I2 holds at every phase), and its reported gap honestly
+    dominates the converged run's."""
+    rng = np.random.default_rng(13)
+    b, m = 3, 48
+    c = np.abs(rng.standard_normal((b, m, m))).astype(np.float32)
+    nu = np.float32(rng.dirichlet(np.ones(m), size=b))
+    mu = np.float32(rng.dirichlet(np.ones(m), size=b))
+    ins = {"c": c, "nu": nu, "mu": mu}
+    pol = DispatchPolicy(mode="compact", chunk=1)
+    want = ("cost", "duals", "plan")
+    cut = solve(OT, ins, 0.02, pol, want=want, deadline=time.monotonic())
+    full = solve(OT, ins, 0.02, pol, want=want)
+    assert cut.degraded().all()
+    assert not full.degraded().any()
+    assert cut.stats.deadline_hit and not full.stats.deadline_hit
+    assert cut.stats.dispatches < full.stats.dispatches
+    for i in range(b):
+        assert bool(cut[i].dual_feasible())
+        assert bool(full[i].dual_feasible())
+        assert float(cut[i].additive_gap()) >= float(full[i].additive_gap())
+        assert np.isfinite(float(cut[i].additive_gap()))
+    # legacy dicts only grow the key when actually degraded
+    assert cut[0].legacy_dict()["degraded"] is True
+    assert "degraded" not in full[0].legacy_dict()
+
+
+def test_deadline_requires_chunked_driver():
+    c = np.abs(np.random.default_rng(2).standard_normal((2, 6, 6)))
+    with pytest.raises(ValueError, match="deadline"):
+        dispatch(ASSIGNMENT, {"c": np.float32(c)}, 0.1,
+                 policy=DispatchPolicy(mode="lockstep"),
+                 deadline=time.monotonic() + 9.0)
+
+
+def test_deadline_via_scheduler_degrades_not_fails():
+    rng = np.random.default_rng(14)
+    with AsyncOTScheduler(
+            eps=0.02, linger_ms=100,
+            policy=DispatchPolicy(mode="compact", chunk=1)) as sched:
+        futs = [sched.submit(_pts(rng, 48), _pts(rng, 48),
+                             want=("cost", "duals"), deadline=0.0)
+                for _ in range(2)]
+        sols = [f.result(timeout=600) for f in futs]
+        assert all(s.degraded for s in sols)
+        assert all(bool(s.dual_feasible()) for s in sols)
+        assert all(np.isfinite(float(s.additive_gap())) for s in sols)
+        sd = sched.stats_dict()
+        assert sd["degraded"] == 2 and sd["deadline_hits"] >= 1
+    # a generous budget converges normally
+    with AsyncOTScheduler(eps=0.2, linger_ms=0) as sched:
+        f = sched.submit(_pts(rng, 10), _pts(rng, 10), want=("cost",),
+                         deadline=600.0)
+        assert f.result(timeout=600).degraded is False
+
+
+# --------------------------------------------------------------------------
+# synchronous service quarantine
+# --------------------------------------------------------------------------
+
+def test_service_quarantine_survivors_bit_identical():
+    reqs = _cloud_batch(seed=15, n_req=4)
+    clean = OTService(eps=0.2)
+    for x, y in reqs:
+        clean.submit(x, y)
+    clean_costs = [r["cost"] for r in clean.run_batch()]
+
+    svc = OTService(eps=0.2)
+    for i, (x, y) in enumerate(reqs):
+        if i == 2:
+            x = x.copy()
+            x[0, 0] = np.nan
+        svc.submit(x, y)
+    res = svc.run_batch()
+    assert isinstance(res[2], RequestRejected) and res[2].code != 0
+    for i in (0, 1, 3):
+        assert res[i]["cost"] == clean_costs[i]
+    # one-shot convenience raises instead of returning the exception
+    bad = reqs[0][0].copy()
+    bad[0, 0] = np.inf
+    with pytest.raises(RequestRejected):
+        OTService(eps=0.2).distance(bad, reqs[0][1])
+
+
+# --------------------------------------------------------------------------
+# 8-device mesh quarantine (subprocess, slow)
+# --------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+
+from repro.serve.faults import FaultInjector, FaultPlan
+from repro.serve.ft import RequestRejected
+from repro.serve.scheduler import AsyncOTScheduler
+
+out = {"devices": jax.device_count()}
+rng = np.random.default_rng(42)
+reqs = [(np.float32(rng.standard_normal((12, 2))),
+         np.float32(rng.standard_normal((12, 2)))) for _ in range(16)]
+
+with AsyncOTScheduler(eps=0.2, linger_ms=200) as clean:
+    clean_costs = [f.result(timeout=900)["cost"]
+                   for f in [clean.submit(x, y) for x, y in reqs]]
+
+inj = FaultInjector(FaultPlan(poison_submits=(5,), poison_dispatch_of=(9,)))
+with AsyncOTScheduler(eps=0.2, linger_ms=200, faults=inj,
+                      join_timeout_s=60) as sched:
+    futs = [sched.submit(x, y) for x, y in reqs]
+    sched.flush(timeout=900)
+    out["all_done"] = all(f.done() for f in futs)
+    rejected = sorted(i for i, f in enumerate(futs)
+                      if isinstance(f.exception(timeout=0), RequestRejected))
+    out["rejected"] = rejected
+    out["survivors_identical"] = all(
+        futs[i].result(timeout=0)["cost"] == clean_costs[i]
+        for i in range(16) if i not in (5, 9))
+    sd = sched.stats_dict()
+    out["stats"] = {k: sd[k] for k in ("rejected", "quarantined")}
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_quarantine_eight_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # skip the TPU-backend probe (60s timeout in this image)
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["devices"] == 8, out
+    assert out["all_done"], out
+    assert out["rejected"] == [5, 9], out
+    assert out["survivors_identical"], out
+    assert out["stats"] == {"rejected": 1, "quarantined": 1}, out

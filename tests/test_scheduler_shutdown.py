@@ -145,6 +145,41 @@ def test_dead_dispatcher_full_work_queue_never_wedges_collate():
     assert not sched._pending
 
 
+def test_close_raises_on_hung_worker():
+    """A worker that is still ALIVE after the join timeout (hung, not
+    dead) must not be silently leaked: close() fails the pending Futures
+    and raises a RuntimeError naming the hung worker."""
+    rng = np.random.default_rng(5)
+    sched = AsyncOTScheduler(eps=0.2, linger_ms=0, join_timeout_s=0.3)
+    sched.submit(_pts(rng, 8), _pts(rng, 8)).result(timeout=300)
+
+    # retire the real dispatch worker, then swap in a stand-in that never
+    # exits: close()'s join times out with the thread still alive — the
+    # hung-worker case (vs the DEAD-worker case covered above)
+    sched._work_q.put(None)
+    sched._dispatch_t.join(timeout=10)
+    assert not sched._dispatch_t.is_alive()
+    hang = threading.Event()
+    dummy = threading.Thread(target=hang.wait, name="ot-dispatch",
+                             daemon=True)
+    dummy.start()
+    sched._dispatch_t = dummy
+    try:
+        fut = sched.submit(_pts(rng, 9), _pts(rng, 9))
+        # parked in the handoff queue where only the "hung" dispatcher
+        # would ever see it
+        time.sleep(0.2)
+        with pytest.raises(RuntimeError, match="ot-dispatch"):
+            sched.close()
+        assert fut.done()                   # failed, not stranded
+        with pytest.raises(RuntimeError):
+            fut.result(timeout=0)
+        assert not sched._pending
+        sched.close()                       # second close is a no-op
+    finally:
+        hang.set()
+
+
 def test_close_idempotent_and_reentrant():
     sched = AsyncOTScheduler(eps=0.2)
     sched.close()

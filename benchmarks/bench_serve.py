@@ -1,0 +1,241 @@
+"""Serving saturation: latency/throughput vs offered load through
+``AsyncOTScheduler``, and what the observability layer costs when no
+sink is attached.
+
+  * saturation — a paced open-loop client submits point-set requests at
+    a fixed offered rate (a fraction of the scheduler's measured burst
+    capacity); per-request latency is taken submit -> Future-done on the
+    one monotonic clock (``repro.obs.now``). Reported per load level:
+    p50/p99 latency and achieved throughput (``instances_per_s``, the
+    row benchmarks/run.py --diff gates at >20% regressions). Past
+    saturation (offered > capacity) achieved throughput flattens while
+    p99 grows with queue depth — the committed BENCH_serve.json keeps
+    one sub-capacity, one near-capacity, and one past-capacity row.
+  * obs overhead — the no-sink observability budget (<2%, asserted).
+    Like bench_faults.py's admission budget, the asserted number is a
+    DETERMINISTIC ratio: the per-request observability work (spans,
+    events, counter/histogram updates against a sink-less registry) is
+    replayed in isolation and timed, then divided by the healthy
+    per-request wall time. End-to-end on-vs-off wall clock is recorded
+    as context only — on a shared runner its noise exceeds the
+    microseconds under test.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--full|--tiny]
+
+``--json OUT`` (and benchmarks/run.py) writes BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.obs import InMemorySink, MetricsRegistry, Tracer
+from repro.obs import now as _now
+from repro.serve.scheduler import AsyncOTScheduler
+from .common import emit
+
+RECORDS: list = []
+
+#: the no-sink observability layer may cost at most this fraction of the
+#: healthy per-request wall time (asserted on every run, incl. --tiny)
+OVERHEAD_BUDGET = 0.02
+
+
+def record(name, seconds, derived="", **extra):
+    emit(name, seconds, derived)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived, **extra})
+
+
+def write_json(path="BENCH_serve.json"):
+    payload = {
+        "schema": 1,
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
+
+
+def _pairs(count, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(np.float32(rng.standard_normal((n, 2))),
+             np.float32(rng.standard_normal((n, 2))))
+            for _ in range(count)]
+
+
+def _paced_run(pairs, rate, eps, sinks=(), max_batch=32, linger_ms=2.0):
+    """Open-loop paced client: request i is submitted at ``t0 + i/rate``
+    regardless of completions (so queueing delay shows up in latency,
+    which is what saturation means). Returns (wall_s, latencies[])."""
+    lats: dict = {}
+    with AsyncOTScheduler(eps=eps, max_batch=max_batch,
+                          linger_ms=linger_ms, sinks=sinks) as sched:
+        t0 = _now()
+        futs = []
+        for i, (x, y) in enumerate(pairs):
+            target = t0 + i / rate
+            while True:
+                dt = target - _now()
+                if dt <= 0:
+                    break
+                time.sleep(min(dt, 0.01))
+            t_sub = _now()
+            fut = sched.submit(x, y)
+            fut.add_done_callback(
+                lambda _f, i=i, t=t_sub: lats.__setitem__(i, _now() - t))
+            futs.append(fut)
+        assert sched.flush(timeout=600)
+        for f in futs:
+            f.result(timeout=60)
+        wall = _now() - t0
+    lat = np.array([lats[i] for i in range(len(pairs))])
+    return wall, lat
+
+
+def _warm_all_batch_sizes(n, eps, max_batch):
+    """Compile every program a paced run can hit: the collate worker
+    drains ARBITRARY batch sizes 1..max_batch depending on arrival
+    phasing, and each novel batch size is a novel compiled shape — an
+    unwarmed one would bill its compile to whichever load level hits it
+    first. A long linger makes each warm group collate as one batch."""
+    pairs = _pairs(max_batch, n, seed=97 * n + max_batch)
+    with AsyncOTScheduler(eps=eps, max_batch=max_batch,
+                          linger_ms=100.0) as sched:
+        for b in range(1, max_batch + 1):
+            futs = [sched.submit(x, y) for x, y in pairs[:b]]
+            assert sched.flush(timeout=600)
+            for f in futs:
+                f.result(timeout=60)
+
+
+def run_saturation(count, n, eps, fracs=(0.5, 0.9, 1.5), max_batch=32):
+    """Latency/throughput at ``fracs`` of measured burst capacity."""
+    pairs = _pairs(count, n, seed=count + n)
+    _warm_all_batch_sizes(n, eps, max_batch)
+    # burst capacity: all requests offered at once -> the service rate
+    wall, _ = _paced_run(pairs, 1e9, eps, max_batch=max_batch)
+    capacity = count / wall
+    record(f"serve/capacity/B={count}/n={n}/eps={eps}", wall / count,
+           f"inst_per_s={capacity:.1f}", instances_per_s=capacity)
+    for frac in fracs:
+        rate = capacity * frac
+        wall, lat = _paced_run(pairs, rate, eps, max_batch=max_batch)
+        p50, p99 = np.percentile(lat, [50, 99])
+        achieved = count / wall
+        extra = dict(offered_per_s=rate, offered_fraction=frac,
+                     p50_latency_s=float(p50), p99_latency_s=float(p99),
+                     achieved_per_s=achieved)
+        if frac <= 1.0:
+            # only sub-capacity rows enter the --diff throughput gate:
+            # past saturation, achieved throughput is queue-dynamics
+            # noise (the capacity row above gates the service rate; the
+            # past-capacity row's information is its latency curve)
+            extra["instances_per_s"] = achieved
+        record(
+            f"serve/load/B={count}/n={n}/eps={eps}/offered={frac:.1f}x",
+            float(lat.mean()),
+            f"offered_per_s={rate:.1f};achieved_per_s={achieved:.1f};"
+            f"p50_ms={p50 * 1e3:.1f};p99_ms={p99 * 1e3:.1f}",
+            **extra,
+        )
+    return capacity
+
+
+def _obs_ops_once(tr, c_req, h_wait, h_solve):
+    """The per-request observability work on the serving path, replayed
+    against a sink-less registry: root span + submit event (submit side),
+    wait/solve observations + counters + span end (resolve side), and
+    one shared solve-span + chunk event amortized per request."""
+    root = tr.start("request", trace_id="req-bench", seq=0, tenant=None)
+    tr.event("submit", trace_id="req-bench", parent_id=root.span_id,
+             seq=0, tenant=None)
+    with tr.span("solve", trace_id="bucket-bench"):
+        tr.event("chunk", trace_id="bucket-bench", bucket=32, live=1,
+                 chunk_s=0.0, phases=1, compiled=0)
+    c_req.add(1)
+    h_wait.observe(0.001)
+    h_solve.observe(0.01)
+    root.end(outcome="resolved", bucket_trace="bucket-bench",
+             wait_s=0.001, solve_s=0.01, degraded=False)
+
+
+def run_obs_overhead(count, n, eps, reps=2000):
+    """Assert the no-sink observability budget: replayed per-request obs
+    ops cost / healthy per-request wall time < OVERHEAD_BUDGET."""
+    pairs = _pairs(count, n, seed=7 * n + count)
+    _paced_run(pairs, 1e9, eps)                 # warm compile
+    wall, _ = _paced_run(pairs, 1e9, eps)       # healthy path (no sink)
+    healthy_per_req = wall / count
+    wall_sink, _ = _paced_run(pairs, 1e9, eps,
+                              sinks=(InMemorySink(),))   # context only
+
+    reg = MetricsRegistry()                     # no sinks: the hot path
+    tr = Tracer(reg)
+    c_req = reg.counter("scheduler.requests")
+    h_wait = reg.histogram("scheduler.wait_s")
+    h_solve = reg.histogram("scheduler.solve_s")
+    _obs_ops_once(tr, c_req, h_wait, h_solve)   # warm
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _obs_ops_once(tr, c_req, h_wait, h_solve)
+        best = min(best, (time.perf_counter() - t0) / reps)
+    overhead = best / healthy_per_req
+    assert overhead < OVERHEAD_BUDGET, (
+        f"no-sink observability costs {overhead:.2%} of the healthy "
+        f"per-request time (budget {OVERHEAD_BUDGET:.0%}) at "
+        f"B={count} n={n}")
+    record(
+        f"serve/obs_overhead/B={count}/n={n}/eps={eps}", best,
+        f"obs_us_per_req={best * 1e6:.1f};"
+        f"healthy_us_per_req={healthy_per_req * 1e6:.1f};"
+        f"overhead={overhead:.3%};budget={OVERHEAD_BUDGET:.0%};"
+        f"inmem_sink_wall_ratio={wall_sink / wall:.2f}x",
+        obs_s_per_request=best,
+        healthy_s_per_request=healthy_per_req,
+        overhead_fraction=overhead,
+        sink_wall_ratio=wall_sink / wall,
+    )
+    return overhead
+
+
+def run(full: bool = False, tiny: bool = False):
+    """Returns the record list (also kept in RECORDS for write_json)."""
+    if tiny:
+        # CI smoke: 3 load levels + the asserted overhead budget in
+        # seconds on a CPU runner
+        run_saturation(12, 6, 0.25, fracs=(0.5, 1.0, 2.0), max_batch=8)
+        run_obs_overhead(8, 6, 0.25, reps=500)
+        return RECORDS
+    run_saturation(32, 12, 0.2, fracs=(0.5, 0.9, 1.5))
+    run_obs_overhead(16, 12, 0.2)
+    if full:
+        run_saturation(64, 16, 0.1, fracs=(0.5, 0.9, 1.5))
+    return RECORDS
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: seconds on a CPU runner")
+    ap.add_argument("--json", default="",
+                    help="machine-readable output path (off by default so "
+                         "ad-hoc/tiny runs don't overwrite the committed "
+                         "BENCH_serve.json baseline; benchmarks/run.py "
+                         "writes the canonical one)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, tiny=args.tiny)
+    if args.json:
+        write_json(args.json)

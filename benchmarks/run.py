@@ -2,7 +2,7 @@
 CSV. ``python -m benchmarks.run [--full]`` (full = paper-scale grids).
 
 ``--diff`` compares a fresh run of the JSON-emitting families (batched,
-sharded) against the committed ``BENCH_batched.json``/``BENCH_sharded.json``
+sharded, solution, faults, serve) against the committed ``BENCH_*.json``
 instead of overwriting them, flags any >20% instances/sec regression, and
 exits nonzero if one is found — the perf gate for driver refactors.
 """
@@ -81,7 +81,8 @@ def main() -> None:
                     help="paper-scale grids (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: synthetic,mnist,phases,"
-                         "routing,ot,batched,sharded")
+                         "routing,ot,batched,sharded,solution,faults,"
+                         "serve")
     ap.add_argument("--diff", action="store_true",
                     help="compare fresh batched/sharded results against "
                          "the committed BENCH_*.json (no overwrite); exit "
@@ -90,7 +91,7 @@ def main() -> None:
 
     from . import bench_synthetic, bench_mnist, bench_phases, \
         bench_routing, bench_ot, bench_batched, bench_sharded, \
-        bench_solution, bench_faults
+        bench_solution, bench_faults, bench_serve
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
@@ -102,15 +103,17 @@ def main() -> None:
         "sharded": bench_sharded.run,       # mesh-distributed dispatch
         "solution": bench_solution.run,     # typed result surface fetch
         "faults": bench_faults.run,         # admission gate + recovery
+        "serve": bench_serve.run,           # saturation + obs overhead
     }
     if args.diff and args.only is None:
         # diff mode only makes sense for the JSON-emitting families
-        args.only = "batched,sharded,solution,faults"
+        args.only = "batched,sharded,solution,faults,serve"
     only = set(args.only.split(",")) if args.only else set(benches)
     if args.diff and not ({"batched", "sharded", "solution",
-                           "faults"} & only):
+                           "faults", "serve"} & only):
         ap.error("--diff compares the JSON-emitting families; include "
-                 "batched, sharded, solution and/or faults in --only")
+                 "batched, sharded, solution, faults and/or serve in "
+                 "--only")
     regressions: list = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -151,6 +154,14 @@ def main() -> None:
                                             "BENCH_faults.json")
             else:
                 bench_faults.write_json("BENCH_faults.json")
+        if name == "serve":
+            # p50/p99 latency + throughput vs offered load through the
+            # async scheduler, and the asserted <2% no-sink obs budget
+            if args.diff:
+                regressions += diff_records(bench_serve.RECORDS,
+                                            "BENCH_serve.json")
+            else:
+                bench_serve.write_json("BENCH_serve.json")
     if args.diff:
         write_step_summary(regressions)
         if regressions:

@@ -282,6 +282,72 @@ def main():
           f"retries={sd['retries']})")
     assert sum(o.startswith("rejected") for o in outcomes) == 1
 
+    # 14. live observability (repro.obs): attach a sink and the whole
+    #     request path streams out as structured events — per-request
+    #     root spans (submit -> resolve), per-bucket collate/admission/
+    #     dispatch/solve/artifact-fetch spans, the chunked drivers'
+    #     per-chunk events, and the fault events from section 13
+    #     (rejected/retry/ladder/quarantine/deadline-cut/degraded).
+    #     stats_dict() is a VIEW over the same registry the sink streams
+    #     from, so the numbers can never disagree; with no sink attached
+    #     the whole layer costs <2% (benchmarks/bench_serve.py asserts
+    #     the budget). JSONLSink writes one JSON object per line —
+    #     here we demo the in-memory sink and render a span tree.
+    import json as _json
+    import tempfile as _tempfile
+
+    from repro.obs import InMemorySink, JSONLSink, span_tree
+
+    mem = InMemorySink()
+    with _tempfile.TemporaryDirectory() as tmp:
+        jpath = f"{tmp}/serve.jsonl"
+        jsink = JSONLSink(jpath)
+        with AsyncOTScheduler(eps=0.1, linger_ms=50,
+                              sinks=(mem, jsink)) as sched:
+            fut = sched.submit(pts[0], pts[1], tenant="healthy")
+            fut.result(timeout=300)
+            sched.flush()
+        jsink.close()
+        rows = [_json.loads(ln) for ln in open(jpath)]
+    print(f"obs: JSONL sink wrote {len(rows)} rows "
+          f"({sum(r['kind'] == 'event' for r in rows)} events, "
+          f"{sum(r['kind'] == 'counter' for r in rows)} counter "
+          f"increments)")
+    (root,) = mem.spans("request")
+    print("obs: healthy request span tree (one monotonic clock):")
+    for ln in span_tree(mem.spans(), "req-0").splitlines():
+        print(f"  {ln}")
+    for ln in span_tree(mem.spans(), root["bucket_trace"]).splitlines():
+        print(f"  {ln}")
+    chunk = mem.events("chunk")
+    print(f"obs: {len(chunk)} driver chunk event(s), e.g. live={{"
+          f"{', '.join(str(e['live']) for e in chunk)}}} "
+          f"compiled_delta={chunk[0]['compiled']}")
+
+    #     the same stream captures faults: re-run section 13's poisoned
+    #     tenant with a sink attached and the rejection (plus any
+    #     retries/ladder drops) appears as events alongside the spans.
+    mem2 = InMemorySink()
+    inj2 = FaultInjector(FaultPlan(poison_submits=(0,),
+                                   transient_dispatches=1))
+    with AsyncOTScheduler(eps=0.1, linger_ms=50, faults=inj2,
+                          sinks=(mem2,)) as sched:
+        bad = sched.submit(pts[0], pts[1], tenant="poisoned")
+        ok = sched.submit(pts[2], pts[3], tenant="healthy")
+        try:
+            bad.result(timeout=300)
+        except RequestRejected:
+            pass
+        ok.result(timeout=300)
+        sched.flush()
+    rej = mem2.events("rejected")
+    ret = mem2.events("retry")
+    outcomes14 = sorted(s["outcome"] for s in mem2.spans("request"))
+    print(f"obs: fault run streamed {len(rej)} rejected event(s), "
+          f"{sum(e['n'] for e in ret)} retry(ies); "
+          f"request outcomes={outcomes14}")
+    assert outcomes14 == ["rejected", "resolved"]
+
 
 if __name__ == "__main__":
     main()

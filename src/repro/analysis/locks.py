@@ -11,10 +11,20 @@ module pins the discipline two ways:
     ``self.<field>`` access in the class body to its lexically enclosing
     ``with self._lock:`` block and flags unguarded ones. ``__init__`` is
     exempt (no concurrent reader exists before the workers start).
-  * a RUNTIME proxy (:class:`GuardedAttrProxy` via
-    :func:`instrument_scheduler`): wraps the shared stats object so every
-    attribute touch asserts lock ownership (``Condition._is_owned``),
-    recording violations for the stress test to assert empty.
+  * a RUNTIME proxy (:class:`GuardedAttrProxy`): wraps a shared object
+    so every attribute touch asserts lock ownership
+    (``Condition._is_owned``), recording violations for stress tests to
+    assert empty.
+
+Since the observability rework, scheduler *stats* live in lock-free
+``repro.obs`` instruments (per-thread cells) rather than under
+``_lock`` — the scan covers the remaining locked scheduler state plus
+the locked pieces of ``repro.obs`` itself (``MetricsRegistry``'s
+instrument table, ``JSONLSink``'s file handle, ``History``'s ring,
+``TraceCapture``'s arming state).  The deliberately lock-free
+instruments (``Counter``/``Gauge``/``Histogram``, ``InMemorySink``,
+``Tracer``) are recorded as empty-field exemption targets so the audit
+names WHY each one needs no lock.
 
 ``serve/engine.py``'s ``Engine``/``OTService`` are single-threaded by
 contract (no worker threads, no lock); they are scanned with an empty
@@ -131,9 +141,12 @@ def scan_class_source(source: str, target: LockTarget) -> List[Finding]:
 
 
 def default_targets() -> List[LockTarget]:
+    from repro.obs import metrics, profiler, tracing
     from repro.serve import engine, scheduler
 
-    shared = ("stats", "_outstanding", "_pending", "_closed",
+    # NOTE: scheduler stats moved off this list — they are lock-free
+    # repro.obs instruments now (per-thread cells), not locked state.
+    shared = ("_outstanding", "_pending", "_closed",
               "_close_called", "_submit_seq")
     return [
         LockTarget(path=scheduler.__file__, class_name="AsyncOTScheduler",
@@ -143,7 +156,50 @@ def default_targets() -> List[LockTarget]:
                    note="single-threaded by contract (no worker threads)"),
         LockTarget(path=engine.__file__, class_name="OTService", fields=(),
                    lock_attr=None,
-                   note="single-threaded by contract (no worker threads)"),
+                   note="single-threaded by contract (no worker threads; "
+                        "stats live in lock-free obs instruments)"),
+        # repro.obs: the locked pieces...
+        LockTarget(path=metrics.__file__, class_name="MetricsRegistry",
+                   fields=("_instruments",), lock_attr="_lock",
+                   note="lock guards instrument creation only; "
+                        "observations go through lock-free instruments"),
+        LockTarget(path=metrics.__file__, class_name="JSONLSink",
+                   fields=("_fh",), lock_attr="_lock",
+                   note="serialization outside the lock, write under it"),
+        LockTarget(path=metrics.__file__, class_name="History",
+                   fields=("_items",), lock_attr="_lock"),
+        LockTarget(path=profiler.__file__, class_name="TraceCapture",
+                   fields=("_dir", "_match", "_remaining", "_env_checked"),
+                   lock_attr="_lock",
+                   exempt_methods=("__init__", "_check_env_locked"),
+                   note="_check_env_locked is called with _lock held by "
+                        "every caller (locked-suffix naming convention)"),
+        # ...and the deliberately lock-free pieces, recorded as audited
+        # exemptions so the scan output names why each needs no lock.
+        LockTarget(path=metrics.__file__, class_name="Counter", fields=(),
+                   lock_attr=None,
+                   note="per-thread cells; single-key dict update is "
+                        "atomic under the GIL"),
+        LockTarget(path=metrics.__file__, class_name="Gauge", fields=(),
+                   lock_attr=None,
+                   note="single attribute rebind is atomic"),
+        LockTarget(path=metrics.__file__, class_name="Histogram", fields=(),
+                   lock_attr=None,
+                   note="per-thread cells; aggregation copies the cell map"),
+        LockTarget(path=metrics.__file__, class_name="InMemorySink",
+                   fields=(), lock_attr=None,
+                   note="deque.append is atomic; queries snapshot via "
+                        "list() before filtering"),
+        LockTarget(path=metrics.__file__, class_name="NullSink", fields=(),
+                   lock_attr=None, note="stateless"),
+        LockTarget(path=tracing.__file__, class_name="Tracer", fields=(),
+                   lock_attr=None,
+                   note="immutable after construction; span ids from "
+                        "itertools.count (atomic in CPython)"),
+        LockTarget(path=tracing.__file__, class_name="Span", fields=(),
+                   lock_attr=None,
+                   note="mutated only by the thread that ends it; emitted "
+                        "once on end()"),
     ]
 
 
@@ -192,15 +248,3 @@ class GuardedAttrProxy:
     def __setattr__(self, attr: str, value: Any) -> None:
         self._check(attr, "set")
         setattr(object.__getattribute__(self, "_obj"), attr, value)
-
-
-def instrument_scheduler(sched: Any) -> Tuple[List[LockViolation],
-                                              Any]:
-    """Swap ``sched.stats`` for a guarded proxy; returns the (live)
-    violation list and the original stats object (reassign it to
-    de-instrument)."""
-    violations: List[LockViolation] = []
-    original = sched.stats
-    with sched._lock:
-        sched.stats = GuardedAttrProxy(original, sched._lock, violations)
-    return violations, original

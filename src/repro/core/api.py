@@ -135,6 +135,7 @@ def dispatch(
     policy: Optional[DispatchPolicy] = None,
     keep_state: bool = False,
     deadline: Optional[float] = None,
+    obs=None,
     **prep_kw,
 ):
     """Solve ONE pre-batched bucket (dict of (B, ...) operands) under
@@ -143,9 +144,11 @@ def dispatch(
     CompactionStats for compact (and for lockstep with
     ``keep_state=True``, which stashes the pre-completion state on a
     minimal stats object), DistributedStats for mesh. ``deadline`` is an
-    absolute ``time.monotonic()`` wall-clock budget for the chunked
-    drivers (best-so-far cut; lockstep has no chunk loop to cut, so the
-    combination raises)."""
+    absolute monotonic-clock (``repro.obs.now``) wall-clock budget for
+    the chunked drivers (best-so-far cut; lockstep has no chunk loop to
+    cut, so the combination raises). ``obs`` threads a per-chunk event
+    emitter (``repro.obs.Tracer``) into the chunked drivers; lockstep
+    ignores it (one unbounded program, nothing per-chunk to report)."""
     policy = policy or DispatchPolicy()
     mode = policy.resolved_mode()
     if policy.validate:
@@ -174,12 +177,12 @@ def dispatch(
         return solve_compacting(
             spec, inputs, eps, sizes=sizes, k=k,
             guaranteed=policy.guaranteed, keep_state=keep_state,
-            deadline=deadline, **prep_kw)
+            deadline=deadline, obs=obs, **prep_kw)
     if mode == "mesh":
         return solve_mesh(
             spec, inputs, eps, policy.mesh, sizes=sizes, k=k,
             guaranteed=policy.guaranteed, placement=policy.placement,
-            keep_state=keep_state, deadline=deadline, **prep_kw)
+            keep_state=keep_state, deadline=deadline, obs=obs, **prep_kw)
     raise ValueError(f"unknown dispatch mode {mode!r}")
 
 
@@ -216,6 +219,7 @@ def solve(
     keep_state: bool = False,
     want: Optional[Sequence[str]] = None,
     deadline: Optional[float] = None,
+    obs=None,
     **prep_kw,
 ) -> Union[SolutionBatch, List[Solution], Tuple[Any, Any], List[dict]]:
     """The front door. Two input forms:
@@ -249,6 +253,10 @@ def solve(
     ``Solution.degraded=True`` — still primal-feasible with eps-feasible
     duals, so ``dual_feasible()``/``additive_gap()`` re-validate the
     partial answer per request.
+
+    ``obs`` threads an optional event emitter (``repro.obs.Tracer``) into
+    the chunked drivers for per-chunk phase/occupancy/compile-cache
+    events; results are bit-identical with or without it.
     """
     policy = policy or DispatchPolicy()
     if want is None:
@@ -269,15 +277,15 @@ def solve(
         if want is None:
             return dispatch(spec, instances, eps, sizes=sizes,
                             policy=policy, keep_state=keep_state,
-                            deadline=deadline, **prep_kw)
+                            deadline=deadline, obs=obs, **prep_kw)
         r, stats = dispatch(spec, instances, eps, sizes=sizes,
                             policy=policy, keep_state=keep_state,
-                            deadline=deadline, **prep_kw)
+                            deadline=deadline, obs=obs, **prep_kw)
         return _wrap_solution(spec, instances, eps, policy, r, stats,
                               sizes=sizes, want=want)
     sols = _solve_ragged(spec, list(instances), eps, policy,
                          keep_state=keep_state, want=want,
-                         deadline=deadline, **prep_kw)
+                         deadline=deadline, obs=obs, **prep_kw)
     if want is not None:
         return sols
     # legacy adapter: the historical per-instance dicts, produced from the
@@ -296,6 +304,7 @@ def _solve_ragged(spec, instances: list, eps, policy: DispatchPolicy,
                   *, keep_state: bool = False,
                   want: Optional[Tuple[str, ...]] = None,
                   deadline: Optional[float] = None,
+                  obs=None,
                   **prep_kw) -> List[Solution]:
     from .batched import DEFAULT_BUCKETS, bucket_instances
 
@@ -321,7 +330,7 @@ def _solve_ragged(spec, instances: list, eps, policy: DispatchPolicy,
             sz = np.asarray([shapes[i] for i in idx], np.int32)
             r, stats = dispatch(spec, inputs, eps_arr[idx], sizes=sz,
                                 policy=policy, keep_state=keep_state,
-                                deadline=deadline, **prep_kw)
+                                deadline=deadline, obs=obs, **prep_kw)
             batch = _wrap_solution(spec, inputs, eps_arr[idx], policy, r,
                                    stats, sizes=sz, want=want,
                                    bucket=grp.key)

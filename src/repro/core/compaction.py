@@ -42,7 +42,6 @@ what compaction absorbs).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Any, List, Optional, Tuple
@@ -51,6 +50,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the serving stack's one monotonic clock (repro.obs.metrics.now): chunk
+# timing and deadline checks here share a time base with the scheduler's
+# spans, submit timestamps, and per-request deadlines
+from ..obs.metrics import now as _now
 from .problem import ASSIGNMENT, OT, pow2_at_least
 
 DEFAULT_CHUNK = 8
@@ -108,7 +111,8 @@ def _scatter(buf, tree, idx):
 
 
 def _drive(data, state, run_fn, conv_fn, max_chunks: int,
-           stats: CompactionStats, deadline: Optional[float] = None):
+           stats: CompactionStats, deadline: Optional[float] = None,
+           obs=None):
     """Generic compacting loop over a per-instance ``data`` pytree (solver
     inputs: integer costs, thresholds, caps) and a solver-state pytree.
 
@@ -130,8 +134,20 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     already synced) plus the measured duration of the chunk that just ran
     against it, and stops dispatching when the NEXT chunk would overrun,
     flushing best-so-far state and recording the still-unconverged lanes
-    on ``stats``. At least one chunk always runs (progress guarantee)."""
+    on ``stats``. At least one chunk always runs (progress guarantee).
+
+    ``obs`` is an optional event emitter (duck-typed
+    ``repro.obs.Tracer``): one ``"chunk"`` event per dispatch carrying
+    the batch bucket, live-lane count, wall time, max phase delta, and
+    the chunk program's jit-cache delta (nonzero exactly when this
+    dispatch compiled), plus a ``"deadline-cut"`` event when the budget
+    stops the loop. Everything emitted is a host scalar the loop already
+    had — observability adds no device->host syncs (the sync audit holds
+    this loop to the single conv fetch either way)."""
     idx = np.arange(stats.dispatched_batch)
+    cache_fn = getattr(run_fn, "_cache_size", None) if obs is not None \
+        else None
+    cache_prev = cache_fn() if cache_fn is not None else 0
     # The result buffer is born at the FIRST flush (where ``idx`` is still
     # the identity, so the flush is just the current state) rather than
     # aliasing the initial state: run_fn donates its state argument, and a
@@ -140,24 +156,29 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
     cur_d, cur_s = data, state
     ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
     for _ in range(max_chunks):
-        t_chunk = time.monotonic()
+        t_chunk = _now()
         cur_s = run_fn(cur_d, cur_s)
         stats.dispatches += 1
         conv, ph = jax.device_get(conv_fn(cur_d, cur_s))
-        t_chunk = time.monotonic() - t_chunk
+        t_chunk = _now() - t_chunk
         ph = ph.astype(np.int64)
         bb = int(conv.shape[0])
         # the vmapped while_loop runs every lane for the max phase delta
-        stats.slot_phases += bb * int((ph - ph_prev).max(initial=0))
+        dph = int((ph - ph_prev).max(initial=0))
+        stats.slot_phases += bb * dph
         ph_prev = ph
         live = int((~conv).sum())
         stats.occupancy.append((bb, live))
+        if obs is not None:
+            cache_now = cache_fn() if cache_fn is not None else 0
+            obs.event("chunk", bucket=bb, live=live, chunk_s=t_chunk,
+                      phases=dph, compiled=cache_now - cache_prev)
+            cache_prev = cache_now
         if live == 0:
             buf = cur_s if buf is None else _scatter(buf, cur_s,
                                                      jnp.asarray(idx))
             break
-        if deadline is not None and \
-                time.monotonic() + t_chunk >= deadline:
+        if deadline is not None and _now() + t_chunk >= deadline:
             # the earliest deadline is at risk: another chunk (estimated
             # by the one that just ran) would overrun it. Flush best-so-
             # far state and mark the lanes that had not yet terminated —
@@ -169,6 +190,8 @@ def _drive(data, state, run_fn, conv_fn, max_chunks: int,
             un = np.zeros((stats.dispatched_batch,), bool)
             un[idx[~conv]] = True
             stats.unconverged = un
+            if obs is not None:
+                obs.event("deadline-cut", bucket=bb, live=live)
             buf = cur_s if buf is None else _scatter(buf, cur_s,
                                                      jnp.asarray(idx))
             break
@@ -244,6 +267,7 @@ def solve_compacting(
     guaranteed: bool = False,
     keep_state: bool = False,
     deadline: Optional[float] = None,
+    obs=None,
     **prep_kw,
 ):
     """The generic compacting driver: solve a (B, M, N) batch of ``spec``
@@ -259,9 +283,13 @@ def solve_compacting(
       keep_state: stash the final pre-completion integer state on the
         returned stats (``final_state``) for feasibility certificates;
         off by default so serving paths don't retain an extra state copy.
-      deadline: absolute ``time.monotonic()`` budget; the chunk loop stops
-        dispatching when the next chunk would overrun it and returns
-        best-so-far answers (``stats.deadline_hit`` / ``unconverged``).
+      deadline: absolute monotonic-clock (``repro.obs.now``) budget; the
+        chunk loop stops dispatching when the next chunk would overrun it
+        and returns best-so-far answers (``stats.deadline_hit`` /
+        ``unconverged``).
+      obs: optional event emitter (``repro.obs.Tracer``): per-chunk
+        ``"chunk"`` events (bucket, live, wall time, phase delta,
+        jit-cache delta) and ``"deadline-cut"`` — see :func:`_drive`.
       prep_kw: spec-specific prep options (OT: ``theta``).
 
     Returns ``(result, CompactionStats)``; every result leaf is
@@ -296,7 +324,7 @@ def solve_compacting(
     stats = CompactionStats(batch=b, dispatched_batch=p.bp, chunk=k)
     final = _drive(data, state0, chunk, conv,
                    max_chunk_dispatches(p.phase_cap, k), stats,
-                   deadline=deadline)
+                   deadline=deadline, obs=obs)
     r = epilogue(ctx, final)
 
     phases = np.asarray(final.phases[:b], np.int64)

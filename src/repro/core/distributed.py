@@ -58,7 +58,6 @@ caveat as any shape change of an XLA float reduction.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import List, Optional, Tuple
@@ -84,6 +83,7 @@ from .problem import (
     pow2_at_least,
 )
 from ..compat import shard_map as _shard_map
+from ..obs.metrics import now as _now
 
 
 @dataclass
@@ -213,15 +213,23 @@ def _put(tree, target):
 def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
                        max_chunks: int, stats: DistributedStats,
                        mesh: Mesh, axis: str,
-                       deadline: Optional[float] = None):
+                       deadline: Optional[float] = None, obs=None):
     """Mesh counterpart of compaction._drive. ``data``/``state`` arrive
     device_put onto ``NamedSharding(mesh, P(axis))``; ``run_s``/``conv_s``
     are the shard_map'ed chunk/converged dispatches and ``run_1``/``conv_1``
     the single-device ones used after the collapse. Chunk dispatches donate
     the state buffers (one copy of solver state per bucket, not two).
-    ``deadline`` is an absolute ``time.monotonic()`` budget with the same
-    best-so-far cut semantics as compaction._drive."""
+    ``deadline`` is an absolute monotonic (``repro.obs.now``) budget with
+    the same best-so-far cut semantics as compaction._drive. ``obs`` is
+    the same optional per-chunk event emitter as compaction._drive (the
+    ``"chunk"`` events additionally carry the device count this dispatch
+    ran on); events are host scalars only — no extra device syncs."""
     d0 = int(mesh.shape[axis])
+    cache_fns = ({id(run_s): getattr(run_s, "_cache_size", None),
+                  id(run_1): getattr(run_1, "_cache_size", None)}
+                 if obs is not None else {})
+    cache_prev = {k: (f() if f is not None else 0)
+                  for k, f in cache_fns.items()}
     sh = NamedSharding(mesh, P(axis))
     sh_rep = NamedSharding(mesh, P())
     dev0 = next(iter(mesh.devices.flat))
@@ -244,8 +252,9 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
 
     ph_prev = np.zeros((stats.dispatched_batch,), np.int64)
     for _ in range(max_chunks):
-        t_chunk = time.monotonic()
-        cur_s = (run_s if sharded else run_1)(cur_d, cur_s)
+        t_chunk = _now()
+        run_fn = run_s if sharded else run_1
+        cur_s = run_fn(cur_d, cur_s)
         stats.dispatches += 1
         # global converged-mask + phase-counter gather: ONE (B,)
         # device->host sync per chunk (conv bundles both outputs, so the
@@ -253,7 +262,7 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
         # repro.analysis hot-loop sync audit pins this)
         conv, ph = jax.device_get((conv_s if sharded else conv_1)(cur_d,
                                                                   cur_s))
-        t_chunk = time.monotonic() - t_chunk
+        t_chunk = _now() - t_chunk
         ph = ph.astype(np.int64)
         bb = int(conv.shape[0])
         d_now = d0 if sharded else 1
@@ -267,11 +276,18 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
         ph_prev = ph
         live = int((~conv).sum())
         stats.occupancy.append((bb, live))
+        if obs is not None:
+            cf = cache_fns.get(id(run_fn))
+            cache_now = cf() if cf is not None else 0
+            obs.event("chunk", bucket=bb, live=live, chunk_s=t_chunk,
+                      phases=int(per_dev.max(initial=0)),
+                      devices=d_now,
+                      compiled=cache_now - cache_prev.get(id(run_fn), 0))
+            cache_prev[id(run_fn)] = cache_now
         if live == 0:
             buf = flush(buf, cur_s, idx, sharded)
             break
-        if deadline is not None and \
-                time.monotonic() + t_chunk >= deadline:
+        if deadline is not None and _now() + t_chunk >= deadline:
             # earliest deadline at risk: stop dispatching, flush best-so-
             # far state, and mark the unconverged lanes (original batch
             # order) — same cut semantics as compaction._drive
@@ -279,6 +295,8 @@ def _drive_distributed(data, state, run_s, conv_s, run_1, conv_1,
             un = np.zeros((stats.dispatched_batch,), bool)
             un[idx[~conv]] = True
             stats.unconverged = un
+            if obs is not None:
+                obs.event("deadline-cut", bucket=bb, live=live)
             buf = flush(buf, cur_s, idx, sharded)
             break
         nb = pow2_at_least(live)
@@ -337,6 +355,7 @@ def solve_mesh(
     placement: str = "auto",
     keep_state: bool = False,
     deadline: Optional[float] = None,
+    obs=None,
     **prep_kw,
 ):
     """Mesh-distributed counterpart of ``compaction.solve_compacting`` —
@@ -347,10 +366,12 @@ def solve_mesh(
     ``keep_state`` stashes the pre-completion integer state on the stats
     for feasibility certificates (batch placement only — the matrix path's
     epilogue consumes the state, so the combination raises).
-    ``deadline`` (absolute ``time.monotonic()``) gives the chunk loop a
-    wall-clock budget with best-so-far cut semantics (see
+    ``deadline`` (absolute monotonic, ``repro.obs.now``) gives the chunk
+    loop a wall-clock budget with best-so-far cut semantics (see
     ``solve_compacting``); matrix placement solves instance-by-instance
     with no chunk loop to cut, so it ignores the budget (best-effort).
+    ``obs`` threads a per-chunk event emitter into the drive (see
+    ``solve_compacting``); matrix placement emits nothing.
 
     Returns ``(result, DistributedStats)``."""
     inputs = spec.canonicalize(inputs)
@@ -372,7 +393,7 @@ def solve_mesh(
         # below the mesh floor from the start: single-device dispatch
         out, cst = solve_compacting(
             spec, inputs, eps, sizes=sizes, k=k, guaranteed=guaranteed,
-            keep_state=keep_state, deadline=deadline, **prep_kw)
+            keep_state=keep_state, deadline=deadline, obs=obs, **prep_kw)
         stats = _wrap_stats(cst, d, batch_axis, collapsed_at=cst.
                             dispatched_batch or None)
         return out, stats
@@ -396,7 +417,7 @@ def solve_mesh(
     final = _drive_distributed(
         data, state0, chunk_s, conv_s, chunk_1, conv_1,
         max_chunk_dispatches(p.phase_cap, k), stats, mesh, batch_axis,
-        deadline=deadline,
+        deadline=deadline, obs=obs,
     )
     r = epilogue_s(ctx, final)
 

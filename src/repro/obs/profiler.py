@@ -1,0 +1,132 @@
+"""Opt-in ``jax.profiler`` trace capture around a named dispatch.
+
+Disarmed (the default) this is a single lock-guarded check per dispatch;
+armed, the next dispatch whose name contains the match substring runs
+under ``jax.profiler.trace`` writing a TensorBoard-loadable capture to
+``<log_dir>/<sanitized name>``.  Arm programmatically::
+
+    from repro.obs import profiler
+    profiler.arm("/tmp/prof", match="bucket=64", captures=1)
+
+or via the environment before the process starts::
+
+    REPRO_PROFILE_DIR=/tmp/prof REPRO_PROFILE_MATCH= python ...
+
+A capture failure (profiler unavailable, double-start, unwritable dir)
+must never take down serving: the dispatch body always runs; failures
+disarm the hook and are reported via ``logging`` only.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import re
+import threading
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+log = logging.getLogger("repro.obs.profiler")
+
+_ENV_DIR = "REPRO_PROFILE_DIR"
+_ENV_MATCH = "REPRO_PROFILE_MATCH"
+_ENV_CAPTURES = "REPRO_PROFILE_CAPTURES"
+
+
+class TraceCapture:
+    """Armable one-(or-N-)shot profiler hook.
+
+    ``_dir`` / ``_match`` / ``_remaining`` / ``_env_checked`` are guarded
+    by ``_lock`` (covered by the lock-discipline scan): ``claim`` races
+    against concurrent dispatch workers and must hand the capture to
+    exactly one of them.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._dir: Optional[str] = None
+        self._match: str = ""
+        self._remaining: int = 0
+        self._env_checked: bool = False
+
+    def arm(self, log_dir: str, match: str = "", captures: int = 1) -> None:
+        with self._lock:
+            self._dir = str(log_dir)
+            self._match = match
+            self._remaining = int(captures)
+            self._env_checked = True
+
+    def disarm(self) -> None:
+        with self._lock:
+            self._dir = None
+            self._match = ""
+            self._remaining = 0
+            self._env_checked = True
+
+    def armed(self) -> bool:
+        with self._lock:
+            self._check_env_locked()
+            return self._remaining > 0 and self._dir is not None
+
+    def _check_env_locked(self) -> None:
+        if self._env_checked:
+            return
+        self._env_checked = True
+        d = os.environ.get(_ENV_DIR)
+        if d:
+            self._dir = d
+            self._match = os.environ.get(_ENV_MATCH, "")
+            self._remaining = int(os.environ.get(_ENV_CAPTURES, "1"))
+
+    def claim(self, name: str) -> Optional[str]:
+        """Atomically claim one capture slot for ``name``; returns the
+        capture directory, or None if disarmed / name doesn't match."""
+        with self._lock:
+            self._check_env_locked()
+            if self._remaining <= 0 or self._dir is None:
+                return None
+            if self._match and self._match not in name:
+                return None
+            self._remaining -= 1
+            sub = re.sub(r"[^A-Za-z0-9._=-]+", "_", name) or "dispatch"
+            return os.path.join(self._dir, sub)
+
+    @contextmanager
+    def capture(self, name: str) -> Iterator[bool]:
+        """Run the body, profiling it iff a capture slot was claimed.
+
+        Yields True when profiling is live.  Never raises on profiler
+        failure — the body always executes exactly once.
+        """
+        d = self.claim(name)
+        if d is None:
+            yield False
+            return
+        ctx = None
+        try:
+            import jax
+            ctx = jax.profiler.trace(d)
+            ctx.__enter__()
+        except Exception:
+            log.warning("profiler capture %r failed to start; disarming",
+                        name, exc_info=True)
+            self.disarm()
+            ctx = None
+        try:
+            yield ctx is not None
+        finally:
+            if ctx is not None:
+                try:
+                    ctx.__exit__(None, None, None)
+                    log.info("profiler capture %r written to %s", name, d)
+                except Exception:
+                    log.warning("profiler capture %r failed to finalize",
+                                name, exc_info=True)
+
+
+#: Process-wide hook the serving stack checks around each named dispatch.
+CAPTURE = TraceCapture()
+
+arm = CAPTURE.arm
+disarm = CAPTURE.disarm
+armed = CAPTURE.armed
+capture = CAPTURE.capture

@@ -4,7 +4,6 @@ solver as a batched endpoint (cost matrices via the Pallas kernel path on
 TPU), mirroring the paper's experiment harness as a service."""
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
@@ -13,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.obs import MetricsRegistry, Tracer, new_id
+from repro.obs import now as _now
 
 
 @dataclass
@@ -52,7 +53,7 @@ class Engine:
         if not self.queue:
             return []
         reqs, self.queue = self.queue, []
-        t0 = time.perf_counter()
+        t0 = _now()
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
         toks = np.zeros((b, plen), np.int32)
@@ -74,7 +75,7 @@ class Engine:
         cur = cur.astype(jnp.int32)
         for t in range(max_new):
             out[:, t] = np.asarray(cur[:, 0])
-            now = time.perf_counter()
+            now = _now()
             for i, r in enumerate(reqs):
                 if done[i]:
                     continue
@@ -91,7 +92,7 @@ class Engine:
             cur = jnp.argmax(
                 logits[:, : self.cfg.vocab_size], -1
             )[:, None].astype(jnp.int32)
-        t_end = time.perf_counter()
+        t_end = _now()
         finish_time = np.where(np.isnan(finish_time), t_end, finish_time)
         return [
             Completion(tokens=out[i, : steps_per_seq[i]],
@@ -137,6 +138,14 @@ class OTService:
     historical per-request dicts, bit-identical to the pre-Solution
     surface (including the legacy ``dispatches``/``devices`` keys, kept
     for one release — prefer ``Solution.stats``).
+
+    Observability: the service owns a :class:`repro.obs.MetricsRegistry`
+    (attach sinks via ``sinks=``). Every ``run_batch`` bucket gets its
+    own trace (``svc-N``) with bucket/admission/solve/artifact-fetch
+    spans, per-rejected-ticket events, and the chunked drivers' per-chunk
+    events parented under the solve span. ``stats_dict()`` is a view
+    over that registry — there is no hand-maintained tally, and results
+    are bit-identical with or without a sink attached.
     """
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
@@ -144,7 +153,8 @@ class OTService:
                  compact: bool = True, chunk: Optional[int] = None,
                  mesh=None, want: Optional[tuple] = None,
                  validate: bool = True,
-                 admission_tol: Optional[float] = None):
+                 admission_tol: Optional[float] = None,
+                 sinks=()):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core import validate as V
@@ -181,6 +191,30 @@ class OTService:
         self._C = C
         self._cost = build_cost_matrix
         self._cost_batched = jax.jit(jax.vmap(COSTS[metric]))
+        # stats_dict() is a view over this registry; attach sinks to
+        # stream the same observations out as structured events
+        self.metrics = MetricsRegistry(sinks=sinks)
+        self._tracer = Tracer(self.metrics)
+        reg = self.metrics
+        self._c_requests = reg.counter("service.requests")
+        self._c_batches = reg.counter("service.batches")
+        self._c_rejected = reg.counter("service.rejected")
+        self._c_dispatches = reg.counter("service.dispatches")
+        self._h_solve = reg.histogram("service.solve_s",
+                                      MetricsRegistry.LATENCY_BOUNDS)
+
+    def stats_dict(self) -> Dict[str, Any]:
+        """Service counters as a plain dict — a view over the metrics
+        registry (the same numbers any attached sink streamed out)."""
+        snap = self.metrics.snapshot()
+        solve_h = snap.get("service.solve_s", {"count": 0, "sum": 0.0})
+        return {
+            "requests": snap.get("service.requests", 0),
+            "batches": snap.get("service.batches", 0),
+            "rejected": snap.get("service.rejected", 0),
+            "dispatches": snap.get("service.dispatches", 0),
+            "total_solve_s": solve_h["sum"],
+        }
 
     def submit(self, x: np.ndarray, y: np.ndarray,
                nu: Optional[np.ndarray] = None,
@@ -230,7 +264,12 @@ class OTService:
             for grp in self._B.bucket_instances(shapes, self.buckets):
                 idx = [sub[j] for j in grp.indices]
                 (mb, nb), sizes = grp.key, grp.sizes
-                gt0 = time.perf_counter()
+                tid = new_id("svc")
+                bsp = self._tracer.start("bucket", trace_id=tid,
+                                         bucket=[int(mb), int(nb)],
+                                         batch=len(idx),
+                                         tickets=[int(i) for i in idx])
+                gt0 = bsp.t_start
                 xs = self._B.pad_stack([reqs[i].x for i in idx], (mb, d))
                 ys = self._B.pad_stack([reqs[i].y for i in idx], (nb, d))
                 c = self._batched_cost(xs, ys)
@@ -244,18 +283,28 @@ class OTService:
 
                     ins = ({"c": c, "nu": nu, "mu": mu} if has_mass
                            else {"c": c})
-                    codes = admission_codes(ins, sizes=sizes,
-                                            tol=self.admission_tol)
-                    bad = np.flatnonzero(codes != 0)
+                    with self._tracer.span(
+                            "admission", trace_id=tid,
+                            parent=bsp.span_id) as asp:
+                        codes = admission_codes(ins, sizes=sizes,
+                                                tol=self.admission_tol)
+                        bad = np.flatnonzero(codes != 0)
+                        asp.attrs["rejected"] = int(bad.size)
                     if bad.size:
                         # quarantined tickets get their rejection IN the
                         # result list (run_batch has no Future to fail);
                         # the healthy rest of the bucket still solves
+                        self._c_rejected.add(int(bad.size))
                         for j in bad:
+                            self._tracer.event(
+                                "rejected", trace_id=tid,
+                                parent_id=bsp.span_id,
+                                ticket=int(idx[j]), code=int(codes[j]))
                             results[idx[j]] = RequestRejected(
                                 f"ticket #{idx[j]}", int(codes[j]))
                         keep = np.flatnonzero(codes == 0)
                         if keep.size == 0:
+                            bsp.end(outcome="all-rejected")
                             continue
                         c = c[keep]
                         if has_mass:
@@ -269,24 +318,37 @@ class OTService:
                     spec, inputs = ASSIGNMENT, {"c": c}
                     legacy_want = ("cost", "matching", "duals")
                 want = legacy_want if self.want is None else self.want
-                batch = solve(spec, inputs, self.eps, self._policy,
-                              sizes=sizes, want=want)
-                # the O(B)-scalar (ungated) phase fetch blocks until the
-                # bucket is solved regardless of the declared want; big
-                # artifacts stay on device unless requested
-                batch.phases()
-                if self.want is None:
-                    # legacy latency_s includes the legacy artifact
-                    # device->host fetches, as the pre-Solution surface
-                    # measured it
-                    batch.cost()
-                    if has_mass:
-                        batch.plan()
-                    else:
-                        batch.matching()
-                        batch.duals()
-                gdt = time.perf_counter() - gt0
+                with self._tracer.span("solve", trace_id=tid,
+                                       parent=bsp.span_id,
+                                       batch=len(idx)) as ssp:
+                    batch = solve(spec, inputs, self.eps, self._policy,
+                                  sizes=sizes, want=want,
+                                  obs=self._tracer.bind(
+                                      trace_id=tid, parent=ssp.span_id))
+                with self._tracer.span("artifact-fetch", trace_id=tid,
+                                       parent=bsp.span_id):
+                    # the O(B)-scalar (ungated) phase fetch blocks until
+                    # the bucket is solved regardless of the declared
+                    # want; big artifacts stay on device unless requested
+                    batch.phases()
+                    if self.want is None:
+                        # legacy latency_s includes the legacy artifact
+                        # device->host fetches, as the pre-Solution
+                        # surface measured it
+                        batch.cost()
+                        if has_mass:
+                            batch.plan()
+                        else:
+                            batch.matching()
+                            batch.duals()
+                gdt = _now() - gt0
                 st = batch.driver_stats
+                self._c_batches.add(1)
+                self._c_requests.add(len(idx))
+                self._h_solve.observe(gdt)
+                if st is not None:
+                    self._c_dispatches.add(int(st.dispatches))
+                bsp.end(kept=len(idx), solve_s=gdt)
                 for k, i in enumerate(idx):
                     sol = batch[k]
                     if self.want is not None:

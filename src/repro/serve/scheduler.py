@@ -65,6 +65,21 @@ Fault tolerance (serve/ft.py, serve/faults.py):
     at risk and resolves best-so-far ``Solution``s flagged
     ``degraded=True`` — re-validated per request by their a-posteriori
     certificates (``dual_feasible()`` / ``additive_gap()``).
+
+Observability (repro.obs): every scheduler carries a
+:class:`~repro.obs.MetricsRegistry`; pass ``sinks=[JSONLSink(...)]`` (or
+any :class:`~repro.obs.MetricsSink`) to stream counters, wait/solve
+histograms, and structured events live. ``stats``/``stats_dict()`` are
+VIEWS over that registry — there is no parallel hand-maintained tally.
+Each request gets a root ``"request"`` span (trace id ``req-<seq>``)
+from submit to resolution; each collated bucket gets its own trace
+(``bucket-<n>``) with ``collate`` -> ``admission`` -> ``dispatch`` ->
+``solve`` (one per ladder attempt) -> ``artifact-fetch`` spans, per-chunk
+``"chunk"`` events from the drivers parented under the solve span, and
+fault events (``rejected``, ``retry``, ``ladder``, ``quarantine``,
+``deadline-cut``, ``degraded``). All timestamps share the one monotonic
+clock ``repro.obs.now``. The opt-in ``repro.obs.profiler`` hook captures
+a ``jax.profiler`` trace around a named dispatch when armed.
 """
 from __future__ import annotations
 
@@ -72,7 +87,6 @@ import contextlib
 import dataclasses
 import queue
 import threading
-import time
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
@@ -81,6 +95,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from ..obs import MetricsRegistry, Tracer, new_id, profiler as _profiler
+from ..obs import now as _now
 from . import ft as _ft
 
 
@@ -114,9 +130,10 @@ class _Pending:
     future: Future
     t_submit: float
     want: Optional[tuple] = None    # None -> legacy result dict
-    deadline: Optional[float] = None  # absolute time.monotonic() budget
+    deadline: Optional[float] = None  # absolute repro.obs.now() budget
     tenant: Optional[str] = None
     seq: int = -1                   # submit ordinal (fault plans key on it)
+    span: Any = None                # root "request" span (submit->resolve)
 
 
 def _who(req: _Pending) -> str:
@@ -141,6 +158,7 @@ class _WorkItem:
     # bucket (the dispatch worker processes halves sequentially, so no
     # lock is needed): requests quarantined from the bucket so far
     shared: dict = field(default_factory=dict)
+    tid: str = ""                   # bucket trace id ("bucket-<n>")
 
 
 def _split_item(item: _WorkItem):
@@ -157,16 +175,23 @@ def _split_item(item: _WorkItem):
             mu=None if item.mu is None else item.mu[sel],
             sizes=item.sizes[sel], eps=item.eps[sel],
             reqs=item.reqs[lo:hi], bucket=item.bucket,
-            t_prepared=item.t_prepared, shared=item.shared)
+            t_prepared=item.t_prepared, shared=item.shared, tid=item.tid)
 
     return sub(0, h), sub(h, len(item.reqs))
 
 
 @dataclass
 class SchedulerStats:
-    """Aggregate accounting across all dispatched buckets. ``occupancy``
-    keeps only the most recent curves (bounded: a long-lived scheduler
-    must not grow a list forever)."""
+    """Point-in-time SNAPSHOT of the scheduler's metrics registry.
+
+    Since the observability refactor this is no longer a mutable tally
+    the workers write into: ``AsyncOTScheduler.stats`` builds one from
+    the lock-free registry instruments on every read
+    (:meth:`from_registry`), so there is exactly one source of truth and
+    ``stats``/``stats_dict()``/attached sinks can never drift apart.
+
+    ``occupancy`` keeps only the most recent ``occupancy_window`` curves
+    (bounded: a long-lived scheduler must not grow a list forever)."""
     requests: int = 0
     batches: int = 0
     total_wait_s: float = 0.0
@@ -180,15 +205,46 @@ class SchedulerStats:
     retries: int = 0         # extra dispatch attempts (ladder/backoff)
     degraded: int = 0        # requests resolved best-so-far on deadline
     deadline_hits: int = 0   # buckets cut by a wall-clock budget
+    occupancy_window: int = 64   # the bound on len(occupancy)
+
+    #: registry instrument names backing each counter field
+    _COUNTERS = ("requests", "batches", "dispatches", "rejected",
+                 "quarantined", "retries", "degraded", "deadline_hits")
+
+    @classmethod
+    def from_registry(cls, reg, window: int = 64) -> "SchedulerStats":
+        snap = reg.snapshot()
+        kw = {f: int(snap.get(f"scheduler.{f}", 0)) for f in cls._COUNTERS}
+        wait = snap.get("scheduler.wait_s") or {}
+        solve = snap.get("scheduler.solve_s") or {}
+        return cls(
+            total_wait_s=float(wait.get("sum", 0.0)),
+            total_solve_s=float(solve.get("sum", 0.0)),
+            occupancy=deque(snap.get("scheduler.occupancy", ()),
+                            maxlen=window),
+            occupancy_window=int(window),
+            **kw,
+        )
 
     def as_dict(self) -> dict:
+        """Every field of the dataclass, JSON-serializably (the
+        stats-surface drift test holds this to completeness).
+        ``occupancy`` is TRUNCATED to the most recent
+        ``occupancy_window`` bucket curves (the constructor knob on
+        ``AsyncOTScheduler``) — older curves are dropped, not summarized;
+        ``occupancy_window`` is included so consumers can tell a short
+        history from a truncated one."""
         return {
             "requests": self.requests,
             "batches": self.batches,
             "mean_wait_s": (self.total_wait_s / self.requests
                             if self.requests else 0.0),
+            "total_wait_s": self.total_wait_s,
             "total_solve_s": self.total_solve_s,
             "dispatches": self.dispatches,
+            "occupancy": [[list(p) for p in curve]
+                          for curve in self.occupancy],
+            "occupancy_window": self.occupancy_window,
             "rejected": self.rejected,
             "quarantined": self.quarantined,
             "retries": self.retries,
@@ -226,6 +282,15 @@ class AsyncOTScheduler:
       policy: override the dispatch policy wholesale (e.g. a compact-mode
         policy so the checkify sanitizer path is exercised); default is
         the mesh-mode policy built from ``mesh``/``placement``/``chunk``.
+      sinks: metrics sinks (:class:`~repro.obs.MetricsSink`) to stream
+        counters/histograms/spans/events to, live. Empty (the default)
+        costs one tuple check per observation — the measured no-sink
+        overhead budget in benchmarks/bench_serve.py is <2% of the
+        healthy path.
+      occupancy_window: how many recent per-bucket occupancy curves the
+        ``stats`` view retains (the ``SchedulerStats.occupancy`` bound,
+        historically hardcoded to 64). ``stats_dict()`` reports the
+        window alongside the truncated history.
     """
 
     def __init__(self, eps: float = 0.05, metric: str = "euclidean",
@@ -236,7 +301,7 @@ class AsyncOTScheduler:
                  admission_tol: Optional[float] = None, faults=None,
                  retries_per_level: int = 2, retry_backoff_s: float = 0.05,
                  join_timeout_s: float = 30.0,
-                 policy=None):
+                 policy=None, sinks=(), occupancy_window: int = 64):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core import validate as V
@@ -279,7 +344,26 @@ class AsyncOTScheduler:
                        and jax.default_backend() == "tpu" else "jnp")
         self._B = B
         self._cost_batched = jax.jit(jax.vmap(COSTS[metric]))
-        self.stats = SchedulerStats()
+        # ONE metrics registry: stats/stats_dict() are views over it and
+        # attached sinks stream the same observations — no parallel tally
+        self.metrics = MetricsRegistry(sinks=sinks)
+        self._tracer = Tracer(self.metrics)
+        self.occupancy_window = int(occupancy_window)
+        reg = self.metrics
+        self._c_requests = reg.counter("scheduler.requests")
+        self._c_batches = reg.counter("scheduler.batches")
+        self._c_dispatches = reg.counter("scheduler.dispatches")
+        self._c_rejected = reg.counter("scheduler.rejected")
+        self._c_quarantined = reg.counter("scheduler.quarantined")
+        self._c_retries = reg.counter("scheduler.retries")
+        self._c_degraded = reg.counter("scheduler.degraded")
+        self._c_deadline_hits = reg.counter("scheduler.deadline_hits")
+        self._h_wait = reg.histogram("scheduler.wait_s",
+                                     MetricsRegistry.LATENCY_BOUNDS)
+        self._h_solve = reg.histogram("scheduler.solve_s",
+                                      MetricsRegistry.LATENCY_BOUNDS)
+        self._occ = reg.history("scheduler.occupancy",
+                                maxlen=self.occupancy_window)
 
         self._submit_seq = 0          # next submit ordinal (under _lock)
         self._submit_q: "queue.Queue" = queue.Queue()
@@ -348,15 +432,22 @@ class AsyncOTScheduler:
         # its submit ordinals stay aligned with ours
         if self._faults is not None:
             x, _ = self._faults.on_submit(np.asarray(x))
+        # one monotonic clock (repro.obs.now) for the submit timestamp,
+        # the absolute deadline, and every span: the drivers compare the
+        # deadline against the same clock inside the chunk loop
+        root = self._tracer.start("request", trace_id=f"req-{seq}",
+                                  seq=seq, tenant=tenant)
         req = _Pending(x=np.asarray(x), y=np.asarray(y),
                        nu=None if not has_mass else np.asarray(nu),
                        mu=None if not has_mass else np.asarray(mu),
                        eps=self.eps if eps is None else float(eps),
-                       future=fut, t_submit=time.perf_counter(),
+                       future=fut, t_submit=root.t_start,
                        want=(self.want if want is None else tuple(want)),
                        deadline=(None if deadline is None
-                                 else time.monotonic() + float(deadline)),
-                       tenant=tenant, seq=seq)
+                                 else root.t_start + float(deadline)),
+                       tenant=tenant, seq=seq, span=root)
+        self._tracer.event("submit", trace_id=f"req-{seq}",
+                           parent_id=root.span_id, seq=seq, tenant=tenant)
         self._submit_q.put(req)
         return fut
 
@@ -367,13 +458,13 @@ class AsyncOTScheduler:
         """Block until every submitted request has resolved (normally,
         exceptionally, or — if a worker thread died — by having its Future
         failed here rather than stranded). Returns False on timeout."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else _now() + timeout
         with self._lock:
             while self._outstanding > 0:
                 if not self._workers_alive():
                     break               # fall through to the abort path
                 remaining = (None if deadline is None
-                             else deadline - time.monotonic())
+                             else deadline - _now())
                 if remaining is not None and remaining <= 0:
                     return False
                 # wake periodically to re-check worker liveness
@@ -455,12 +546,24 @@ class AsyncOTScheduler:
                 f"after join(timeout={self._join_timeout_s}); pending "
                 "futures were failed")
 
+    @property
+    def stats(self) -> SchedulerStats:
+        """A point-in-time :class:`SchedulerStats` snapshot built from
+        the metrics registry. Reading it while the workers run is always
+        safe (each instrument aggregates its lock-free cells); after
+        ``flush()`` it is exact."""
+        return SchedulerStats.from_registry(self.metrics,
+                                            window=self.occupancy_window)
+
     def stats_dict(self) -> dict:
-        """Locked snapshot of the aggregate stats — the supported way to
-        read ``stats`` from a caller thread while the workers run (direct
-        field reads race the dispatch worker's updates)."""
-        with self._lock:
-            return self.stats.as_dict()
+        """Serializable snapshot of the aggregate stats — a VIEW over the
+        same metrics registry the sinks stream from, not a parallel
+        tally. ``occupancy`` holds only the most recent
+        ``occupancy_window`` bucket curves (older history is truncated;
+        the window rides along under ``"occupancy_window"``). Safe from
+        any thread; each value is exact, though distinct counters read
+        while the workers are mid-bucket may straddle an update."""
+        return self.stats.as_dict()
 
     def __enter__(self):
         return self
@@ -480,9 +583,9 @@ class AsyncOTScheduler:
         if first is None:
             return None
         batch = [first]
-        deadline = time.monotonic() + self.linger_s
+        deadline = _now() + self.linger_s
         while len(batch) < self.max_batch:
-            timeout = deadline - time.monotonic()
+            timeout = deadline - _now()
             try:
                 nxt = (self._submit_q.get_nowait() if timeout <= 0
                        else self._submit_q.get(timeout=timeout))
@@ -534,6 +637,11 @@ class AsyncOTScheduler:
                     shapes = [(r.x.shape[0], r.y.shape[0]) for r in sub]
                     for grp in B.bucket_instances(shapes, self.buckets):
                         reqs = [sub[j] for j in grp.indices]
+                        tid = new_id("bucket")
+                        csp = self._tracer.start(
+                            "collate", trace_id=tid, bucket=list(grp.key),
+                            batch=len(reqs),
+                            seqs=[r.seq for r in reqs])
                         (mb, nb) = grp.key
                         xs = B.pad_stack([r.x for r in reqs], (mb, dim))
                         ys = B.pad_stack([r.y for r in reqs], (nb, dim))
@@ -550,9 +658,13 @@ class AsyncOTScheduler:
 
                             ins = ({"c": c, "nu": nu, "mu": mu}
                                    if has_mass else {"c": c})
+                            asp = self._tracer.start(
+                                "admission", trace_id=tid,
+                                parent=csp.span_id, batch=len(reqs))
                             codes = admission_codes(
                                 ins, sizes=sizes, tol=self.admission_tol)
                             bad = np.flatnonzero(codes != 0)
+                            asp.end(rejected=int(bad.size))
                             if bad.size:
                                 # poisoned lanes fail their own Future;
                                 # the healthy rest of the bucket proceeds
@@ -560,12 +672,20 @@ class AsyncOTScheduler:
                                 for j in bad:
                                     _fail(reqs[j].future, RequestRejected(
                                         _who(reqs[j]), int(codes[j])))
+                                    self._tracer.event(
+                                        "rejected", trace_id=tid,
+                                        seq=reqs[j].seq,
+                                        code=int(codes[j]))
+                                    if reqs[j].span is not None:
+                                        reqs[j].span.end(
+                                            outcome="rejected",
+                                            code=int(codes[j]))
                                 self._done(rejected)
-                                with self._lock:
-                                    self.stats.rejected += int(bad.size)
+                                self._c_rejected.add(int(bad.size))
                                 packaged.update(id(r) for r in rejected)
                                 keep = np.flatnonzero(codes == 0)
                                 if keep.size == 0:
+                                    csp.end(kept=0)
                                     continue
                                 c = c[keep]
                                 if has_mass:
@@ -573,13 +693,15 @@ class AsyncOTScheduler:
                                 sizes = sizes[keep]
                                 reqs = [reqs[j] for j in keep]
                                 quarantined = int(bad.size)
+                        csp.end(kept=len(reqs))
                         item = _WorkItem(
                             has_mass=has_mass, c=c, nu=nu, mu=mu,
                             sizes=sizes,
                             eps=np.asarray([r.eps for r in reqs]),
                             reqs=reqs, bucket=grp.key,
-                            t_prepared=time.perf_counter(),
+                            t_prepared=_now(),
                             shared={"quarantined": quarantined},
+                            tid=tid,
                         )
                         self._handoff(item)      # blocks: backpressure
                         packaged.update(id(r) for r in reqs)
@@ -589,6 +711,9 @@ class AsyncOTScheduler:
                 missed = [r for r in batch if id(r) not in packaged]
                 for r in missed:
                     _fail(r.future, e)
+                    if r.span is not None:
+                        r.span.end(outcome="error",
+                                   error=type(e).__name__)
                 self._done(missed)
 
     @staticmethod
@@ -611,12 +736,18 @@ class AsyncOTScheduler:
                 return
             self._dispatch_item(item)
 
-    def _solve_with_ladder(self, item):
+    def _solve_with_ladder(self, item, dspan=None):
         """One bucket solve through the unified front door, with
         transient failures retrying down the degradation ladder. Returns
         ``(SolutionBatch, ladder_level, total_attempts)``; poison and
         programming errors propagate to the caller's bisection/quarantine
-        logic untouched."""
+        logic untouched.
+
+        Each attempt runs under its own ``"solve"`` span (named with the
+        ladder rung) parented under ``dspan``, with the chunked drivers'
+        per-chunk events parented under the attempt's span; the opt-in
+        profiler hook (repro.obs.profiler) can capture one
+        ``jax.profiler`` trace around a named dispatch."""
         from repro.core.api import ASSIGNMENT, OT, solve
 
         if item.has_mass:
@@ -629,6 +760,7 @@ class AsyncOTScheduler:
         budgets = [r.deadline for r in item.reqs if r.deadline is not None]
         deadline = min(budgets) if budgets else None
         seqs = tuple(r.seq for r in item.reqs)
+        parent = None if dspan is None else dspan.span_id
 
         tried = [0]
 
@@ -638,10 +770,16 @@ class AsyncOTScheduler:
                 self._faults.on_dispatch(seqs)
             ctx = (jax.default_device(dev) if dev is not None
                    else contextlib.nullcontext())
-            with ctx:
+            cap = f"dispatch:{item.bucket[0]}x{item.bucket[1]}:{name}"
+            with self._tracer.span("solve", trace_id=item.tid,
+                                   parent=parent, level=name,
+                                   attempt=tried[0]) as sp, \
+                    _profiler.capture(cap), ctx:
                 return solve(spec, inputs, item.eps, pol,
                              sizes=item.sizes, want=want,
-                             deadline=deadline)
+                             deadline=deadline,
+                             obs=self._tracer.bind(trace_id=item.tid,
+                                                   parent=sp.span_id))
 
         try:
             return _ft.run_with_recovery(
@@ -652,8 +790,9 @@ class AsyncOTScheduler:
             # count retries even when the run ends in a poison raise —
             # the transient retries before it still happened
             if tried[0] > 1:
-                with self._lock:
-                    self.stats.retries += tried[0] - 1
+                self._c_retries.add(tried[0] - 1)
+                self._tracer.event("retry", trace_id=item.tid,
+                                   n=tried[0] - 1)
 
     def _dispatch_item(self, item):
         """Solve one work item and resolve its Futures; on data-dependent
@@ -661,11 +800,16 @@ class AsyncOTScheduler:
         contiguous halves until the offender(s) are isolated and
         quarantined — composition invariance guarantees the survivors'
         results are bit-identical to a clean run."""
-        t0 = time.perf_counter()
+        t0 = _now()
+        dspan = self._tracer.start("dispatch", trace_id=item.tid,
+                                   bucket=list(item.bucket),
+                                   batch=len(item.reqs))
         try:
-            batch, level, attempts = self._solve_with_ladder(item)
+            batch, level, attempts = self._solve_with_ladder(item, dspan)
         except Exception as e:
             if _ft.is_poison(e) and len(item.reqs) > 1:
+                dspan.end(outcome="poison-bisect",
+                          error=type(e).__name__)
                 left, right = _split_item(item)
                 self._dispatch_item(left)
                 self._dispatch_item(right)
@@ -675,43 +819,63 @@ class AsyncOTScheduler:
                 req = item.reqs[0]
                 item.shared["quarantined"] = (
                     item.shared.get("quarantined", 0) + 1)
-                with self._lock:
-                    self.stats.quarantined += 1
+                self._c_quarantined.add(1)
+                self._tracer.event("quarantine", trace_id=item.tid,
+                                   seq=req.seq)
+                dspan.end(outcome="quarantined")
                 _fail(req.future, _ft.RequestRejected(
                     _who(req), 0,
                     reason=("dispatch-time poison isolated by "
                             f"bisection: {e}")))
+                if req.span is not None:
+                    req.span.end(outcome="quarantined")
                 self._done(item.reqs)
                 return
+            dspan.end(outcome="error", error=type(e).__name__)
             for req in item.reqs:
                 _fail(req.future, e)
+                if req.span is not None:
+                    req.span.end(outcome="error",
+                                 error=type(e).__name__)
             self._done(item.reqs)
             return
+        if level:
+            # the bucket resolved below the primary rung: record which
+            # one (the fault events contract: retries, ladder level,
+            # quarantine, deadline cuts, degraded are all in the stream)
+            self._tracer.event("ladder", trace_id=item.tid, level=level,
+                              attempts=attempts)
+        dspan.end(outcome="resolved", level=level, attempts=attempts)
         try:
             self._resolve_item(item, batch, t0, level, attempts)
         except Exception as e:
             for req in item.reqs:
                 _fail(req.future, e)
+                if req.span is not None:
+                    req.span.end(outcome="error",
+                                 error=type(e).__name__)
             self._done(item.reqs)
 
     def _resolve_item(self, item, batch, t0, level, attempts):
         """Fetch the batch's declared artifacts and resolve every Future
         (typed Solution views or legacy dicts)."""
-        # O(B)-scalar UNGATED fetch: blocks until the bucket is
-        # solved whatever the tenants' want union declares,
-        # without materializing any big artifact on host
-        batch.phases()
-        if any(r.want is None for r in item.reqs):
-            # legacy solve_s includes the legacy artifact
-            # device->host fetches, as the pre-Solution surface
-            # measured it
-            batch.cost()
-            if item.has_mass:
-                batch.plan()
-            else:
-                batch.matching()
-                batch.duals()
-        solve_s = time.perf_counter() - t0
+        with self._tracer.span("artifact-fetch", trace_id=item.tid,
+                               batch=len(item.reqs)):
+            # O(B)-scalar UNGATED fetch: blocks until the bucket is
+            # solved whatever the tenants' want union declares,
+            # without materializing any big artifact on host
+            batch.phases()
+            if any(r.want is None for r in item.reqs):
+                # legacy solve_s includes the legacy artifact
+                # device->host fetches, as the pre-Solution surface
+                # measured it
+                batch.cost()
+                if item.has_mass:
+                    batch.plan()
+                else:
+                    batch.matching()
+                    batch.duals()
+        solve_s = _now() - t0
         # graft the fault-tolerance accounting onto the batch's stats so
         # every Solution view (and legacy dict) reports it uniformly
         batch.stats = dataclasses.replace(
@@ -723,22 +887,29 @@ class AsyncOTScheduler:
         # batch, not a copy per request
         occupancy = st.occupancy
         waits = [t0 - req.t_submit for req in item.reqs]
-        # all SchedulerStats mutation under the scheduler lock:
-        # stats_dict() readers run concurrently on caller threads,
-        # and the dataclass's += read-modify-writes are not atomic
-        # (the lock-discipline scan in repro.analysis pins this)
-        with self._lock:
-            self.stats.batches += 1
-            self.stats.total_solve_s += solve_s
-            self.stats.dispatches += st.dispatches
-            self.stats.occupancy.append(occupancy)
-            self.stats.requests += len(item.reqs)
-            self.stats.total_wait_s += sum(waits)
-            self.stats.degraded += int(deg.sum())
-            if st.deadline_hit:
-                self.stats.deadline_hits += 1
+        # aggregate accounting goes to the lock-free registry instruments
+        # (stats/stats_dict() are views over them); no scheduler lock on
+        # this path — the registry's per-thread cells make the updates
+        # race-free by construction
+        self._c_batches.add(1)
+        self._h_solve.observe(solve_s)
+        self._c_dispatches.add(st.dispatches)
+        self._occ.append(occupancy)
+        self._c_requests.add(len(item.reqs))
+        for w in waits:
+            self._h_wait.observe(w)
+        ndeg = int(deg.sum())
+        if ndeg:
+            self._c_degraded.add(ndeg)
+            self._tracer.event("degraded", trace_id=item.tid, n=ndeg)
+        if st.deadline_hit:
+            self._c_deadline_hits.add(1)
         for i, req in enumerate(item.reqs):
             wait_s = waits[i]
+            if req.span is not None:
+                req.span.end(outcome="resolved", bucket_trace=item.tid,
+                             wait_s=wait_s, solve_s=solve_s,
+                             degraded=bool(deg[i]))
             if req.want is not None:
                 # typed surface: the Future resolves to the
                 # per-request Solution view (lazy artifacts,

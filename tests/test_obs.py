@@ -1,0 +1,402 @@
+"""Observability layer tests: registry/instrument semantics, sink
+round-trips, span trees, the profiler hook, and — the contract that
+matters — EXACT reconciliation between the scheduler's registry-backed
+stats and the event stream an attached sink saw, under a 12-thread
+submit stress with injected faults."""
+from __future__ import annotations
+
+import json
+import logging
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    InMemorySink,
+    JSONLSink,
+    LoggingSink,
+    MetricsRegistry,
+    MetricsSink,
+    NullSink,
+    Tracer,
+    now,
+    profiler,
+    span_tree,
+)
+
+
+# --------------------------------------------------------------------------
+# Instruments + registry
+# --------------------------------------------------------------------------
+
+def test_counter_exact_under_threads():
+    reg = MetricsRegistry()
+    c = reg.counter("t.c")
+    N, T = 5000, 8
+
+    def work():
+        for _ in range(N):
+            c.add(1)
+
+    ts = [threading.Thread(target=work) for _ in range(T)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == N * T
+    assert reg.snapshot()["t.c"] == N * T
+
+
+def test_counter_get_or_create_is_same_instrument():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")          # name already taken by a Counter
+
+
+def test_gauge_last_write_wins():
+    reg = MetricsRegistry()
+    g = reg.gauge("t.g")
+    g.set(3.5)
+    g.set(7.0)
+    assert g.value == 7.0
+    assert reg.snapshot()["t.g"] == 7.0
+
+
+def test_histogram_explicit_bounds_placement():
+    reg = MetricsRegistry()
+    h = reg.histogram("t.h", bounds=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    agg = h.aggregate()
+    assert agg["buckets"] == [1, 1, 1, 1]      # one per bucket + overflow
+    assert agg["count"] == 4
+    assert agg["sum"] == pytest.approx(55.55)
+    assert agg["bounds"] == [0.1, 1.0, 10.0]
+
+
+def test_histogram_rejects_bad_bounds():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.histogram("bad", bounds=())
+    with pytest.raises(ValueError):
+        reg.histogram("bad2", bounds=(1.0, 1.0, 2.0))
+    reg.histogram("ok", bounds=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        reg.histogram("ok", bounds=(1.0, 3.0))   # re-register, new bounds
+
+
+def test_history_is_bounded():
+    reg = MetricsRegistry()
+    ring = reg.history("t.occ", maxlen=3)
+    for i in range(10):
+        ring.append(i)
+    assert ring.snapshot() == [7, 8, 9]
+    assert ring.maxlen == 3
+
+
+def test_sinks_satisfy_protocol():
+    for s in (NullSink(), InMemorySink(), LoggingSink()):
+        assert isinstance(s, MetricsSink)
+
+
+def test_attach_streams_to_sink():
+    sink = InMemorySink()
+    reg = MetricsRegistry()
+    reg.counter("a").add(1)              # before attach: not streamed
+    reg.attach(sink)
+    reg.counter("a").add(2)
+    reg.gauge("g").set(4.0)
+    reg.histogram("h", bounds=(1.0,)).observe(0.5)
+    assert sink.counter_total("a") == 2  # only post-attach observations
+    assert reg.snapshot()["a"] == 3      # aggregate view has both
+    kinds = {r[0] for r in sink.records}
+    assert kinds == {"counter", "gauge", "histogram"}
+
+
+# --------------------------------------------------------------------------
+# JSONL / logging sinks
+# --------------------------------------------------------------------------
+
+def test_jsonl_sink_round_trip(tmp_path):
+    path = tmp_path / "obs.jsonl"
+    sink = JSONLSink(str(path))
+    reg = MetricsRegistry(sinks=(sink,))
+    reg.counter("c").add(3)
+    tr = Tracer(reg)
+    with tr.span("outer", trace_id="t-1") as sp:
+        tr.event("ping", trace_id="t-1", parent_id=sp.span_id,
+                 value=np.float32(1.5))       # numpy must serialize
+    sink.close()
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    kinds = [r["kind"] for r in rows]
+    assert kinds.count("counter") == 1
+    evs = [r for r in rows if r["kind"] == "event"]
+    assert {e["event"] for e in evs} == {"ping", "span"}
+    ping = next(e for e in evs if e["event"] == "ping")
+    assert ping["data"]["value"] == 1.5
+    span = next(e for e in evs if e["event"] == "span")
+    assert span["data"]["name"] == "outer"
+    assert span["data"]["dur_s"] >= 0.0
+    sink.close()                               # idempotent
+
+
+def test_logging_sink(caplog):
+    logger = logging.getLogger("test.obs.sink")
+    reg = MetricsRegistry(sinks=(LoggingSink(logger),))
+    with caplog.at_level(logging.INFO, logger="test.obs.sink"):
+        reg.counter("c").add(1)
+        reg.emit("boom", {"t": now()})
+    assert any("counter c" in r.message for r in caplog.records)
+    assert any("event boom" in r.message for r in caplog.records)
+
+
+# --------------------------------------------------------------------------
+# Tracing
+# --------------------------------------------------------------------------
+
+def test_span_tree_renders_hierarchy():
+    sink = InMemorySink()
+    tr = Tracer(MetricsRegistry(sinks=(sink,)))
+    root = tr.start("root", trace_id="t-9")
+    with tr.span("child", trace_id="t-9", parent=root.span_id):
+        with tr.span("other-trace", trace_id="t-10"):
+            pass
+    root.end()
+    tree = span_tree(sink.spans(), "t-9")
+    lines = tree.splitlines()
+    assert lines[0].startswith("root")
+    assert lines[1].startswith("  child")
+    assert "other-trace" not in tree
+
+
+def test_span_end_is_idempotent_and_error_annotated():
+    sink = InMemorySink()
+    tr = Tracer(MetricsRegistry(sinks=(sink,)))
+    with pytest.raises(ValueError):
+        with tr.span("will-fail", trace_id="t-1"):
+            raise ValueError("boom")
+    (sp,) = sink.spans("will-fail")
+    assert sp["error"] == "ValueError"
+    sink2 = InMemorySink()
+    tr2 = Tracer(MetricsRegistry(sinks=(sink2,)))
+    s = tr2.start("once", trace_id="t-2")
+    s.end(k=1)
+    s.end(k=2)                     # ignored: first end wins
+    (sp2,) = sink2.spans("once")
+    assert sp2["k"] == 1
+
+
+# --------------------------------------------------------------------------
+# Profiler hook
+# --------------------------------------------------------------------------
+
+def test_profiler_claim_match_and_exhaustion(tmp_path):
+    cap = profiler.TraceCapture()
+    cap.arm(str(tmp_path), match="64x64", captures=1)
+    assert cap.armed()
+    assert cap.claim("dispatch:32x32:mesh") is None     # no match
+    d = cap.claim("dispatch:64x64:mesh")
+    assert d is not None and d.startswith(str(tmp_path))
+    assert cap.claim("dispatch:64x64:mesh") is None     # slots exhausted
+    assert not cap.armed()
+
+
+def test_profiler_env_arming(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PROFILE_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_PROFILE_CAPTURES", "2")
+    cap = profiler.TraceCapture()
+    assert cap.armed()
+    assert cap.claim("anything") is not None
+    cap.disarm()
+    assert not cap.armed()          # disarm beats the env
+
+
+def test_profiler_capture_writes_trace(tmp_path):
+    import jax.numpy as jnp
+
+    cap = profiler.TraceCapture()
+    cap.arm(str(tmp_path), captures=1)
+    with cap.capture("dispatch:tiny") as live:
+        assert live
+        jnp.ones((4, 4)).sum().block_until_ready()
+    files = list(tmp_path.rglob("*"))
+    assert any(f.is_file() for f in files)      # a capture was written
+    with cap.capture("dispatch:tiny") as live:
+        assert not live                         # disarmed: body still ran
+
+
+# --------------------------------------------------------------------------
+# Scheduler integration: exact reconciliation under thread stress
+# --------------------------------------------------------------------------
+
+def test_scheduler_stress_events_reconcile_with_stats():
+    """12 submitting threads against a live scheduler with an in-memory
+    sink and an injected fault plan; afterwards, every SchedulerStats
+    counter must reconcile EXACTLY with the event stream the sink saw:
+    the registry and the stream are one source of truth, not two."""
+    from repro.serve.faults import FaultInjector, FaultPlan
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    T, PER = 12, 3                  # 36 submits total
+    total = T * PER
+    plan = FaultPlan(
+        poison_submits=(5, 17),     # NaN -> admission rejection
+        poison_dispatch_of=(11,),   # dispatch-time poison -> quarantine
+        transient_dispatches=2,     # first attempts retry down the ladder
+    )
+    inj = FaultInjector(plan=plan)
+    sink = InMemorySink()
+    rng = np.random.default_rng(0)
+    xs = [rng.random((6, 2)) for _ in range(total)]
+    ys = [rng.random((6, 2)) for _ in range(total)]
+    with AsyncOTScheduler(eps=0.25, max_batch=8, linger_ms=2.0,
+                          faults=inj, sinks=(sink,)) as sched:
+        futs: list = []
+        flock = threading.Lock()
+
+        def client(k):
+            for i in range(PER):
+                f = sched.submit(xs[k * PER + i], ys[k * PER + i])
+                with flock:
+                    futs.append(f)
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(T)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sched.flush(timeout=180)
+        stats = sched.stats
+        resolved = rejected = quarantined = 0
+        for f in futs:
+            try:
+                out = f.result(timeout=60)
+                assert "cost" in out
+                resolved += 1
+            except Exception as e:
+                name = type(e).__name__
+                assert name == "RequestRejected", name
+                if "poison" in str(e):
+                    quarantined += 1
+                else:
+                    rejected += 1
+    # Futures vs plan
+    assert rejected == len(plan.poison_submits)
+    assert quarantined == len(plan.poison_dispatch_of)
+    assert resolved == total - rejected - quarantined
+    # SchedulerStats vs the event stream — exact, field by field
+    assert stats.requests == resolved
+    assert stats.rejected == rejected == sink.count("rejected")
+    assert stats.quarantined == quarantined == sink.count("quarantine")
+    assert stats.retries == sum(e["n"] for e in sink.events("retry"))
+    assert stats.retries >= plan.transient_dispatches
+    assert stats.dispatches == sink.count("chunk")
+    assert sink.count("submit") == total
+    spans = sink.spans("request")
+    assert len(spans) == total      # every root span ended, exactly once
+    outcomes = [s["outcome"] for s in spans]
+    assert outcomes.count("resolved") == resolved
+    assert outcomes.count("rejected") == rejected
+    assert outcomes.count("quarantined") == quarantined
+    # the streamed counter increments sum to the aggregate view
+    assert sink.counter_total("scheduler.requests") == stats.requests
+    assert sink.counter_total("scheduler.rejected") == stats.rejected
+    # resolved dispatch spans == batches (bisection halves included)
+    dspans = [s for s in sink.spans("dispatch")
+              if s.get("outcome") == "resolved"]
+    assert len(dspans) == stats.batches
+
+
+def test_scheduler_results_bit_identical_with_and_without_sink():
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    rng = np.random.default_rng(7)
+    pairs = [(rng.random((6, 2)), rng.random((6, 2))) for _ in range(4)]
+
+    def run(sinks):
+        with AsyncOTScheduler(eps=0.25, max_batch=4,
+                              linger_ms=5.0, sinks=sinks) as sched:
+            futs = [sched.submit(x, y) for x, y in pairs]
+            assert sched.flush(timeout=120)
+            return [f.result(timeout=60) for f in futs]
+
+    a = run(())
+    b = run((InMemorySink(),))
+    for ra, rb in zip(a, b):
+        assert ra["cost"] == rb["cost"]
+        assert np.array_equal(ra["matching"], rb["matching"])
+        assert ra["phases"] == rb["phases"]
+
+
+def test_occupancy_window_knob():
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    rng = np.random.default_rng(1)
+    with AsyncOTScheduler(eps=0.25, max_batch=1,
+                          occupancy_window=2) as sched:
+        futs = [sched.submit(rng.random((6, 2)), rng.random((6, 2)))
+                for _ in range(5)]
+        assert sched.flush(timeout=120)
+        for f in futs:
+            f.result(timeout=60)
+        d = sched.stats_dict()
+    assert d["batches"] == 5
+    assert d["occupancy_window"] == 2
+    assert len(d["occupancy"]) <= 2     # truncated to the window
+
+
+def test_service_stats_dict_is_registry_view():
+    from repro.serve.engine import OTService
+
+    rng = np.random.default_rng(2)
+    sink = InMemorySink()
+    svc = OTService(eps=0.25, sinks=(sink,))
+    for _ in range(3):
+        svc.submit(rng.random((6, 2)), rng.random((6, 2)))
+    res = svc.run_batch()
+    assert len(res) == 3
+    d = svc.stats_dict()
+    assert d["requests"] == 3
+    assert d["batches"] >= 1
+    assert d["dispatches"] == sink.count("chunk")
+    assert sink.counter_total("service.requests") == d["requests"]
+    names = {s["name"] for s in sink.spans()}
+    assert {"bucket", "admission", "solve", "artifact-fetch"} <= names
+
+
+def test_driver_chunk_events_carry_phase_and_compile_delta():
+    """The chunked driver's per-chunk events expose bucket occupancy,
+    phase progress, and the compile-cache delta — all host scalars."""
+    from repro.core.api import ASSIGNMENT, DispatchPolicy, solve
+
+    rng = np.random.default_rng(3)
+    c = rng.random((3, 8, 8))
+    sink = InMemorySink()
+    tr = Tracer(MetricsRegistry(sinks=(sink,)))
+    pol = DispatchPolicy(mode="compact", chunk=2)
+    sols = solve(ASSIGNMENT, {"c": c}, 0.25, pol, want=("cost",),
+                 obs=tr.bind(trace_id="drv-1"))
+    chunks = sink.events("chunk")
+    assert len(chunks) == sols.stats.dispatches
+    for e in chunks:
+        assert e["trace_id"] == "drv-1"
+        # live = unconverged lanes AFTER the chunk (occupancy semantics:
+        # the final chunk of a bucket reports 0)
+        assert 0 <= e["live"] <= e["bucket"]
+        assert e["phases"] >= 0
+        assert e["chunk_s"] >= 0.0
+        assert "compiled" in e
+
+
+def test_obs_scans_clean():
+    """Both static gates stay clean over the observability layer: the
+    lock-discipline scan (repro.obs targets included) and the host-sync
+    audit over the instrumented driver loops."""
+    from repro.analysis import locks, syncaudit
+
+    assert [f for t in locks.default_targets()
+            for f in locks.scan_lock_discipline(t)] == []
+    assert syncaudit.audit_targets(syncaudit.default_targets()) == []

@@ -1,0 +1,54 @@
+"""Stats-surface drift gate: every dataclass field of ``SolveStats`` and
+``SchedulerStats`` must appear in its serialized dict form. A field added
+without a matching ``as_dict`` entry silently vanishes from sinks, logs,
+and benchmark JSON — this test makes that a loud failure instead."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.solution import SolveStats
+from repro.serve.scheduler import SchedulerStats
+
+
+def _field_names(cls):
+    return {f.name for f in dataclasses.fields(cls)}
+
+
+def test_solve_stats_as_dict_is_complete():
+    st = SolveStats(mode="compact", batch=4, bucket=(8, 8),
+                    occupancy=((8, 4), (8, 2)))
+    d = st.as_dict()
+    missing = _field_names(SolveStats) - set(d)
+    assert not missing, f"SolveStats.as_dict() dropped {sorted(missing)}"
+
+
+def test_scheduler_stats_as_dict_is_complete():
+    st = SchedulerStats()
+    d = st.as_dict()
+    missing = _field_names(SchedulerStats) - set(d)
+    assert not missing, (
+        f"SchedulerStats.as_dict() dropped {sorted(missing)}")
+
+
+def test_scheduler_stats_dict_matches_snapshot_surface():
+    """``stats_dict()`` (the public serving surface) exposes the same
+    keys as a snapshot's ``as_dict()`` — the view cannot drift from the
+    dataclass."""
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    with AsyncOTScheduler(eps=0.25) as sched:
+        d = sched.stats_dict()
+        keys = set(sched.stats.as_dict())
+    assert set(d) == keys
+    assert _field_names(SchedulerStats) <= keys
+
+
+def test_counter_fields_map_to_registry_instruments():
+    """Each counter-backed SchedulerStats field names a real registry
+    instrument on a live scheduler (the from_registry contract)."""
+    from repro.serve.scheduler import AsyncOTScheduler
+
+    with AsyncOTScheduler(eps=0.25) as sched:
+        snap = sched.metrics.snapshot()
+    for f in SchedulerStats._COUNTERS:
+        assert f"scheduler.{f}" in snap, f

@@ -1,0 +1,251 @@
+"""Kernel-level perf family: fused vs unfused phase loop, per backend.
+
+The fused Pallas phase kernel (``kernels/fused_phase``) runs slack +
+propose/accept + push + relabel for k phases in ONE kernel with the
+solver state resident in VMEM, where the stepped cores
+(``core/pushrelabel`` / ``core/transport``) round-trip the state through
+XLA/HBM between the ``slack_propose`` kernel and the push/relabel
+updates. This bench times both on identical trajectories (the fused
+kernel is bit-identical to the stepped core, asserted here per row) and
+records us/phase + phases/sec per kernel per backend:
+
+  * kernels/assignment_phase/{stepped,stepped_pallas_propose,fused}
+  * kernels/ot_phase/{stepped,fused}
+  * kernels/{slack_propose,cost_matrix,sinkhorn_row_update} micro rows
+  * kernels/phase_bounds/* — the Section 3.2 theory check formerly in
+    bench_phases.py: phase count t <= (1+2e)/e^2 and sum_i n_i <=
+    n(1+2e)/e (eq. 4) across eps.
+
+Honesty note on backends: off-TPU the Pallas kernels run in interpret
+mode (``_resolve_interpret(None)``) — the kernel body is inlined as
+plain XLA ops rather than lowered through Mosaic/Triton. Every record
+carries ``mode=interpret|compiled`` so committed CPU numbers are never
+mistaken for accelerator kernel numbers; the measured fused-vs-stepped
+speedup on CPU comes from the fused single-program dense formulation
+(no per-round scatter dispatches), not from VMEM residency.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--full|--tiny]
+
+``benchmarks/run.py`` writes the canonical BENCH_kernels.json and
+``run.py --diff`` gates the phases/sec (``instances_per_s``) of every
+row against it.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import build_cost_matrix
+from repro.core.pushrelabel import (
+    _max_phases,
+    assignment_prologue,
+    init_assignment_state,
+    round_costs,
+    run_assignment_phases,
+    solve_assignment_int,
+)
+from repro.core.transport import (
+    init_ot_state,
+    ot_phase_cap,
+    ot_prologue,
+    ot_termination_threshold,
+    run_ot_phases,
+)
+from repro.kernels import ops
+from repro.kernels.slack_propose import _resolve_interpret, slack_propose
+from .common import emit, time_call, uniform_square_points
+
+RECORDS: list = []
+
+
+def _mode() -> str:
+    return "interpret" if _resolve_interpret(None) else "compiled"
+
+
+def record(name, seconds, derived="", **extra):
+    emit(name, seconds, derived)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived, **extra})
+
+
+def write_json(path="BENCH_kernels.json"):
+    payload = {
+        "schema": 1,
+        "bench": "kernels",
+        "backend": jax.default_backend(),
+        "pallas_mode": _mode(),
+        "blocks": {k: list(ops.kernel_blocks(k))
+                   for k in ("slack_propose", "cost_matrix",
+                             "sinkhorn_row_update", "fused_phase")},
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
+
+
+def _assert_state_equal(a, b, tag):
+    for f, x, y in zip(a._fields, a, b):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            raise AssertionError(f"{tag}: fused/stepped diverge on {f}")
+
+
+def run_assignment_phase(n: int, eps: float, k: int, seed: int = 0):
+    """Fused vs stepped assignment k-phase chunk on one trajectory."""
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(size=(n, n)).astype(np.float32)
+    _, c_int, _, _, _ = assignment_prologue(jnp.asarray(c), eps, None, None)
+    thr = jnp.int32(int(eps * n))
+    cap = jnp.int32(_max_phases(eps, n))
+    pf = ops.make_pallas_propose_fn()
+    variants = {
+        "stepped": lambda: run_assignment_phases(
+            c_int, init_assignment_state(n, n), thr, cap, k),
+        "stepped_pallas_propose": lambda: run_assignment_phases(
+            c_int, init_assignment_state(n, n), thr, cap, k, propose_fn=pf),
+        "fused": lambda: ops.fused_run_assignment_phases(
+            c_int, init_assignment_state(n, n), thr, cap, k),
+    }
+    ref = variants["stepped"]()
+    phases = max(int(ref.phases), 1)
+    for name, fn in variants.items():
+        _assert_state_equal(ref, fn(), f"assignment n={n} {name}")
+        t = time_call(fn, repeats=7)
+        record(f"kernels/assignment_phase/{name}/n={n}/eps={eps}/k={k}",
+               t / phases,
+               f"phases={phases};rounds={int(ref.rounds)};"
+               f"phases_per_s={phases / t:.1f};mode={_mode()}",
+               instances_per_s=phases / t, mode=_mode())
+
+
+def run_ot_phase(n: int, eps: float, k: int, seed: int = 0):
+    """Fused vs stepped OT k-phase chunk on one trajectory."""
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(size=(n, n)).astype(np.float32)
+    nu = rng.dirichlet(np.ones(n)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(n)).astype(np.float32)
+    theta = np.float32(4.0 * n / eps)
+    c_int, s_int, d_int, _ = ot_prologue(
+        jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), theta, eps)
+    thr = jnp.int32(ot_termination_threshold(nu, theta, eps))
+    cap = jnp.int32(ot_phase_cap(eps))
+    mr = int(2 * n + 2)
+    variants = {
+        "stepped": lambda: run_ot_phases(
+            c_int, init_ot_state(s_int, d_int), thr, cap, k, mr),
+        "fused": lambda: ops.fused_run_ot_phases(
+            c_int, init_ot_state(s_int, d_int), thr, cap, k, mr),
+    }
+    ref = variants["stepped"]()
+    phases = max(int(ref.phases), 1)
+    for name, fn in variants.items():
+        _assert_state_equal(ref, fn(), f"ot n={n} {name}")
+        t = time_call(fn, repeats=7)
+        record(f"kernels/ot_phase/{name}/n={n}/eps={eps}/k={k}",
+               t / phases,
+               f"phases={phases};rounds={int(ref.rounds)};"
+               f"phases_per_s={phases / t:.1f};mode={_mode()}",
+               instances_per_s=phases / t, mode=_mode())
+
+
+def run_micro(n: int, seed: int = 0):
+    """Single-kernel us/call rows at the backend-table block sizes."""
+    from repro.kernels.cost_matrix import cost_matrix
+    from repro.kernels.sinkhorn_step import sinkhorn_row_update
+
+    rng = np.random.default_rng(seed)
+    c_int = jnp.asarray(rng.integers(0, 1 << 20, size=(n, n)), jnp.int32)
+    y_b = jnp.ones((n,), jnp.int32)
+    y_a = jnp.zeros((n,), jnp.int32)
+    avail = jnp.ones((n,), bool)
+    sp = jax.jit(lambda: slack_propose(c_int, y_b, y_a, avail,
+                                       jnp.int32(0)))
+    t = time_call(sp, repeats=7)
+    record(f"kernels/slack_propose/n={n}", t,
+           f"calls_per_s={1.0 / t:.1f};mode={_mode()}",
+           instances_per_s=1.0 / t, mode=_mode())
+
+    x = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    y = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    cm = jax.jit(lambda: cost_matrix(x, y, "euclidean"))
+    t = time_call(cm, repeats=7)
+    record(f"kernels/cost_matrix/n={n}", t,
+           f"calls_per_s={1.0 / t:.1f};mode={_mode()}",
+           instances_per_s=1.0 / t, mode=_mode())
+
+    cf = jnp.asarray(rng.uniform(size=(n, n)), jnp.float32)
+    g = jnp.zeros((n,), jnp.float32)
+    lognu = jnp.full((n,), -np.log(n), jnp.float32)
+    sk = jax.jit(lambda: sinkhorn_row_update(cf, g, lognu, 0.05))
+    t = time_call(sk, repeats=7)
+    record(f"kernels/sinkhorn_row_update/n={n}", t,
+           f"calls_per_s={1.0 / t:.1f};mode={_mode()}",
+           instances_per_s=1.0 / t, mode=_mode())
+
+
+def run_phase_bounds(n: int):
+    """Section 3.2 theory check (formerly bench_phases.py): phase count
+    t <= (1+2e)/e^2 and sum_i n_i <= n(1+2e)/e (eq. 4) across eps.
+    Ungated (no instances_per_s): these rows verify bounds, not speed."""
+    x, y = uniform_square_points(n, seed=3)
+    c = np.asarray(build_cost_matrix(jnp.asarray(x), jnp.asarray(y),
+                                     "euclidean"))
+    scale = c.max()
+    for eps in [0.2, 0.1, 0.05, 0.02, 0.01]:
+        c_int = round_costs(jnp.asarray(c / scale), eps)
+        t = time_call(lambda eps=eps, c_int=c_int:
+                      solve_assignment_int(c_int, eps), repeats=2)
+        st = solve_assignment_int(c_int, eps)
+        bound_t = (1 + 2 * eps) / eps ** 2
+        bound_ni = n * (1 + 2 * eps) / eps
+        record(
+            f"kernels/phase_bounds/n={n}/eps={eps}", t,
+            f"phases={int(st.phases)};bound={bound_t:.0f};"
+            f"sum_ni={int(st.sum_ni)};ni_bound={bound_ni:.0f};"
+            f"rounds={int(st.rounds)}",
+        )
+
+
+def run(full: bool = False, tiny: bool = False):
+    """Returns the record list (also kept in RECORDS for write_json)."""
+    if tiny:
+        # CI smoke: fused-vs-stepped parity asserts + timing in seconds
+        # on a CPU runner.
+        run_assignment_phase(48, 0.05, 4)
+        run_ot_phase(32, 0.1, 4)
+        return RECORDS
+    run_assignment_phase(256, 0.1, 8)
+    run_assignment_phase(256, 0.01, 16)
+    run_assignment_phase(512, 0.01, 16)
+    run_ot_phase(128, 0.05, 8)
+    run_ot_phase(256, 0.05, 8)
+    run_micro(256)
+    run_phase_bounds(1024 if full else 512)
+    if full:
+        run_assignment_phase(1024, 0.01, 16)
+        run_ot_phase(512, 0.05, 8)
+        run_micro(1024)
+    return RECORDS
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: parity asserts + seconds on CPU")
+    ap.add_argument("--json", default="",
+                    help="machine-readable output path (off by default so "
+                         "ad-hoc/tiny runs don't overwrite the committed "
+                         "BENCH_kernels.json baseline; benchmarks/run.py "
+                         "writes the canonical one)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=args.full, tiny=args.tiny)
+    if args.json:
+        write_json(args.json)

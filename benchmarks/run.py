@@ -2,9 +2,10 @@
 CSV. ``python -m benchmarks.run [--full]`` (full = paper-scale grids).
 
 ``--diff`` compares a fresh run of the JSON-emitting families (batched,
-sharded, solution, faults, serve) against the committed ``BENCH_*.json``
-instead of overwriting them, flags any >20% instances/sec regression, and
-exits nonzero if one is found — the perf gate for driver refactors.
+sharded, solution, faults, serve, kernels) against the committed
+``BENCH_*.json`` instead of overwriting them, flags any >20%
+instances/sec regression, and exits nonzero if one is found — the perf
+gate for driver AND kernel refactors.
 """
 from __future__ import annotations
 
@@ -80,23 +81,22 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale grids (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: synthetic,mnist,phases,"
+                    help="comma-separated subset: synthetic,mnist,"
                          "routing,ot,batched,sharded,solution,faults,"
-                         "serve")
+                         "serve,kernels")
     ap.add_argument("--diff", action="store_true",
                     help="compare fresh batched/sharded results against "
                          "the committed BENCH_*.json (no overwrite); exit "
                          "1 on a >20%% instances/sec regression")
     args = ap.parse_args()
 
-    from . import bench_synthetic, bench_mnist, bench_phases, \
+    from . import bench_synthetic, bench_mnist, \
         bench_routing, bench_ot, bench_batched, bench_sharded, \
-        bench_solution, bench_faults, bench_serve
+        bench_solution, bench_faults, bench_serve, bench_kernels
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
         "mnist": bench_mnist.run,           # paper Fig. 2
-        "phases": bench_phases.run,         # Section 3.2 bounds
         "ot": bench_ot.run,                 # Section 4 clustered solver
         "routing": bench_routing.run,       # framework integration
         "batched": bench_batched.run,       # batched serving subsystem
@@ -104,16 +104,19 @@ def main() -> None:
         "solution": bench_solution.run,     # typed result surface fetch
         "faults": bench_faults.run,         # admission gate + recovery
         "serve": bench_serve.run,           # saturation + obs overhead
+        "kernels": bench_kernels.run,       # fused vs stepped phase loop
+        #   (also carries the Section 3.2 phase-bound rows that lived in
+        #   the retired bench_phases family)
     }
     if args.diff and args.only is None:
         # diff mode only makes sense for the JSON-emitting families
-        args.only = "batched,sharded,solution,faults,serve"
+        args.only = "batched,sharded,solution,faults,serve,kernels"
     only = set(args.only.split(",")) if args.only else set(benches)
     if args.diff and not ({"batched", "sharded", "solution",
-                           "faults", "serve"} & only):
+                           "faults", "serve", "kernels"} & only):
         ap.error("--diff compares the JSON-emitting families; include "
-                 "batched, sharded, solution, faults and/or serve in "
-                 "--only")
+                 "batched, sharded, solution, faults, serve and/or "
+                 "kernels in --only")
     regressions: list = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -162,6 +165,14 @@ def main() -> None:
                                             "BENCH_serve.json")
             else:
                 bench_serve.write_json("BENCH_serve.json")
+        if name == "kernels":
+            # us/phase + phases/sec per kernel per backend, fused vs
+            # unfused phase loop (parity-asserted per row)
+            if args.diff:
+                regressions += diff_records(bench_kernels.RECORDS,
+                                            "BENCH_kernels.json")
+            else:
+                bench_kernels.write_json("BENCH_kernels.json")
     if args.diff:
         write_step_summary(regressions)
         if regressions:

@@ -348,6 +348,46 @@ def main():
           f"request outcomes={outcomes14}")
     assert outcomes14 == ["rejected", "resolved"]
 
+    # 15. the fused phase kernel: DispatchPolicy(fused=True) swaps the
+    #     k-phase inner loop for ONE Pallas kernel per chunk — slack +
+    #     propose/accept + push + relabel with the solver state resident
+    #     in VMEM across all k phases, instead of round-tripping through
+    #     XLA/HBM between the slack_propose kernel and the state
+    #     updates. Results are BIT-IDENTICAL to the stepped cores
+    #     (tests/test_fused_phase.py asserts it across k, padded lanes,
+    #     mixed per-instance eps, and every dispatch mode), so it is a
+    #     pure perf knob. Block sizes resolve per backend from the table
+    #     in kernels/ops.py (kernel_blocks); off-TPU the kernel runs in
+    #     interpret mode — the committed BENCH_kernels.json rows carry
+    #     mode=interpret|compiled so CPU numbers are never mistaken for
+    #     accelerator numbers.
+    from repro.kernels.ops import kernel_blocks
+
+    pol_fused = DispatchPolicy(mode="compact", chunk=4, fused=True)
+    r_f, _ = solve(OT, {"c": cb, "nu": nub, "mu": mub}, 0.1, pol_fused)
+    r_s, _ = solve(OT, {"c": cb, "nu": nub, "mu": mub}, 0.1,
+                   DispatchPolicy(mode="compact", chunk=4))
+    assert np.array_equal(np.asarray(r_f.plan), np.asarray(r_s.plan))
+    print(f"fused: compact dispatch through the fused kernel matches the "
+          f"stepped core exactly (cost {float(r_f.cost[0]):.4f}); "
+          f"fused_phase blocks for this backend = "
+          f"{kernel_blocks('fused_phase')}")
+
+    #     benchmarks/bench_kernels.py writes BENCH_kernels.json
+    #     (us/phase + phases/sec per kernel, fused vs stepped, parity-
+    #     asserted per row; gated by benchmarks/run.py --diff in CI):
+    #
+    #         {"name": "kernels/assignment_phase/fused/n=256/...",
+    #          "us_per_call": ..., "instances_per_s": ...,
+    #          "mode": "interpret"}
+    #
+    #     for GPU launches, launch/platform.py pins the backend and
+    #     installs the latency-hiding/async-stream XLA flags BEFORE the
+    #     first jax computation (after backend init they are ignored):
+    #
+    #         from repro.launch.platform import set_platform
+    #         set_platform("gpu")   # jax_platform_name + XLA_FLAGS
+
 
 if __name__ == "__main__":
     main()

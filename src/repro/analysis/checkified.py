@@ -79,13 +79,24 @@ def _throwing(ck_fn):
     return wrapped
 
 
-@lru_cache(maxsize=None)
 def checkified_spec_fns(spec, k: int):
     """(prologue, init, chunk, conv, epilogue) mirroring
     ``compaction.spec_fns`` with checkify instrumentation on the
     prologue, chunk, and epilogue dispatches (init and the converged
     probe stay plain: they are pure shape/compare code). Same call
-    signatures; the chunk does NOT donate."""
+    signatures; the chunk does NOT donate.
+
+    Fused specs route through their stepped base (BEFORE the cache, so
+    fused and stepped share one instrumented program family): checkify
+    cannot instrument the interior of a Pallas kernel (the state never
+    surfaces between phases), and the fused trajectory is bit-identical
+    to the stepped one (tests/test_fused_phase.py), so the stepped chunk
+    checks exactly the states the fused kernel would produce."""
+    return _checkified_spec_fns(getattr(spec, "stepped", spec), k)
+
+
+@lru_cache(maxsize=None)
+def _checkified_spec_fns(spec, k: int):
     from ..core.compaction import spec_fns
 
     _, init, _, conv, _ = spec_fns(spec, k)

@@ -48,8 +48,14 @@ import numpy as np
 
 from .compaction import DEFAULT_CHUNK, CompactionStats, solve_compacting
 from .distributed import solve_mesh
-from .problem import ASSIGNMENT, OT  # noqa: F401  (re-exported: the
-#   front door and the specs it dispatches are one import site)
+from .problem import (  # noqa: F401  (re-exported: the front door and
+    #   the specs it dispatches are one import site)
+    ASSIGNMENT,
+    FUSED_ASSIGNMENT,
+    FUSED_OT,
+    OT,
+    fused_variant,
+)
 from .solution import Solution, SolutionBatch, SolveStats
 
 _MODES = ("auto", "lockstep", "compact", "mesh")
@@ -81,6 +87,17 @@ class DispatchPolicy:
         layers do their own per-request quarantine instead (reject one
         Future, keep the bucket); this flag is the all-or-nothing direct
         API equivalent.
+      fused: run the k-phase loop through the fused Pallas phase kernel
+        (``kernels/fused_phase``): slack + propose/accept + push +
+        relabel in ONE kernel with the solver state resident in VMEM
+        across all k phases, instead of the stepped
+        ``slack_propose``-plus-XLA-update loop. Bit-identical results
+        (asserted in tests/test_fused_phase.py); block sizes come from
+        the backend table in ``kernels/ops.py``. Under mesh/matrix
+        placement the per-instance row/col-sharded solve falls back to
+        the stepped kernels (the fused kernel is a whole-instance
+        program; sharding a single instance across devices is exactly
+        the regime it cannot cover).
     """
     mode: str = "auto"
     mesh: Any = None
@@ -90,6 +107,7 @@ class DispatchPolicy:
     guaranteed: bool = False
     want: Optional[Tuple[str, ...]] = None
     validate: bool = False
+    fused: bool = False
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -151,6 +169,8 @@ def dispatch(
     ignores it (one unbounded program, nothing per-chunk to report)."""
     policy = policy or DispatchPolicy()
     mode = policy.resolved_mode()
+    if policy.fused:
+        spec = fused_variant(spec)
     if policy.validate:
         from .validate import check_admission
         check_admission(spec.canonicalize(inputs), sizes=sizes)

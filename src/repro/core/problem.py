@@ -714,8 +714,111 @@ class OTSpec:
         )
 
 
+# --------------------------------------------------------------------------
+# Fused-kernel spec variants
+# --------------------------------------------------------------------------
+#
+# Same protocol, same prologue/epilogue/trim/artifact surface — only
+# ``run_phases`` differs: it dispatches the single fused Pallas kernel
+# (``kernels/fused_phase``) that keeps the full solver state in VMEM
+# across all k phases instead of bouncing it through HBM between
+# ``slack_propose`` and the XLA state updates. The fused kernels are
+# bit-identical to the stepped cores (asserted in
+# tests/test_fused_phase.py), so every driver-level invariant — chained
+# resumability, lockstep == compact, padded-lane inertness — carries
+# over unchanged. Because ``core/compaction.spec_fns`` caches programs
+# per spec IDENTITY, the fused singletons get their own jit program
+# family automatically; ``name`` stays "assignment"/"ot" so result
+# shaping, bucketing, and the serving layers treat them as the same
+# problem. ``stepped`` points back at the base singleton — the checkify
+# sanitizer (analysis/checkified.py) re-routes through it because it
+# cannot instrument the inside of a Pallas kernel.
+
+
+class FusedAssignmentSpec(AssignmentSpec):
+    """AssignmentSpec whose k-phase loop is the fused Pallas kernel."""
+
+    fused = True
+
+    def run_phases(self, data, state, k: int):
+        from ..kernels import ops as _kops
+
+        return _kops.fused_run_assignment_phases(
+            data["c_int"], state, data["threshold"], data["phase_cap"], k,
+            m_valid=data["m_valid"])
+
+    def _lockstep_k(self, eps_arr, m: int) -> int:
+        return max(_max_phases(float(e), m) for e in eps_arr) + 1
+
+    def solve_lockstep(self, inputs, eps: float, *, sizes=None,
+                       guaranteed: bool = False, keep_state: bool = False):
+        return _fused_lockstep(self, inputs, eps, sizes=sizes,
+                               guaranteed=guaranteed, keep_state=keep_state)
+
+
+class FusedOTSpec(OTSpec):
+    """OTSpec whose k-phase loop is the fused Pallas kernel."""
+
+    fused = True
+
+    def run_phases(self, data, state, k: int):
+        from ..kernels import ops as _kops
+
+        m, n = data["c_int"].shape
+        return _kops.fused_run_ot_phases(
+            data["c_int"], state, data["threshold"], data["phase_cap"], k,
+            int(m + n + 2))
+
+    def _lockstep_k(self, eps_arr, m: int) -> int:
+        return max(ot_phase_cap(float(e)) for e in eps_arr) + 1
+
+    def solve_lockstep(self, inputs, eps: float, *, sizes=None,
+                       guaranteed: bool = False, keep_state: bool = False,
+                       theta=None):
+        return _fused_lockstep(self, inputs, eps, sizes=sizes,
+                               guaranteed=guaranteed, keep_state=keep_state,
+                               theta=theta)
+
+
+def _fused_lockstep(spec, inputs, eps, *, sizes, guaranteed, keep_state,
+                    **prep_kw):
+    """Lockstep for the fused specs: one compacting dispatch with k set
+    above every phase cap, so the whole batch runs to termination in a
+    single kernel launch — genuine lockstep semantics (no compaction ever
+    fires) through the fused ``run_phases``. The base specs' lockstep
+    delegates to ``core/batched``, which is hard-wired to the stepped
+    while-loop cores; routing through the spec-generic compacting driver
+    keeps the fused path out of that module entirely."""
+    from .compaction import solve_compacting
+
+    b, m, _ = (int(s) for s in np.shape(inputs["c"]))
+    k_all = spec._lockstep_k(eps_array(eps, b, guaranteed), m)
+    r, stats = solve_compacting(
+        spec, inputs, eps, sizes=sizes, k=k_all, guaranteed=guaranteed,
+        keep_state=keep_state, **prep_kw)
+    return r, (stats.final_state if keep_state else None)
+
+
 ASSIGNMENT = AssignmentSpec()
 OT = OTSpec()
+FUSED_ASSIGNMENT = FusedAssignmentSpec()
+FUSED_OT = FusedOTSpec()
+FusedAssignmentSpec.stepped = ASSIGNMENT
+FusedOTSpec.stepped = OT
+AssignmentSpec.fused = False
+OTSpec.fused = False
+
+
+def fused_variant(spec):
+    """Map a base spec to its fused-kernel variant (identity on the fused
+    singletons themselves). Raises for unknown specs rather than guessing."""
+    if getattr(spec, "fused", False):
+        return spec
+    if spec is ASSIGNMENT:
+        return FUSED_ASSIGNMENT
+    if spec is OT:
+        return FUSED_OT
+    raise ValueError(f"no fused variant registered for spec {spec!r}")
 
 
 # --------------------------------------------------------------------------

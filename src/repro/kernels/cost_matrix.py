@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .slack_propose import _resolve_interpret
+
 
 def _sqeuclid_tile(x, y, euclid: bool):
     """Shared (BM, D) x (BN, D) -> (BM, BN) tile body."""
@@ -79,7 +81,7 @@ def cost_matrix(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     m, d = x.shape
     n, d2 = y.shape
@@ -107,7 +109,7 @@ def cost_matrix(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(x_p, y_p)
     return out[:m, :n]
 
@@ -120,7 +122,7 @@ def cost_matrix_batched(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Batched pairwise costs: (B, m, d) x (B, n, d) -> (B, m, n).
 
@@ -155,6 +157,6 @@ def cost_matrix_batched(
         out_specs=pl.BlockSpec((1, block_m, block_n),
                                lambda g, i, j: (g, i, j)),
         out_shape=jax.ShapeDtypeStruct((b, mp, np_), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(x_p, y_p)
     return out[:, :m, :n]

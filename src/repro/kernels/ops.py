@@ -3,6 +3,13 @@
 On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs in Python-on-XLA semantics, which validates the exact tiling logic
 that will run on TPU. On a TPU backend `interpret=False` compiles to Mosaic.
+
+Block sizes are resolved per backend from ``_BLOCK_TABLE`` when a wrapper
+is called without explicit overrides: TPU wants MXU/VPU-native 128-wide
+tiles, GPU favors shorter row tiles (more blocks in flight per SM, still
+128-wide for coalescing), CPU interpret mode keeps the TPU shapes so the
+emulated tiling matches what ships. Explicit ``block_m=``/``block_n=``
+always win (the block-size invariance tests sweep them).
 """
 from __future__ import annotations
 
@@ -14,6 +21,9 @@ import jax.numpy as jnp
 from . import slack_propose as _sp
 from . import cost_matrix as _cm
 from . import sinkhorn_step as _ss
+from . import fused_phase as _fp
+from ..core.pushrelabel import PushRelabelState
+from ..core.transport import OTState
 
 
 def _interpret() -> bool:
@@ -21,10 +31,52 @@ def _interpret() -> bool:
     return _sp._resolve_interpret(None)
 
 
+# Per-backend (block_m, block_n[, block_k]) defaults per kernel family.
+# ``fused_phase`` blocks are a pad granularity (whole-array kernel), so the
+# row tile is the narrow VMEM sublane count, not a grid tile.
+_BLOCK_TABLE = {
+    "tpu": {
+        "slack_propose": (128, 128),
+        "cost_matrix": (128, 128, 32),
+        "sinkhorn_row_update": (128, 128),
+        "fused_phase": (8, 128),
+    },
+    "gpu": {
+        "slack_propose": (64, 128),
+        "cost_matrix": (64, 128, 32),
+        "sinkhorn_row_update": (64, 128),
+        "fused_phase": (16, 128),
+    },
+    # interpret-mode backends (cpu et al.) mirror the TPU tiling so the
+    # emulated kernels exercise the shipped block shapes
+    "cpu": {
+        "slack_propose": (128, 128),
+        "cost_matrix": (128, 128, 32),
+        "sinkhorn_row_update": (128, 128),
+        "fused_phase": (8, 128),
+    },
+}
+
+
+def kernel_blocks(kernel: str, backend: str | None = None) -> tuple:
+    """Backend-tuned block sizes for ``kernel`` (see ``_BLOCK_TABLE``)."""
+    backend = backend or jax.default_backend()
+    table = _BLOCK_TABLE.get(backend, _BLOCK_TABLE["cpu"])
+    return table[kernel]
+
+
+def _blocks2(kernel: str, block_m, block_n) -> tuple:
+    bm, bn = kernel_blocks(kernel)[:2]
+    return (bm if block_m is None else block_m,
+            bn if block_n is None else block_n)
+
+
 @partial(jax.jit, static_argnames=("block_m", "block_n"))
-def slack_propose(c_int, y_b, y_a, avail_a, salt, *, block_m=128, block_n=128):
+def slack_propose(c_int, y_b, y_a, avail_a, salt, *, block_m=None,
+                  block_n=None):
     # interpret=None: resolved per-backend inside the kernel module
     # (compiled Mosaic on TPU, interpret elsewhere).
+    block_m, block_n = _blocks2("slack_propose", block_m, block_n)
     return _sp.slack_propose(
         c_int, y_b, y_a, avail_a, salt,
         block_m=block_m, block_n=block_n, interpret=None,
@@ -33,7 +85,8 @@ def slack_propose(c_int, y_b, y_a, avail_a, salt, *, block_m=128, block_n=128):
 
 @partial(jax.jit, static_argnames=("block_m", "block_n"))
 def slack_propose_batched(c_int, y_b, y_a, avail_a, salt, *,
-                          block_m=128, block_n=128):
+                          block_m=None, block_n=None):
+    block_m, block_n = _blocks2("slack_propose", block_m, block_n)
     return _sp.slack_propose_batched(
         c_int, y_b, y_a, avail_a, salt,
         block_m=block_m, block_n=block_n, interpret=None,
@@ -41,38 +94,94 @@ def slack_propose_batched(c_int, y_b, y_a, avail_a, salt, *,
 
 
 @partial(jax.jit, static_argnames=("metric", "block_m", "block_n", "block_k"))
-def cost_matrix(x, y, metric="sqeuclidean", *, block_m=128, block_n=128,
-                block_k=32):
+def cost_matrix(x, y, metric="sqeuclidean", *, block_m=None, block_n=None,
+                block_k=None):
+    bm, bn, bk = kernel_blocks("cost_matrix")
     return _cm.cost_matrix(
         x, y, metric,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=_interpret(),
+        block_m=block_m or bm, block_n=block_n or bn, block_k=block_k or bk,
+        interpret=None,
     )
 
 
 @partial(jax.jit, static_argnames=("metric", "block_m", "block_n", "block_k"))
-def cost_matrix_batched(x, y, metric="sqeuclidean", *, block_m=128,
-                        block_n=128, block_k=32):
+def cost_matrix_batched(x, y, metric="sqeuclidean", *, block_m=None,
+                        block_n=None, block_k=None):
     """(B, m, d) x (B, n, d) -> (B, m, n) in one kernel launch; grid
     (B, m/BM, n/BN), mirroring slack_propose_batched's layout."""
+    bm, bn, bk = kernel_blocks("cost_matrix")
     return _cm.cost_matrix_batched(
         x, y, metric,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=_interpret(),
+        block_m=block_m or bm, block_n=block_n or bn, block_k=block_k or bk,
+        interpret=None,
     )
 
 
 @partial(jax.jit, static_argnames=("reg", "block_m", "block_n"))
-def sinkhorn_row_update(c, g, log_nu, reg, *, block_m=128, block_n=128):
+def sinkhorn_row_update(c, g, log_nu, reg, *, block_m=None, block_n=None):
+    block_m, block_n = _blocks2("sinkhorn_row_update", block_m, block_n)
     return _ss.sinkhorn_row_update(
         c, g, log_nu, reg,
-        block_m=block_m, block_n=block_n, interpret=_interpret(),
+        block_m=block_m, block_n=block_n, interpret=None,
     )
 
 
-def make_pallas_propose_fn(block_m: int = 128, block_n: int = 128):
+# --------------------------------------------------------------------------
+# Fused k-phase dispatches: drop-in replacements for the stepped cores'
+# run_*_phases (same signature, same donation contract, bit-identical
+# state trajectory), with the whole chunk in one pallas_call.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k", "block_m", "block_n"),
+         donate_argnums=(1,))
+def fused_run_assignment_phases(c_int, state: PushRelabelState, threshold,
+                                phase_cap, k: int, m_valid=None, *,
+                                block_m=None, block_n=None
+                                ) -> PushRelabelState:
+    """Fused counterpart of ``core.pushrelabel.run_assignment_phases``:
+    at most ``k`` phases in ONE kernel launch, state resident in VMEM
+    across the whole chunk. ``state`` is DONATED, exactly like the
+    stepped core — callers must rebind."""
+    m, n = c_int.shape
+    block_m, block_n = _blocks2("fused_phase", block_m, block_n)
+    mv = jnp.int32(m) if m_valid is None else jnp.asarray(m_valid, jnp.int32)
+    (mba, mab, y_b, y_a, phases, rounds, sum_ni) = _fp.fused_assignment_phases(
+        c_int, state.match_ba, state.match_ab, state.y_b, state.y_a,
+        state.phases, state.rounds, state.sum_ni,
+        threshold, phase_cap, mv,
+        k=k, block_m=block_m, block_n=block_n, interpret=None,
+    )
+    return PushRelabelState(match_ba=mba, match_ab=mab, y_b=y_b, y_a=y_a,
+                            phases=phases, rounds=rounds, sum_ni=sum_ni)
+
+
+@partial(jax.jit, static_argnames=("k", "max_rounds", "block_m", "block_n"),
+         donate_argnums=(1,))
+def fused_run_ot_phases(c_int, state: OTState, threshold, phase_cap,
+                        k: int, max_rounds: int, *, block_m=None,
+                        block_n=None) -> OTState:
+    """Fused counterpart of ``core.transport.run_ot_phases`` (state —
+    dominated by the two (nb, na) flow matrices — stays in VMEM across
+    the k-phase chunk; DONATED like the stepped core)."""
+    block_m, block_n = _blocks2("fused_phase", block_m, block_n)
+    (y_b, ya_hi, free_b, free_a, f_hi, f_lo, phases, rounds) = \
+        _fp.fused_ot_phases(
+            c_int, state.y_b, state.ya_hi, state.free_b, state.free_a,
+            state.f_hi, state.f_lo, state.phases, state.rounds,
+            threshold, phase_cap,
+            k=k, max_rounds=max_rounds, block_m=block_m, block_n=block_n,
+            interpret=None,
+        )
+    return OTState(y_b=y_b, ya_hi=ya_hi, free_b=free_b, free_a=free_a,
+                   f_hi=f_hi, f_lo=f_lo, phases=phases, rounds=rounds)
+
+
+def make_pallas_propose_fn(block_m: int | None = None,
+                           block_n: int | None = None):
     """Adapter matching matching.greedy_maximal_matching's propose_fn
     signature, so the phase loop can run on the fused kernel."""
+    block_m, block_n = _blocks2("slack_propose", block_m, block_n)
 
     def propose(c_int, y_b, y_a, active_b, avail_a, salt_round):
         col, key = _sp.slack_propose(
@@ -146,6 +255,52 @@ def _trace_sinkhorn_row_update():
     )
 
 
+def _trace_fused_assignment():
+    from ..core.pushrelabel import init_assignment_state
+
+    m = n = 8
+    return _audit.trace_entry(
+        name="kernels.ops.fused_run_assignment_phases",
+        fn=lambda c_int, state, threshold, phase_cap, m_valid:
+            fused_run_assignment_phases(c_int, state, threshold, phase_cap,
+                                        4, m_valid=m_valid),
+        args={
+            "c_int": jnp.zeros((m, n), jnp.int32),
+            "state": init_assignment_state(m, n),
+            "threshold": jnp.int32(0),
+            "phase_cap": jnp.int32(8),
+            "m_valid": jnp.int32(m),
+        },
+        donated={"state"},
+        must_trace={"threshold", "phase_cap", "m_valid"},
+        tags={"pallas", "stepped-core", "assignment", "fused"},
+        source=__name__,
+    )
+
+
+def _trace_fused_ot():
+    from ..core.transport import init_ot_state
+
+    m = n = 8
+    return _audit.trace_entry(
+        name="kernels.ops.fused_run_ot_phases",
+        fn=lambda c_int, state, threshold, phase_cap:
+            fused_run_ot_phases(c_int, state, threshold, phase_cap, 4,
+                                max_rounds=int(m + n + 2)),
+        args={
+            "c_int": jnp.zeros((m, n), jnp.int32),
+            "state": init_ot_state(jnp.ones((m,), jnp.int32),
+                                   jnp.ones((n,), jnp.int32)),
+            "threshold": jnp.int32(0),
+            "phase_cap": jnp.int32(8),
+        },
+        donated={"state"},
+        must_trace={"threshold", "phase_cap"},
+        tags={"pallas", "stepped-core", "ot", "fused"},
+        source=__name__,
+    )
+
+
 _audit.register("kernels.ops.slack_propose", _trace_slack_propose,
                 source=__name__)
 _audit.register("kernels.ops.cost_matrix",
@@ -153,4 +308,8 @@ _audit.register("kernels.ops.cost_matrix",
 _audit.register("kernels.ops.cost_matrix_batched",
                 lambda: _trace_cost_matrix(True), source=__name__)
 _audit.register("kernels.ops.sinkhorn_row_update", _trace_sinkhorn_row_update,
+                source=__name__)
+_audit.register("kernels.ops.fused_run_assignment_phases",
+                _trace_fused_assignment, source=__name__)
+_audit.register("kernels.ops.fused_run_ot_phases", _trace_fused_ot,
                 source=__name__)

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .slack_propose import _resolve_interpret
+
 
 def _kernel(c_ref, g_ref, lognu_ref, f_ref, m_acc, s_acc, *, nj: int,
             inv_reg: float, reg: float):
@@ -49,7 +51,7 @@ def sinkhorn_row_update(
     *,
     block_m: int = 128,
     block_n: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     m, n = c.shape
     pm, pn = (-m) % block_m, (-n) % block_n
@@ -79,6 +81,6 @@ def sinkhorn_row_update(
             jax.ShapeDtypeStruct((mp, 1), jnp.float32),
             jax.ShapeDtypeStruct((mp, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(c_p, g_p, lognu_p)
     return f[:m, 0]

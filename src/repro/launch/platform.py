@@ -1,0 +1,60 @@
+"""Backend selection + per-backend XLA tuning flags, applied BEFORE the
+first jax device touch.
+
+``set_platform`` pins ``jax_platform_name`` and, for GPU, installs the
+latency-hiding / async-stream XLA flags the fused phase kernels are
+tuned against (the paper's GPU implementation overlaps the propose/push
+sweeps with collective traffic; XLA only does the equivalent when the
+latency-hiding scheduler and high-priority async streams are enabled).
+Like the mesh builders in ``launch/mesh.py``, everything here is a
+FUNCTION — importing this module never touches jax backend state, and
+``set_platform`` must run before the first computation (jax initializes
+its backend once, on first use; ``jax.config.update`` after that point
+is silently ignored for an already-initialized backend).
+
+The flag set mirrors jax's own GPU performance guidance; `gpu_flags()`
+exposes it separately so launchers that manage ``XLA_FLAGS`` themselves
+(SLURM prologs, container entrypoints) can merge rather than overwrite.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+_PLATFORMS = ("cpu", "gpu", "tpu")
+
+
+def gpu_flags() -> str:
+    """The GPU XLA flag string, for launchers that merge ``XLA_FLAGS``
+    themselves instead of calling :func:`set_platform`."""
+    return " ".join(_GPU_XLA_FLAGS)
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin the jax backend to ``platform`` ('cpu' | 'gpu' | 'tpu') and,
+    on GPU, install the latency-hiding/async-stream XLA flags.
+
+    Call this before the first jax computation of the process; existing
+    ``XLA_FLAGS`` content is preserved (our flags are appended, so an
+    operator-set flag wins under XLA's last-one-wins parsing only if it
+    comes later — we therefore skip any flag the environment already
+    sets)."""
+    if platform not in _PLATFORMS:
+        raise ValueError(
+            f"unknown platform {platform!r}; expected one of {_PLATFORMS}")
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        existing = os.environ.get("XLA_FLAGS", "")
+        keep = [f for f in _GPU_XLA_FLAGS
+                if f.split("=")[0] not in existing]
+        os.environ["XLA_FLAGS"] = " ".join(
+            ([existing] if existing else []) + keep)

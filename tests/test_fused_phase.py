@@ -1,0 +1,245 @@
+"""Fused Pallas phase kernel vs the stepped cores: bit-parity contract.
+
+The fused kernel (``kernels/fused_phase``) replays the EXACT stepped
+trajectory — same hash schedule, same first-min tie-breaking, same
+FIFO grant order — so every integer state field must match the stepped
+cores bit for bit, per chunk, for any k, any tile padding, and any
+m_valid row masking. The float result surfaces (cost, duals) go through
+the identical epilogue on identical integer states; the policy tests
+allow 1e-6 on them because the stepped and fused LOCKSTEP paths compile
+the epilogue into differently-partitioned programs (core/batched's
+single fused program vs the compacting driver's chunked one), and XLA
+reassociates the float pricing math across that boundary — ulp-level,
+same caveat as mesh/matrix placement. Under identical program
+structure (compact vs compact) the integer parity makes floats equal
+too, but we assert the documented tolerance, not the accident.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.api import (
+    ASSIGNMENT,
+    FUSED_ASSIGNMENT,
+    FUSED_OT,
+    OT,
+    DispatchPolicy,
+    fused_variant,
+    solve,
+)
+from repro.core.pushrelabel import (
+    _max_phases,
+    assignment_prologue,
+    init_assignment_state,
+    run_assignment_phases,
+)
+from repro.core.transport import (
+    init_ot_state,
+    ot_phase_cap,
+    ot_prologue,
+    ot_termination_threshold,
+    run_ot_phases,
+)
+from repro.kernels import ops
+
+
+def _assert_states_equal(ref, out, tag=""):
+    for f, a, b in zip(ref._fields, ref, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{tag} field {f}")
+
+
+# ---------------------------------------------------------------------------
+# core-level chunk parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 5, 64])
+@pytest.mark.parametrize("m,n,m_valid", [(24, 24, None), (33, 47, None),
+                                         (40, 28, 31)])
+def test_fused_assignment_chunks_match_stepped(k, m, n, m_valid):
+    """Chained fused k-phase chunks == chained stepped chunks, bit for
+    bit on every state field, through convergence — including padded
+    rows (m_valid < m) and tile-edge shapes."""
+    rng = np.random.default_rng(k * 1000 + m + n)
+    eps = 0.1
+    c = rng.uniform(size=(m, n)).astype(np.float32)
+    mv = None
+    if m_valid is not None:
+        c[m_valid:, :] = 0.0
+        mv = jnp.int32(m_valid)
+    _, c_int, _, _, _ = assignment_prologue(
+        jnp.asarray(c), eps, mv, None if m_valid is None else jnp.int32(n))
+    thr = jnp.int32(int(eps * (m if m_valid is None else m_valid)))
+    cap = jnp.int32(_max_phases(eps, m))
+    s_ref = init_assignment_state(m, n)
+    s_fus = init_assignment_state(m, n)
+    for _ in range(4):
+        s_ref = run_assignment_phases(c_int, s_ref, thr, cap, k, m_valid=mv)
+        s_fus = ops.fused_run_assignment_phases(c_int, s_fus, thr, cap, k,
+                                                m_valid=mv)
+        _assert_states_equal(s_ref, s_fus, f"k={k}")
+
+
+@pytest.mark.parametrize("k", [1, 3, 32])
+@pytest.mark.parametrize("nb,na", [(16, 16), (21, 13), (9, 30)])
+def test_fused_ot_chunks_match_stepped(k, nb, na):
+    rng = np.random.default_rng(k * 100 + nb * na)
+    eps = 0.2
+    c = rng.uniform(size=(nb, na)).astype(np.float32)
+    nu = rng.dirichlet(np.ones(nb)).astype(np.float32)
+    mu = rng.dirichlet(np.ones(na)).astype(np.float32)
+    theta = np.float32(4.0 * max(nb, na) / eps)
+    c_int, s_int, d_int, _ = ot_prologue(
+        jnp.asarray(c), jnp.asarray(nu), jnp.asarray(mu), theta, eps)
+    thr = jnp.int32(ot_termination_threshold(nu, theta, eps))
+    cap = jnp.int32(ot_phase_cap(eps))
+    mr = int(nb + na + 2)
+    s_ref = init_ot_state(s_int, d_int)
+    s_fus = init_ot_state(s_int, d_int)
+    for _ in range(3):
+        s_ref = run_ot_phases(c_int, s_ref, thr, cap, k, mr)
+        s_fus = ops.fused_run_ot_phases(c_int, s_fus, thr, cap, k, mr)
+        _assert_states_equal(s_ref, s_fus, f"k={k}")
+
+
+def test_fused_kernels_are_resumable_across_k():
+    """One k=8 fused chunk == four chained k=2 fused chunks (the stepped
+    cores' resumability contract carries over to the fused kernel)."""
+    rng = np.random.default_rng(7)
+    n = 20
+    c_int = jnp.asarray(rng.integers(0, 100, size=(n, n)), jnp.int32)
+    thr, cap = jnp.int32(1), jnp.int32(64)
+    one = ops.fused_run_assignment_phases(
+        c_int, init_assignment_state(n, n), thr, cap, 8)
+    many = init_assignment_state(n, n)
+    for _ in range(4):
+        many = ops.fused_run_assignment_phases(c_int, many, thr, cap, 2)
+    _assert_states_equal(one, many)
+
+
+# ---------------------------------------------------------------------------
+# policy-level parity: fused specs through the solve() front door
+# ---------------------------------------------------------------------------
+
+
+def _batch(seed=0, b=5, m=20, n=26):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(size=(b, m, n)).astype(np.float32)
+    nu = rng.uniform(size=(b, m)).astype(np.float32)
+    nu /= nu.sum(1, keepdims=True)
+    mu = rng.uniform(size=(b, n)).astype(np.float32)
+    mu /= mu.sum(1, keepdims=True)
+    sizes = np.asarray([[m, n], [15, 22], [m, n], [11, n], [m, 17]],
+                       np.int32)[:b]
+    return c, nu, mu, sizes
+
+
+def _assert_results_match(rs, rf, tag, float_tol=0.0):
+    for a, b in zip(jax.tree_util.tree_leaves(rs),
+                    jax.tree_util.tree_leaves(rf)):
+        a, b = np.asarray(a), np.asarray(b)
+        if np.issubdtype(a.dtype, np.integer) or float_tol == 0.0:
+            np.testing.assert_array_equal(a, b, err_msg=tag)
+        else:
+            np.testing.assert_allclose(a, b, rtol=float_tol,
+                                       atol=float_tol, err_msg=tag)
+
+
+@pytest.mark.parametrize("mode", ["lockstep", "compact"])
+def test_fused_policy_assignment_matches_stepped(mode):
+    """DispatchPolicy(fused=True) == the stepped policy, bit for bit:
+    results AND retained integer state, across padded lanes and (under
+    compact) mixed per-instance eps."""
+    c, _, _, sizes = _batch()
+    eps = 0.1 if mode == "lockstep" else np.asarray(
+        [0.1, 0.2, 0.1, 0.15, 0.1])
+    rs, ss = solve(ASSIGNMENT, {"c": c}, eps,
+                   DispatchPolicy(mode=mode, chunk=3), sizes=sizes,
+                   keep_state=True)
+    rf, sf = solve(ASSIGNMENT, {"c": c}, eps,
+                   DispatchPolicy(mode=mode, chunk=3, fused=True),
+                   sizes=sizes, keep_state=True)
+    _assert_results_match(rs, rf, f"assignment/{mode}", float_tol=1e-6)
+    _assert_states_equal(ss.final_state, sf.final_state,
+                         f"assignment/{mode}")
+
+
+@pytest.mark.parametrize("mode", ["lockstep", "compact"])
+def test_fused_policy_ot_matches_stepped(mode):
+    c, nu, mu, sizes = _batch(seed=3)
+    eps = 0.15 if mode == "lockstep" else np.asarray(
+        [0.15, 0.25, 0.15, 0.2, 0.15])
+    inputs = {"c": c, "nu": nu, "mu": mu}
+    rs, ss = solve(OT, inputs, eps, DispatchPolicy(mode=mode, chunk=3),
+                   sizes=sizes, keep_state=True)
+    rf, sf = solve(OT, inputs, eps,
+                   DispatchPolicy(mode=mode, chunk=3, fused=True),
+                   sizes=sizes, keep_state=True)
+    _assert_results_match(rs, rf, f"ot/{mode}", float_tol=1e-6)
+    _assert_states_equal(ss.final_state, sf.final_state, f"ot/{mode}")
+
+
+def test_fused_policy_mesh_matches_stepped():
+    """Batch-sharded mesh dispatch through the fused kernel (pallas_call
+    under shard_map) == the stepped mesh dispatch."""
+    from repro.launch.mesh import make_batch_mesh
+
+    mesh = make_batch_mesh()
+    c, nu, mu, sizes = _batch(seed=5)
+    pol_s = DispatchPolicy(mode="mesh", mesh=mesh, chunk=2,
+                           placement="batch")
+    pol_f = DispatchPolicy(mode="mesh", mesh=mesh, chunk=2,
+                           placement="batch", fused=True)
+    rs, _ = solve(ASSIGNMENT, {"c": c}, 0.12, pol_s, sizes=sizes)
+    rf, _ = solve(ASSIGNMENT, {"c": c}, 0.12, pol_f, sizes=sizes)
+    _assert_results_match(rs, rf, "assignment/mesh", float_tol=1e-6)
+    inputs = {"c": c, "nu": nu, "mu": mu}
+    rs, _ = solve(OT, inputs, 0.2, pol_s, sizes=sizes)
+    rf, _ = solve(OT, inputs, 0.2, pol_f, sizes=sizes)
+    _assert_results_match(rs, rf, "ot/mesh", float_tol=1e-6)
+
+
+def test_fused_variant_mapping():
+    assert fused_variant(ASSIGNMENT) is FUSED_ASSIGNMENT
+    assert fused_variant(OT) is FUSED_OT
+    assert fused_variant(FUSED_ASSIGNMENT) is FUSED_ASSIGNMENT
+    assert FUSED_ASSIGNMENT.stepped is ASSIGNMENT
+    assert FUSED_OT.stepped is OT
+    assert FUSED_ASSIGNMENT.name == "assignment"  # same problem, same
+    assert FUSED_OT.name == "ot"                  # result shaping
+    with pytest.raises(ValueError):
+        fused_variant(object())
+
+
+def test_fused_specs_share_jit_cache_by_identity():
+    """The compacting driver's program cache is keyed on spec identity:
+    fused and stepped specs must get DISTINCT program families (a shared
+    entry would silently run one kernel under the other's name)."""
+    from repro.core.compaction import spec_fns
+
+    assert spec_fns(ASSIGNMENT, 4) is not spec_fns(FUSED_ASSIGNMENT, 4)
+    assert spec_fns(FUSED_ASSIGNMENT, 4) is spec_fns(FUSED_ASSIGNMENT, 4)
+
+
+def test_fused_debug_checks_route_through_stepped():
+    """REPRO_DEBUG_CHECKS instruments the stepped core for fused specs
+    (checkify cannot see inside a Pallas kernel); the checkified run
+    must still match the production fused run bit for bit."""
+    from repro.analysis.checkified import checkified_spec_fns
+
+    fns = checkified_spec_fns(FUSED_ASSIGNMENT, 3)
+    assert fns is checkified_spec_fns(ASSIGNMENT, 3)
+
+    import repro.analysis as analysis
+
+    c, _, _, sizes = _batch(seed=9)
+    pol = DispatchPolicy(mode="compact", chunk=3, fused=True)
+    r_prod, _ = solve(ASSIGNMENT, {"c": c}, 0.1, pol, sizes=sizes)
+    analysis.set_debug_checks(True)
+    try:
+        r_dbg, _ = solve(ASSIGNMENT, {"c": c}, 0.1, pol, sizes=sizes)
+    finally:
+        analysis.set_debug_checks(False)
+    _assert_results_match(r_prod, r_dbg, "debug-checks")

@@ -98,6 +98,78 @@ def test_sinkhorn_row_update_matches_ref(m, n, dtype):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("block_m,block_n",
+                         [(8, 32), (16, 128), (32, 64), (64, 256),
+                          (128, 128)])
+def test_slack_propose_tiling_invariance(block_m, block_n):
+    """slack_propose output is invariant across (block_m, block_n)
+    tilings, including non-divisible m/n edge tiles (100x150 divides
+    none of the swept blocks evenly on at least one axis)."""
+    rng = np.random.default_rng(42)
+    m, n = 100, 150
+    c = rng.integers(0, 5, size=(m, n)).astype(np.int32)
+    y_b = rng.integers(0, 3, size=m).astype(np.int32)
+    y_a = -rng.integers(0, 3, size=n).astype(np.int32)
+    avail = (rng.uniform(size=n) < 0.7)
+    args = (jnp.asarray(c), jnp.asarray(y_b), jnp.asarray(y_a),
+            jnp.asarray(avail), 7)
+    col0, key0 = ops.slack_propose(*args)
+    col, key = ops.slack_propose(*args, block_m=block_m, block_n=block_n)
+    np.testing.assert_array_equal(np.asarray(col), np.asarray(col0))
+    np.testing.assert_array_equal(np.asarray(key), np.asarray(key0))
+
+
+@pytest.mark.parametrize("block_m,block_n",
+                         [(4, 16), (8, 32), (16, 64), (32, 256)])
+def test_fused_phase_tiling_invariance(block_m, block_n):
+    """The fused phase kernels' trajectories are invariant across
+    (block_m, block_n) tilings — the tile padding (PAD_COST cols, zero
+    supply rows) must be inert at every granularity, including edge
+    tiles ((37, 53) divides none of the swept blocks)."""
+    from repro.core.pushrelabel import init_assignment_state
+    from repro.core.transport import init_ot_state
+
+    rng = np.random.default_rng(3)
+    m, n = 37, 53
+    c_int = jnp.asarray(rng.integers(0, 200, size=(m, n)), jnp.int32)
+    thr, cap = jnp.int32(2), jnp.int32(50)
+    ref_st = ops.fused_run_assignment_phases(
+        c_int, init_assignment_state(m, n), thr, cap, 4)
+    out = ops.fused_run_assignment_phases(
+        c_int, init_assignment_state(m, n), thr, cap, 4,
+        block_m=block_m, block_n=block_n)
+    for f, a, b in zip(ref_st._fields, ref_st, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"assignment {f}")
+
+    s_int = jnp.asarray(rng.integers(1, 40, size=(m,)), jnp.int32)
+    d_int = jnp.asarray(rng.integers(1, 40, size=(n,)), jnp.int32)
+    c_ot = jnp.asarray(rng.integers(0, 60, size=(m, n)), jnp.int32)
+    ref_ot = ops.fused_run_ot_phases(
+        c_ot, init_ot_state(s_int, d_int), jnp.int32(3), jnp.int32(60),
+        4, int(m + n + 2))
+    out_ot = ops.fused_run_ot_phases(
+        c_ot, init_ot_state(s_int, d_int), jnp.int32(3), jnp.int32(60),
+        4, int(m + n + 2), block_m=block_m, block_n=block_n)
+    for f, a, b in zip(ref_ot._fields, ref_ot, out_ot):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"ot {f}")
+
+
+def test_kernel_blocks_backend_table():
+    """Block sizes resolve per backend, with a cpu fallback for unknown
+    backends, and the op wrappers accept explicit overrides."""
+    for kernel in ("slack_propose", "cost_matrix", "sinkhorn_row_update",
+                   "fused_phase"):
+        for backend in ("tpu", "gpu", "cpu", "rocm-or-future"):
+            blocks = ops.kernel_blocks(kernel, backend)
+            assert all(isinstance(b, int) and b > 0 for b in blocks)
+    assert len(ops.kernel_blocks("cost_matrix")) == 3  # (bm, bn, bk)
+    assert len(ops.kernel_blocks("fused_phase")) == 2
+    with pytest.raises(KeyError):
+        ops.kernel_blocks("no_such_kernel")
+
+
 def test_solver_with_pallas_propose_agrees_end_to_end():
     """Full push-relabel solve with the fused kernel as propose step must be
     bit-identical to the dense reference path (same hash, same argmin)."""

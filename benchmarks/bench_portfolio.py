@@ -1,0 +1,173 @@
+"""Solver-portfolio perf family: push-relabel vs Sinkhorn vs hybrid
+across the paper's accuracy sweep.
+
+The paper's headline experiment is a CROSSOVER story: Sinkhorn's
+iteration count grows ~1/eps^2 (AWR bound) while push-relabel's phase
+count grows ~1/eps, so Sinkhorn wins at loose eps and loses as eps
+tightens. This family measures that crossover end to end through the
+SAME dispatch surface serving traffic uses (``solve_compacting`` /
+``dispatch_hybrid``), at eps in {0.3, 0.1, 0.03, 0.01}, and records
+per-instance wall seconds + instances/sec per (solver, n, eps) cell.
+
+Two consumers:
+
+  * ``benchmarks/run.py`` writes the canonical ``BENCH_portfolio.json``
+    and ``run.py --diff`` gates every row's instances/sec against it.
+  * ``--calibrate`` refits the measured cost model behind
+    ``DispatchPolicy(solver="auto")`` (``repro.portfolio.costmodel``)
+    from the same records and writes it where ``--json`` points —
+    refresh ``src/repro/portfolio/costmodel_default.json`` on real
+    hardware with exactly this entry point.
+
+Honesty notes: off-TPU the Pallas kernels run in interpret mode and
+every record (and the fitted cost model) carries ``mode=interpret`` so
+CPU numbers are never mistaken for accelerator numbers. Sinkhorn rows
+carry ``converged`` (the fraction of lanes that hit the AWR marginal
+tolerance within the iteration budget) — a row measured against an
+iteration cap says so instead of silently timing a partial solve.
+
+    PYTHONPATH=src python -m benchmarks.bench_portfolio [--full|--tiny]
+    PYTHONPATH=src python -m benchmarks.bench_portfolio --calibrate \
+        --json src/repro/portfolio/costmodel_default.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core.api import OT, DispatchPolicy
+from repro.core.compaction import solve_compacting
+from repro.kernels.slack_propose import _resolve_interpret
+from repro.portfolio import SINKHORN, dispatch_hybrid, fit
+from .common import emit, time_call
+
+RECORDS: list = []
+
+EPS_GRID = (0.3, 0.1, 0.03, 0.01)   # the paper's crossover sweep
+# Sinkhorn iteration budget per tier: covers full convergence at every
+# grid eps for the default sizes (measured: eps=0.01, n=32 needs ~1.7k
+# sweeps); the `converged` field reports honestly if a cell caps out.
+MAX_ITERS = {"tiny": 400, "default": 3000, "full": 20000}
+
+
+def _mode() -> str:
+    return "interpret" if _resolve_interpret(None) else "compiled"
+
+
+def record(name, seconds, derived="", **extra):
+    emit(name, seconds, derived)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived, **extra})
+
+
+def write_json(path="BENCH_portfolio.json"):
+    payload = {
+        "schema": 1,
+        "bench": "portfolio",
+        "backend": jax.default_backend(),
+        "pallas_mode": _mode(),
+        "records": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(RECORDS)} records)", flush=True)
+    return path
+
+
+def _ot_batch(b, n, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.1, 1.0, (b, n, n)).astype(np.float32)
+    nu = rng.uniform(0.5, 1.5, (b, n)).astype(np.float32)
+    nu /= nu.sum(1, keepdims=True)
+    mu = rng.uniform(0.5, 1.5, (b, n)).astype(np.float32)
+    mu /= mu.sum(1, keepdims=True)
+    return {"c": c, "nu": nu, "mu": mu}
+
+
+def bench_cell(solver: str, n: int, eps: float, b: int, max_iters: int,
+               repeats: int = 3):
+    """One (solver, n, eps) cell: median wall seconds over the full
+    dispatch (prepare + chunk loop + epilogue), per instance."""
+    inputs = _ot_batch(b, n, seed=n)
+
+    if solver == "pushrelabel":
+        fn = lambda: solve_compacting(OT, inputs, eps)[0].cost
+        r, _ = solve_compacting(OT, inputs, eps)
+        conv = 1.0
+        phases = int(np.asarray(r.phases).max())
+    elif solver == "sinkhorn":
+        fn = lambda: solve_compacting(SINKHORN, inputs, eps, k=256,
+                                      max_iters=max_iters)[0].cost
+        r, _ = solve_compacting(SINKHORN, inputs, eps, k=256,
+                                max_iters=max_iters)
+        # honest convergence: fraction of lanes at the AWR marginal
+        # tolerance (eps/8 in normalized mass units) within the budget
+        conv = float(np.mean(np.asarray(r.err) <= eps / 8.0))
+        phases = int(np.asarray(r.phases).max())
+    elif solver == "hybrid":
+        pol = DispatchPolicy(mode="compact")
+        fn = lambda: dispatch_hybrid(inputs, eps, policy=pol)[0].cost
+        r, _ = dispatch_hybrid(inputs, eps, policy=pol)
+        conv = 1.0
+        phases = int(np.asarray(r.phases).max())
+    else:
+        raise ValueError(solver)
+
+    t = time_call(fn, repeats=repeats)
+    per_inst = t / b
+    record(f"portfolio/{solver}/n={n}/eps={eps}", per_inst,
+           f"phases={phases};converged={conv:.2f};mode={_mode()}",
+           instances_per_s=b / t, solver=solver, n=n, eps=eps,
+           per_instance_s=per_inst, converged=conv, mode=_mode())
+    return {"solver": solver, "n": n, "eps": eps,
+            "per_instance_s": per_inst}
+
+
+def run(full: bool = False, tiny: bool = False):
+    """The sweep; returns calibration rows for ``--calibrate``/``fit``."""
+    if tiny:
+        sizes, b, eps_grid, iters = [16], 2, (0.3, 0.1), MAX_ITERS["tiny"]
+    elif full:
+        sizes, b, eps_grid, iters = [32, 64], 4, EPS_GRID, \
+            MAX_ITERS["full"]
+    else:
+        sizes, b, eps_grid, iters = [32], 4, EPS_GRID, \
+            MAX_ITERS["default"]
+    rows = []
+    for n in sizes:
+        for eps in eps_grid:
+            for solver in ("pushrelabel", "sinkhorn", "hybrid"):
+                rows.append(bench_cell(solver, n, eps, b, iters))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke grid (n=16, loose eps only)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the measured cost model from this sweep "
+                         "and write it to --json")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH json (or, with --calibrate, the "
+                         "cost-model json) here; off by default so ad-hoc "
+                         "runs never clobber the committed baselines "
+                         "(run.py writes the canonical file)")
+    args = ap.parse_args()
+    rows = run(full=args.full, tiny=args.tiny)
+    if args.calibrate:
+        model = fit(rows, mode=_mode(), backend=jax.default_backend())
+        path = args.json or "costmodel.json"
+        model.save(path)
+        print(f"# wrote cost model {path} ({len(model.entries)} cells, "
+              f"mode={model.mode})", flush=True)
+    elif args.json:
+        write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 CSV. ``python -m benchmarks.run [--full]`` (full = paper-scale grids).
 
 ``--diff`` compares a fresh run of the JSON-emitting families (batched,
-sharded, solution, faults, serve, kernels) against the committed
+sharded, solution, faults, serve, kernels, portfolio) against the committed
 ``BENCH_*.json`` instead of overwriting them, flags any >20%
 instances/sec regression, and exits nonzero if one is found — the perf
 gate for driver AND kernel refactors.
@@ -83,7 +83,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: synthetic,mnist,"
                          "routing,ot,batched,sharded,solution,faults,"
-                         "serve,kernels")
+                         "serve,kernels,portfolio")
     ap.add_argument("--diff", action="store_true",
                     help="compare fresh batched/sharded results against "
                          "the committed BENCH_*.json (no overwrite); exit "
@@ -92,7 +92,8 @@ def main() -> None:
 
     from . import bench_synthetic, bench_mnist, \
         bench_routing, bench_ot, bench_batched, bench_sharded, \
-        bench_solution, bench_faults, bench_serve, bench_kernels
+        bench_solution, bench_faults, bench_serve, bench_kernels, \
+        bench_portfolio
 
     benches = {
         "synthetic": bench_synthetic.run,   # paper Fig. 1
@@ -107,16 +108,18 @@ def main() -> None:
         "kernels": bench_kernels.run,       # fused vs stepped phase loop
         #   (also carries the Section 3.2 phase-bound rows that lived in
         #   the retired bench_phases family)
+        "portfolio": bench_portfolio.run,   # solver crossover sweep
     }
     if args.diff and args.only is None:
         # diff mode only makes sense for the JSON-emitting families
-        args.only = "batched,sharded,solution,faults,serve,kernels"
+        args.only = "batched,sharded,solution,faults,serve,kernels,portfolio"
     only = set(args.only.split(",")) if args.only else set(benches)
     if args.diff and not ({"batched", "sharded", "solution",
-                           "faults", "serve", "kernels"} & only):
+                           "faults", "serve", "kernels",
+                           "portfolio"} & only):
         ap.error("--diff compares the JSON-emitting families; include "
-                 "batched, sharded, solution, faults, serve and/or "
-                 "kernels in --only")
+                 "batched, sharded, solution, faults, serve, kernels "
+                 "and/or portfolio in --only")
     regressions: list = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -173,6 +176,14 @@ def main() -> None:
                                             "BENCH_kernels.json")
             else:
                 bench_kernels.write_json("BENCH_kernels.json")
+        if name == "portfolio":
+            # per-instance seconds per (solver, n, eps) across the
+            # paper's crossover sweep: pushrelabel vs sinkhorn vs hybrid
+            if args.diff:
+                regressions += diff_records(bench_portfolio.RECORDS,
+                                            "BENCH_portfolio.json")
+            else:
+                bench_portfolio.write_json("BENCH_portfolio.json")
     if args.diff:
         write_step_summary(regressions)
         if regressions:

@@ -388,6 +388,54 @@ def main():
     #         from repro.launch.platform import set_platform
     #         set_platform("gpu")   # jax_platform_name + XLA_FLAGS
 
+    # 16. the solver portfolio: DispatchPolicy(solver=...) picks HOW an
+    #     OT batch is solved without changing what comes back — every
+    #     solver certifies the same additive-eps target through the same
+    #     Solution surface (additive_gap() <= additive_gap_bound(),
+    #     dual_feasible()).
+    #       "pushrelabel"  the paper's solver (default, exact phases)
+    #       "sinkhorn"     log-domain entropic solver at the AWR schedule
+    #                      (reg = eps/(4 ln n), marginal tol = eps/8),
+    #                      rounded onto the transport polytope with
+    #                      feasible duals in the epilogue
+    #       "hybrid"       coarse Sinkhorn first, its duals rounded into
+    #                      a feasible push-relabel start (all paper
+    #                      invariants hold), push-relabel finishes — so
+    #                      the guarantee is push-relabel's own
+    #       "auto"         the measured cost model picks per batch
+    from repro.portfolio import get_model
+
+    batch16 = {"c": cb, "nu": nub, "mu": mub}
+    for solver in ("pushrelabel", "sinkhorn", "hybrid"):
+        pol16 = DispatchPolicy(mode="compact", solver=solver,
+                               guaranteed=True)
+        sols = solve(OT, batch16, 0.1, pol16,
+                     want=("cost", "duals", "stats"))
+        s0 = sols[0]
+        assert bool(s0.dual_feasible())
+        assert float(s0.additive_gap()) <= float(s0.additive_gap_bound())
+        print(f"portfolio[{solver}]: cost={float(s0.cost):.4f} "
+              f"gap={float(s0.additive_gap()):.5f} "
+              f"<= bound={float(s0.additive_gap_bound()):.5f} "
+              f"(certified, solve {sols.stats.actual_s * 1e3:.0f} ms)")
+
+    #     solver="auto" consults the measured cost model committed at
+    #     src/repro/portfolio/costmodel_default.json (per-instance
+    #     seconds per (solver, n-bucket, eps-band), honest mode=
+    #     interpret labels off-TPU). Refit it for YOUR hardware with
+    #         PYTHONPATH=src python -m benchmarks.bench_portfolio \
+    #             --calibrate --json mymodel.json
+    #     then repro.portfolio.set_model(CostModel.load("mymodel.json")).
+    #     The chosen solver and predicted-vs-actual seconds land in
+    #     stats and in the "solver-choice" obs event.
+    pol_auto = DispatchPolicy(mode="compact", solver="auto")
+    sols_a = solve(OT, batch16, 0.1, pol_auto, want=("cost", "stats"))
+    model = get_model()
+    print(f"portfolio[auto]: model={'loaded' if model else 'none'} "
+          f"chose {sols_a.stats.solver!r} "
+          f"(predicted {sols_a.stats.predicted_s} s, "
+          f"actual {sols_a.stats.actual_s:.3f} s)")
+
 
 if __name__ == "__main__":
     main()

@@ -68,7 +68,21 @@ def _ot_invariants(data, state):
     )
 
 
-_INVARIANTS = {"assignment": _assignment_invariants, "ot": _ot_invariants}
+def _sinkhorn_invariants(data, state):
+    checkify.check(
+        jnp.all(jnp.isfinite(state.f)) & jnp.all(jnp.isfinite(state.g)),
+        "non-finite Sinkhorn potentials (poisoned costs / corrupted "
+        "state / donated-buffer reuse?)",
+    )
+    checkify.check(
+        jnp.all(data["reg"] > 0),
+        "non-positive Sinkhorn regularization (schedule corrupted?)",
+    )
+
+
+_INVARIANTS = {"assignment": _assignment_invariants, "ot": _ot_invariants,
+               "warm_ot": _ot_invariants,
+               "sinkhorn": _sinkhorn_invariants}
 
 
 def _throwing(ck_fn):

@@ -41,6 +41,9 @@ BUILTIN_MODULES: Tuple[str, ...] = (
     "repro.core.solution",
     "repro.core.validate",
     "repro.kernels.ops",
+    "repro.core.sinkhorn",
+    "repro.portfolio.sinkhorn_spec",
+    "repro.portfolio.hybrid",
 )
 
 

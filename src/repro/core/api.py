@@ -46,6 +46,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..obs.metrics import now as _now
 from .compaction import DEFAULT_CHUNK, CompactionStats, solve_compacting
 from .distributed import solve_mesh
 from .problem import (  # noqa: F401  (re-exported: the front door and
@@ -59,6 +60,7 @@ from .problem import (  # noqa: F401  (re-exported: the front door and
 from .solution import Solution, SolutionBatch, SolveStats
 
 _MODES = ("auto", "lockstep", "compact", "mesh")
+_SOLVERS = ("pushrelabel", "sinkhorn", "hybrid", "auto")
 
 
 @dataclass(frozen=True)
@@ -98,6 +100,18 @@ class DispatchPolicy:
         the stepped kernels (the fused kernel is a whole-instance
         program; sharding a single instance across devices is exactly
         the regime it cannot cover).
+      solver: which ALGORITHM solves OT-family batches —
+        "pushrelabel" (default: the paper's solver, guaranteed at every
+        eps), "sinkhorn" (the log-domain AWR-scheduled spec in
+        repro.portfolio — same additive-eps certificate, cheaper at
+        loose eps), "hybrid" (coarse Sinkhorn duals warm-start the
+        push-relabel finish; keeps the push-relabel guarantee), or
+        "auto" (route per batch via the measured cost model,
+        ``repro.portfolio.costmodel`` — deterministic for a loaded
+        table, so an auto dispatch is bit-identical to naming its
+        choice). Assignment batches ignore this knob (push-relabel is
+        the only assignment solver). The chosen solver and the
+        predicted-vs-actual wall cost land in ``SolveStats``.
     """
     mode: str = "auto"
     mesh: Any = None
@@ -108,11 +122,15 @@ class DispatchPolicy:
     want: Optional[Tuple[str, ...]] = None
     validate: bool = False
     fused: bool = False
+    solver: str = "pushrelabel"
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"unknown dispatch mode {self.mode!r}; "
                              f"expected one of {_MODES}")
+        if self.solver not in _SOLVERS:
+            raise ValueError(f"unknown solver {self.solver!r}; "
+                             f"expected one of {_SOLVERS}")
         if self.mode == "lockstep" and self.mesh is not None:
             raise ValueError("mode='lockstep' cannot dispatch over a mesh "
                              "— use mode='compact' or mode='mesh' (the "
@@ -127,8 +145,8 @@ class DispatchPolicy:
     def from_legacy(cls, compact: bool, mesh=None, *, chunk=None,
                     buckets=None, guaranteed: bool = False,
                     placement: str = "auto",
-                    want: Optional[Tuple[str, ...]] = None
-                    ) -> "DispatchPolicy":
+                    want: Optional[Tuple[str, ...]] = None,
+                    solver: str = "pushrelabel") -> "DispatchPolicy":
         """Map the legacy ``compact=``/``mesh=`` keyword surface
         (``solve_*_ragged``, ``OTService``) onto a policy — the ONE place
         that mapping and its mesh-requires-compact rule live."""
@@ -141,7 +159,40 @@ class DispatchPolicy:
         return cls(mode=mode, mesh=mesh, placement=placement, chunk=chunk,
                    buckets=None if buckets is None else tuple(buckets),
                    guaranteed=guaranteed,
-                   want=None if want is None else tuple(want))
+                   want=None if want is None else tuple(want),
+                   solver=solver)
+
+
+def _resolve_solver(spec, policy: DispatchPolicy, inputs, eps):
+    """(solver name, dispatch spec, predicted per-instance seconds) for
+    ONE pre-batched bucket. Deterministic and side-effect free: calling
+    it twice (the solve() wrapper does, to pick the Solution wrap spec)
+    yields the same routing the dispatch took, so an "auto" result is
+    bit-identical to naming the chosen solver. Only the OT family
+    reroutes — assignment (and already-rerouted specs like the hybrid
+    finish) pass through as push-relabel."""
+    base = getattr(spec, "stepped", spec)
+    if policy.solver == "pushrelabel" or base is not OT:
+        return "pushrelabel", spec, None
+    from .. import portfolio
+
+    solver = policy.solver
+    c = np.asarray(inputs["c"]) if isinstance(inputs, dict) else None
+    n_eff = int(max(c.shape[1], c.shape[2])) if c is not None else 0
+    eps_min = float(np.min(np.asarray(eps, np.float64)))
+    if solver == "auto":
+        solver, predicted = portfolio.choose(n_eff, eps_min)
+    else:
+        model = portfolio.get_model()
+        predicted = (None if model is None
+                     else model.predict(solver, n_eff, eps_min))
+    if solver == "sinkhorn":
+        # stepped spec here; policy.fused upgrades it to the Pallas row
+        # kernel downstream via fused_variant (the fused_spec hook)
+        return "sinkhorn", portfolio.SINKHORN, predicted
+    if solver == "hybrid":
+        return "hybrid", spec, predicted
+    return "pushrelabel", spec, predicted
 
 
 def dispatch(
@@ -166,7 +217,57 @@ def dispatch(
     the chunked drivers (best-so-far cut; lockstep has no chunk loop to
     cut, so the combination raises). ``obs`` threads a per-chunk event
     emitter (``repro.obs.Tracer``) into the chunked drivers; lockstep
-    ignores it (one unbounded program, nothing per-chunk to report)."""
+    ignores it (one unbounded program, nothing per-chunk to report).
+
+    ``policy.solver`` routes the bucket through the solver portfolio
+    (push-relabel / Sinkhorn / hybrid / measured-auto); the chosen
+    solver, the cost model's prediction, and the measured dispatch wall
+    time are annotated onto the returned stats (``solver`` /
+    ``predicted_s`` / ``solve_s``) and emitted as a ``"solver-choice"``
+    obs event."""
+    policy = policy or DispatchPolicy()
+    solver, spec, predicted = _resolve_solver(spec, policy, inputs, eps)
+    t0 = _now()
+    if solver == "hybrid":
+        from ..portfolio.hybrid import dispatch_hybrid
+
+        r, stats = dispatch_hybrid(
+            inputs, eps, sizes=sizes, policy=policy,
+            keep_state=keep_state, deadline=deadline, obs=obs, **prep_kw)
+    else:
+        r, stats = _dispatch_one(
+            spec, inputs, eps, sizes=sizes, policy=policy,
+            keep_state=keep_state, deadline=deadline, obs=obs, **prep_kw)
+    solve_s = _now() - t0
+    if stats is not None:
+        # driver stats are plain mutable dataclasses; a stats object
+        # that refuses the annotation just goes without it
+        for kk, v in (("solver", solver), ("predicted_s", predicted),
+                      ("solve_s", solve_s)):
+            try:
+                setattr(stats, kk, v)
+            except (AttributeError, TypeError):
+                pass
+    if obs is not None:
+        obs.event("solver-choice", solver=solver, predicted_s=predicted,
+                  solve_s=solve_s)
+    return r, stats
+
+
+def _dispatch_one(
+    spec,
+    inputs: Dict[str, Any],
+    eps,
+    *,
+    sizes=None,
+    policy: Optional[DispatchPolicy] = None,
+    keep_state: bool = False,
+    deadline: Optional[float] = None,
+    obs=None,
+    **prep_kw,
+):
+    """The single-solver dispatch body: mode routing only (the solver
+    was already resolved by :func:`dispatch`)."""
     policy = policy or DispatchPolicy()
     mode = policy.resolved_mode()
     if policy.fused:
@@ -210,6 +311,7 @@ def _wrap_solution(
     spec, inputs: Dict[str, Any], eps, policy: DispatchPolicy,
     r, stats, *, sizes, want: Optional[Tuple[str, ...]],
     bucket: Optional[Tuple[int, int]] = None,
+    solver: str = "pushrelabel", predicted: Optional[float] = None,
 ) -> SolutionBatch:
     """Wrap one dispatched bucket result in a SolutionBatch (the typed
     surface); device arrays stay put until an artifact is fetched."""
@@ -218,7 +320,8 @@ def _wrap_solution(
     eps_user = np.broadcast_to(np.asarray(eps, np.float64), (b,)).copy()
     eps_internal = eps_user / 3.0 if policy.guaranteed else eps_user
     sstats = SolveStats.from_driver(stats, mode=policy.resolved_mode(),
-                                    batch=b, bucket=bucket)
+                                    batch=b, bucket=bucket, solver=solver,
+                                    predicted_s=predicted)
     state = getattr(stats, "final_state", None) if stats is not None else None
     un = getattr(stats, "unconverged", None) if stats is not None else None
     degraded = None if un is None else np.asarray(un, bool)[:b]
@@ -301,8 +404,14 @@ def solve(
         r, stats = dispatch(spec, instances, eps, sizes=sizes,
                             policy=policy, keep_state=keep_state,
                             deadline=deadline, obs=obs, **prep_kw)
-        return _wrap_solution(spec, instances, eps, policy, r, stats,
-                              sizes=sizes, want=want)
+        # re-resolve (deterministic) to wrap with the spec that actually
+        # produced r: SINKHORN's result shape for sinkhorn routing, the
+        # OT base for hybrid (its finish IS a push-relabel solve)
+        solver, wspec, predicted = _resolve_solver(spec, policy,
+                                                   instances, eps)
+        return _wrap_solution(wspec, instances, eps, policy, r, stats,
+                              sizes=sizes, want=want, solver=solver,
+                              predicted=predicted)
     sols = _solve_ragged(spec, list(instances), eps, policy,
                          keep_state=keep_state, want=want,
                          deadline=deadline, obs=obs, **prep_kw)
@@ -351,9 +460,14 @@ def _solve_ragged(spec, instances: list, eps, policy: DispatchPolicy,
             r, stats = dispatch(spec, inputs, eps_arr[idx], sizes=sz,
                                 policy=policy, keep_state=keep_state,
                                 deadline=deadline, obs=obs, **prep_kw)
-            batch = _wrap_solution(spec, inputs, eps_arr[idx], policy, r,
+            # per-bucket re-resolution (auto may route buckets to
+            # different solvers); deterministic, so it matches dispatch
+            solver, wspec, predicted = _resolve_solver(
+                spec, policy, inputs, eps_arr[idx])
+            batch = _wrap_solution(wspec, inputs, eps_arr[idx], policy, r,
                                    stats, sizes=sz, want=want,
-                                   bucket=grp.key)
+                                   bucket=grp.key, solver=solver,
+                                   predicted=predicted)
             # per-instance views share the batch's device arrays and its
             # fetch cache: one device->host fetch per artifact per
             # bucket, never per instance

@@ -811,13 +811,19 @@ OTSpec.fused = False
 
 def fused_variant(spec):
     """Map a base spec to its fused-kernel variant (identity on the fused
-    singletons themselves). Raises for unknown specs rather than guessing."""
+    singletons themselves). Specs outside this module register theirs by
+    setting a ``fused_spec`` attribute (e.g. the portfolio's SINKHORN ->
+    SINKHORN_KERNEL) so core never has to import them. Raises for unknown
+    specs rather than guessing."""
     if getattr(spec, "fused", False):
         return spec
     if spec is ASSIGNMENT:
         return FUSED_ASSIGNMENT
     if spec is OT:
         return FUSED_OT
+    alt = getattr(spec, "fused_spec", None)
+    if alt is not None:
+        return alt
     raise ValueError(f"no fused variant registered for spec {spec!r}")
 
 

@@ -16,6 +16,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SinkhornResult(NamedTuple):
@@ -27,7 +28,7 @@ class SinkhornResult(NamedTuple):
     marginal_err: jnp.ndarray
 
 
-@partial(jax.jit, static_argnames=("reg", "max_iters", "tol", "use_log"))
+@partial(jax.jit, static_argnames=("reg", "max_iters", "use_log"))
 def sinkhorn(
     c: jnp.ndarray,
     nu: jnp.ndarray,
@@ -37,10 +38,15 @@ def sinkhorn(
     tol: float = 1e-9,
     use_log: bool = True,
 ) -> SinkhornResult:
-    """Entropy-regularized OT. rows = nu (supply), cols = mu (demand)."""
+    """Entropy-regularized OT. rows = nu (supply), cols = mu (demand).
+
+    ``tol`` is a TRACED operand, not a compile-time constant: derive it
+    on host (``sinkhorn_marginal_tolerance`` does the float64 arithmetic)
+    and distinct tolerances share one compiled program."""
     c = jnp.asarray(c, jnp.float32)
     nu = jnp.asarray(nu, jnp.float32)
     mu = jnp.asarray(mu, jnp.float32)
+    tol = jnp.asarray(tol, jnp.float32)
     log_nu = jnp.log(jnp.maximum(nu, 1e-38))
     log_mu = jnp.log(jnp.maximum(mu, 1e-38))
 
@@ -97,3 +103,48 @@ def sinkhorn(
 def reg_for_additive_eps(eps: float, n: int) -> float:
     """Altschuler-et-al. style regularization for additive error ~eps*max(c)."""
     return max(eps / (4.0 * math.log(max(n, 2))), 1e-6)
+
+
+def sinkhorn_marginal_tolerance(eps, mass: float = 1.0) -> float:
+    """Host-float64 L1 marginal-violation threshold for an additive-eps
+    target: eps/8 * total mass (the AWR stopping rule). Computed entirely
+    in float64 on host — the same device-f32 threshold bug class PR 2
+    fixed for OT termination — and handed to ``sinkhorn`` as its traced
+    ``tol`` operand."""
+    return float(np.float64(eps) / 8.0 * np.float64(mass))
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the recompile-hazard contract of the
+# tolerance fix — ``tol`` must arrive as a traced operand (a baked
+# Python-float threshold both recompiles per accuracy and gets rounded
+# through the device-f32 comparison the host-f64 derivation avoids).
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _trace_sinkhorn():
+    n = 8
+
+    def run(c, nu, mu, tol):
+        r = sinkhorn(c, nu, mu, reg=0.05, max_iters=16, tol=tol)
+        return {"plan": r.plan, "cost": r.cost, "f": r.f, "g": r.g,
+                "iters": r.iters, "marginal_err": r.marginal_err}
+
+    return _audit.trace_entry(
+        name="core.sinkhorn.sinkhorn",
+        fn=run,
+        args={
+            "c": jnp.zeros((n, n), jnp.float32),
+            "nu": jnp.full((n,), 1.0 / n, jnp.float32),
+            "mu": jnp.full((n,), 1.0 / n, jnp.float32),
+            "tol": jnp.float32(1e-6),
+        },
+        must_trace={"tol"},
+        tags={"sinkhorn", "baseline"},
+        source=__name__,
+    )
+
+
+_audit.register("core.sinkhorn.sinkhorn", _trace_sinkhorn, source=__name__)

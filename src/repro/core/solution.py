@@ -97,14 +97,22 @@ class SolveStats:
     attempts: int = 1              # dispatch attempts incl. ladder retries
     ladder_level: int = 0          # 0 = configured policy; higher = degraded
     quarantined: int = 0           # requests quarantined from this bucket
+    # solver-portfolio accounting (core/api records these when
+    # DispatchPolicy.solver routes away from the default)
+    solver: str = "pushrelabel"    # solver that produced this result
+    predicted_s: Optional[float] = None  # cost-model per-batch prediction
+    actual_s: Optional[float] = None     # measured dispatch wall time
 
     @classmethod
     def from_driver(cls, st: Any, *, mode: str, batch: int,
-                    bucket: Optional[Tuple[int, int]] = None) -> "SolveStats":
+                    bucket: Optional[Tuple[int, int]] = None,
+                    solver: str = "pushrelabel",
+                    predicted_s: Optional[float] = None) -> "SolveStats":
         """Fold a driver stats object (CompactionStats, DistributedStats,
         or None for the lockstep path) into the uniform surface."""
         if st is None:
-            return cls(mode=mode, batch=batch, bucket=bucket)
+            return cls(mode=mode, batch=batch, bucket=bucket, solver=solver,
+                       predicted_s=predicted_s)
         return cls(
             mode=mode, batch=batch, bucket=bucket,
             dispatches=int(st.dispatches) or 1,
@@ -114,6 +122,8 @@ class SolveStats:
             occupancy=tuple(tuple(o) for o in st.occupancy),
             collapsed_at=getattr(st, "collapsed_at", None),
             deadline_hit=bool(getattr(st, "deadline_hit", False)),
+            solver=solver, predicted_s=predicted_s,
+            actual_s=getattr(st, "solve_s", None),
         )
 
     def as_dict(self) -> Dict[str, Any]:
@@ -126,6 +136,8 @@ class SolveStats:
             "deadline_hit": self.deadline_hit, "attempts": self.attempts,
             "ladder_level": self.ladder_level,
             "quarantined": self.quarantined,
+            "solver": self.solver, "predicted_s": self.predicted_s,
+            "actual_s": self.actual_s,
         }
 
 

@@ -117,8 +117,11 @@ def cost_matrix_batched(x, y, metric="sqeuclidean", *, block_m=None,
     )
 
 
-@partial(jax.jit, static_argnames=("reg", "block_m", "block_n"))
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
 def sinkhorn_row_update(c, g, log_nu, reg, *, block_m=None, block_n=None):
+    # reg is a TRACED operand (the kernel reads it from a (1, 1) input):
+    # one compiled program serves every accuracy, and the SINKHORN spec's
+    # vmapped chunk dispatch can carry per-lane reg through it
     block_m, block_n = _blocks2("sinkhorn_row_update", block_m, block_n)
     return _ss.sinkhorn_row_update(
         c, g, log_nu, reg,
@@ -244,12 +247,14 @@ def _trace_sinkhorn_row_update():
     m, n = 128, 128
     return _audit.trace_entry(
         name="kernels.ops.sinkhorn_row_update",
-        fn=lambda c, g, log_nu: sinkhorn_row_update(c, g, log_nu, 0.05),
+        fn=lambda c, g, log_nu, reg: sinkhorn_row_update(c, g, log_nu, reg),
         args={
             "c": jnp.zeros((m, n), jnp.float32),
             "g": jnp.zeros((n,), jnp.float32),
             "log_nu": jnp.zeros((m,), jnp.float32),
+            "reg": jnp.float32(0.05),
         },
+        must_trace={"reg"},
         tags={"pallas", "sinkhorn"},
         source=__name__,
     )

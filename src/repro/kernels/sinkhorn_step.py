@@ -17,9 +17,13 @@ from jax.experimental import pallas as pl
 from .slack_propose import _resolve_interpret
 
 
-def _kernel(c_ref, g_ref, lognu_ref, f_ref, m_acc, s_acc, *, nj: int,
-            inv_reg: float, reg: float):
+def _kernel(c_ref, g_ref, lognu_ref, reg_ref, f_ref, m_acc, s_acc, *,
+            nj: int):
     j = pl.program_id(1)
+    # reg arrives as a (1, 1) operand rather than a baked Python float, so
+    # one compiled program serves every accuracy (and per-lane reg under
+    # vmap) — the recompile-hazard contract pinned by repro.analysis
+    inv_reg = 1.0 / reg_ref[0, 0]
     z = (g_ref[...] - c_ref[...]) * inv_reg      # (bm, bn)
     zmax = jnp.max(z, axis=1, keepdims=True)     # (bm, 1)
 
@@ -40,14 +44,14 @@ def _kernel(c_ref, g_ref, lognu_ref, f_ref, m_acc, s_acc, *, nj: int,
     @pl.when(j == nj - 1)
     def _final():
         lse = m_new + jnp.log(jnp.maximum(s_new, 1e-38))
-        f_ref[...] = reg * (lognu_ref[...] - lse)
+        f_ref[...] = reg_ref[0, 0] * (lognu_ref[...] - lse)
 
 
 def sinkhorn_row_update(
     c: jnp.ndarray,
     g: jnp.ndarray,
     log_nu: jnp.ndarray,
-    reg: float,
+    reg,
     *,
     block_m: int = 128,
     block_n: int = 128,
@@ -60,16 +64,20 @@ def sinkhorn_row_update(
                   constant_values=jnp.inf)
     g_p = jnp.pad(g.astype(jnp.float32), (0, pn))[None, :]
     lognu_p = jnp.pad(log_nu.astype(jnp.float32), (0, pm))[:, None]
+    # reg as a (1, 1) operand (float or traced scalar both accepted): every
+    # grid cell maps to the same block, so the kernel reads one value
+    reg_a = jnp.asarray(reg, jnp.float32).reshape(1, 1)
     mp, np_ = m + pm, n + pn
     grid = (mp // block_m, np_ // block_n)
 
     f, _, _ = pl.pallas_call(
-        functools.partial(_kernel, nj=grid[1], inv_reg=1.0 / reg, reg=reg),
+        functools.partial(_kernel, nj=grid[1]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
             pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
             pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
@@ -82,5 +90,5 @@ def sinkhorn_row_update(
             jax.ShapeDtypeStruct((mp, 1), jnp.float32),
         ],
         interpret=_resolve_interpret(interpret),
-    )(c_p, g_p, lognu_p)
+    )(c_p, g_p, lognu_p, reg_a)
     return f[:m, 0]

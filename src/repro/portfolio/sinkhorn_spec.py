@@ -1,0 +1,510 @@
+"""SINKHORN: the log-domain Sinkhorn loop as a third ProblemSpec.
+
+The paper's headline experiment compares the push-relabel solver against
+Sinkhorn; this module makes that comparison a per-request dispatch choice
+by wrapping Sinkhorn in the same stepped-core contract
+(``core/problem.ProblemSpec``) the push-relabel specs implement, so every
+batch driver — lockstep, convergence compaction, mesh — and every serving
+layer runs it unchanged.
+
+The additive-eps contract comes from Altschuler–Weed–Rigollet
+(arXiv:1705.09634): with regularization reg = eps/(4 log n) and the
+iterates stopped at L1 marginal violation eps/8, rounding the entropic
+plan to the feasible polytope (their Algorithm 2) yields cost <= OPT +
+eps * scale, so ``converged`` certifies the same additive target as the
+push-relabel termination predicate. Both schedule constants (reg, tol)
+and the AWR iteration cap 2 + 128 (log n)^2 / eps^2 are derived on host
+in float64 per lane — the same device-f32 threshold bug class PR 2 fixed
+for OT termination never gets a chance here — then shipped to the device
+as f32 operands so distinct accuracies never recompile.
+
+Mapping to the protocol:
+
+  ``prepare``      host-f64 per-lane reg/tol/iteration-cap, padding masks,
+                   power-of-two batch padding (padded lanes get cap 0:
+                   born converged).
+  ``prologue``     normalize: c_hat = c/max(c), nu_hat/mu_hat = masses
+                   normalized to 1, log marginals floor-clamped.
+  ``init_state``   f = g = 0, err = +inf.
+  ``run_phases``   at most k Sinkhorn iterations (f-update then g-update,
+                   then the row-marginal L1 violation); resumable —
+                   chaining calls is bit-identical to one-shot for any k,
+                   so deadlines, obs chunk events, and compaction compose
+                   unchanged.
+  ``converged``    err <= tol, or the AWR iteration cap hit.
+  ``epilogue``     AWR Algorithm 2 rounding to the transport polytope
+                   (row/col downscaling + a northwest-corner fill of the
+                   residual marginals, shared with ``ot_epilogue``),
+                   pricing against the float costs, and duals y = f*scale
+                   / g*scale. After the g-update f_i + g_j <= c_hat_ij
+                   holds exactly (log mu_hat <= 0), so the scaled duals
+                   are 0-slack feasible and ``Solution.additive_gap()``
+                   certifies the answer a posteriori like the
+                   push-relabel duals do.
+
+``SINKHORN_KERNEL`` swaps the row update for the flash-style Pallas
+kernel (``kernels/sinkhorn_step.py``) at the block sizes of the
+``kernel_blocks()`` backend table; it is the spec ``fused_variant``
+resolves for ``DispatchPolicy(fused=True)``, and ``stepped`` points back
+at ``SINKHORN`` for the checkify sanitizer (it cannot instrument the
+inside of a Pallas kernel).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import logsumexp
+
+from ..core.problem import (
+    OTSpec,
+    PreparedBatch,
+    _pad_lanes,
+    _sizes_arrays,
+    eps_array,
+    pow2_at_least,
+)
+from ..core.transport import northwest_corner
+
+# Sinkhorn state floor: normalized masses are clamped here before the
+# log, so empty (padded) marginals stay finite and inert. Must be a
+# NORMAL f32 (min normal ~1.18e-38): subnormal floors get flushed to
+# zero on FTZ backends, turning the clamp into log(0) = -inf in padded
+# rows and 0/0 = NaN in the epilogue's rescale guards.
+_LOG_FLOOR = 1e-30
+# reg floor: below this the f32 exp/log arithmetic is pure noise anyway.
+_REG_FLOOR = 1e-6
+
+
+class SinkhornState(NamedTuple):
+    """Per-instance Sinkhorn iterate. ``phases`` counts full (f, g)
+    update sweeps — the driver-visible unit, same as push-relabel
+    phases — and is the field the compaction driver's ``conv`` reads."""
+    f: jnp.ndarray       # (m,) f32 row potentials, normalized domain
+    g: jnp.ndarray       # (n,) f32 col potentials
+    err: jnp.ndarray     # () f32 L1 row-marginal violation (after g-update)
+    phases: jnp.ndarray  # () int32 iterations done
+
+
+class SinkhornOTResult(NamedTuple):
+    """Epilogue output; mirrors OTResult's artifact surface (no theta —
+    Sinkhorn has no integer scaling) plus the schedule the certificate
+    documentation wants (reg, final marginal err)."""
+    plan: jnp.ndarray    # (m, n) f32, EXACT marginals (nu, mu) up to f32
+    cost: jnp.ndarray    # () f32 <plan, c>
+    y_b: jnp.ndarray     # (m,) f32 feasible duals (f * scale)
+    y_a: jnp.ndarray     # (n,) f32 feasible duals (g * scale)
+    phases: jnp.ndarray  # () int32
+    rounds: jnp.ndarray  # () int32 == phases (one sweep per phase)
+    err: jnp.ndarray     # () f32 marginal violation at termination
+    reg: jnp.ndarray     # () f32 entropic regularization used
+
+
+def sinkhorn_schedule(eps_arr, m_valid, n_valid, max_iters=None):
+    """Host-float64 AWR schedule per lane: (reg, tol, cap).
+
+    reg = eps/(4 log n) and tol = eps/8 make the rounded entropic plan
+    eps-additive (AWR Thm 1 + Alg. 2); cap = 2 + 128 (log n)^2 / eps^2 is
+    their iteration bound at that (reg, tol). Everything is computed in
+    float64 on host and only then cast for the device, so the
+    thresholds can never be distorted by device-f32 rounding."""
+    eps_arr = np.asarray(eps_arr, np.float64)
+    logn = np.log(np.maximum(np.maximum(m_valid, n_valid), 2)
+                  .astype(np.float64))
+    reg = np.maximum(eps_arr / (4.0 * logn), _REG_FLOOR)
+    tol = eps_arr / 8.0
+    cap = 2.0 + np.ceil(128.0 * logn ** 2 / eps_arr ** 2)
+    if max_iters is not None:
+        cap = np.minimum(cap, float(int(max_iters)))
+    cap = np.minimum(cap, np.float64(np.iinfo(np.int32).max))
+    return reg, tol, cap.astype(np.int32)
+
+
+def _row_update_jnp(c_hat, g, log_nu, reg):
+    """Pure-jnp log-domain f-update: the parity reference for the Pallas
+    row kernel (tests/test_portfolio.py)."""
+    return reg * (log_nu - logsumexp((g[None, :] - c_hat) / reg, axis=1))
+
+
+@partial(jax.jit, static_argnames=("k", "kernel"), donate_argnums=(7,))
+def run_sinkhorn_phases(c_hat, log_nu, log_mu, nu_hat, reg, tol, phase_cap,
+                        state, k, kernel=False):
+    """At most k Sinkhorn iterations from ``state``; resumable (chaining
+    calls is bit-identical to one-shot for any k). Each iteration is one
+    f-update, one g-update, then the L1 row-marginal violation of the
+    current iterate — measured AFTER the g-update, where the column
+    marginals are exact by construction, so err is the full constraint
+    violation. ``kernel=True`` routes the f-update through the Pallas
+    row kernel (bit-parity documented in tests/test_portfolio.py)."""
+    start = state.phases
+
+    def row_update(f, g):
+        if kernel:
+            from ..kernels import ops as _kops
+
+            return _kops.sinkhorn_row_update(c_hat, g, log_nu, reg)
+        return _row_update_jnp(c_hat, g, log_nu, reg)
+
+    def one_iter(st):
+        f = row_update(st.f, st.g)
+        g = reg * (log_mu - logsumexp((f[:, None] - c_hat) / reg, axis=0))
+        row = jnp.sum(jnp.exp((f[:, None] + g[None, :] - c_hat) / reg),
+                      axis=1)
+        err = jnp.sum(jnp.abs(row - nu_hat))
+        return SinkhornState(f=f, g=g, err=err, phases=st.phases + 1)
+
+    def cond(st):
+        return ((st.err > tol) & (st.phases < phase_cap)
+                & (st.phases - start < k))
+
+    return jax.lax.while_loop(cond, one_iter, state)
+
+
+def sinkhorn_epilogue(c, nu, mu, reg, scale, mass_nu, state):
+    """AWR Algorithm 2: round the entropic plan onto the transport
+    polytope of (nu, mu), then price. Row/col marginals are first scaled
+    DOWN to never exceed their targets, then the leftover marginal mass
+    (<= the tol violation) is filled with a northwest-corner plan of the
+    residuals — the same closed-form completion ``ot_epilogue`` uses, so
+    the two solvers' feasibility semantics are one code path."""
+    c_hat = c / scale
+    plan = jnp.exp((state.f[:, None] + state.g[None, :] - c_hat) / reg)
+    plan = plan * mass_nu  # normalized rows ~ nu_hat -> mass units
+    rs = jnp.minimum(1.0, nu / jnp.maximum(jnp.sum(plan, axis=1),
+                                           _LOG_FLOOR))
+    plan = plan * rs[:, None]
+    cs = jnp.minimum(1.0, mu / jnp.maximum(jnp.sum(plan, axis=0),
+                                           _LOG_FLOOR))
+    plan = plan * cs[None, :]
+    r = jnp.maximum(nu - jnp.sum(plan, axis=1), 0.0)
+    cc = jnp.maximum(mu - jnp.sum(plan, axis=0), 0.0)
+    tot = jnp.minimum(jnp.sum(r), jnp.sum(cc))
+    r = r * (tot / jnp.maximum(jnp.sum(r), _LOG_FLOOR))
+    cc = cc * (tot / jnp.maximum(jnp.sum(cc), _LOG_FLOOR))
+    plan = plan + northwest_corner(r, cc)
+    cost = jnp.sum(plan * c)
+    return SinkhornOTResult(
+        plan=plan, cost=cost,
+        y_b=state.f * scale, y_a=state.g * scale,
+        phases=state.phases, rounds=state.phases,
+        err=state.err, reg=reg,
+    )
+
+
+class SinkhornSpec(OTSpec):
+    """ProblemSpec for log-domain Sinkhorn over the same (c, nu, mu)
+    inputs as ``OT``. Subclasses OTSpec for the input-shaping glue
+    (canonicalize / pad_group / plan artifacts); every algorithmic
+    method is overridden. Batch placement only: the row kernel is a
+    whole-instance program, so mesh/matrix sharding raises."""
+
+    name = "sinkhorn"
+    fused = False
+
+    def prepare(self, inputs, eps, *, sizes=None, guaranteed: bool = False,
+                min_batch: int = 1, max_iters=None) -> PreparedBatch:
+        c, nu, mu = inputs["c"], inputs["nu"], inputs["mu"]
+        b, m, n = c.shape
+        m_valid, n_valid = _sizes_arrays(sizes, b, m, n)
+        eps_arr = eps_array(eps, b, guaranteed)
+        reg, tol, cap = sinkhorn_schedule(eps_arr, m_valid, n_valid,
+                                          max_iters)
+        # zero mass/cost outside each instance's valid block (inert: the
+        # clamped log marginals make padded rows/cols converge in one
+        # iteration and carry ~0 plan mass)
+        row_ok = np.arange(m)[None, :] < m_valid[:, None]
+        col_ok = np.arange(n)[None, :] < n_valid[:, None]
+        mask = jnp.asarray(row_ok[:, :, None] & col_ok[:, None, :])
+        c = jnp.where(mask, c, 0.0)
+        nu = jnp.where(jnp.asarray(row_ok), nu, 0.0)
+        mu = jnp.where(jnp.asarray(col_ok), mu, 0.0)
+        bp = max(pow2_at_least(b), pow2_at_least(min_batch))
+        # padded lanes: cap 0 -> born converged; reg/tol pads stay
+        # nonzero so the prologue/phase divisions remain finite
+        ops = _pad_lanes(bp, b, {
+            "c": c, "nu": nu, "mu": mu,
+            "reg": reg.astype(np.float32),
+            "tol": tol.astype(np.float32),
+            "phase_cap": cap,
+        }, fills={"reg": np.float32(reg[0]), "tol": np.float32(tol[0])})
+        if bp > b:
+            eps_arr = np.concatenate(
+                [eps_arr, np.full((bp - b,), eps_arr[0])])
+        return PreparedBatch(
+            ops=ops, threshold=np.zeros((bp,), np.int32),
+            phase_cap=np.asarray(ops["phase_cap"]), eps_arr=eps_arr, bp=bp)
+
+    # epilogue operands taken verbatim from ops (outside the jit)
+    ctx_ops = ("c", "nu", "mu", "reg")
+
+    def prologue(self, ops):
+        c, nu, mu = ops["c"], ops["nu"], ops["mu"]
+        scale = jnp.maximum(jnp.max(c), 1e-30)  # == ot_prologue's clamp
+        mass_nu = jnp.maximum(jnp.sum(nu), _LOG_FLOOR)
+        mass_mu = jnp.maximum(jnp.sum(mu), _LOG_FLOOR)
+        nu_hat = nu / mass_nu
+        data = {
+            "c_hat": c / scale,
+            "log_nu": jnp.log(jnp.maximum(nu_hat, _LOG_FLOOR)),
+            "log_mu": jnp.log(jnp.maximum(mu / mass_mu, _LOG_FLOOR)),
+            "nu_hat": nu_hat,
+            "reg": ops["reg"], "tol": ops["tol"],
+            "phase_cap": ops["phase_cap"],
+        }
+        ctx = {"scale": scale, "mass_nu": mass_nu}
+        return data, ctx
+
+    def init_state(self, data, ctx):
+        m, n = data["c_hat"].shape
+        return SinkhornState(
+            f=jnp.zeros((m,), jnp.float32),
+            g=jnp.zeros((n,), jnp.float32),
+            err=jnp.asarray(jnp.inf, jnp.float32),
+            phases=jnp.zeros((), jnp.int32),
+        )
+
+    def run_phases(self, data, state, k: int):
+        return run_sinkhorn_phases(
+            data["c_hat"], data["log_nu"], data["log_mu"], data["nu_hat"],
+            data["reg"], data["tol"], data["phase_cap"], state, k)
+
+    def converged(self, data, state):
+        return (state.err <= data["tol"]) | (state.phases
+                                             >= data["phase_cap"])
+
+    def epilogue(self, ctx, state):
+        return sinkhorn_epilogue(ctx["c"], ctx["nu"], ctx["mu"],
+                                 ctx["reg"], ctx["scale"], ctx["mass_nu"],
+                                 state)
+
+    # -- result shaping ------------------------------------------------
+
+    def empty_result(self, m: int, n: int):
+        zf = lambda *s: jnp.zeros(s, jnp.float32)
+        zi = lambda *s: jnp.zeros(s, jnp.int32)
+        return SinkhornOTResult(plan=zf(0, m, n), cost=zf(0),
+                                y_b=zf(0, m), y_a=zf(0, n), phases=zi(0),
+                                rounds=zi(0), err=zf(0), reg=zf(0))
+
+    # trim: OTSpec's tree_map slice works on SinkhornOTResult unchanged
+
+    # -- lockstep / matrix placement -----------------------------------
+
+    def _lockstep_k(self, eps_arr, mn: int) -> int:
+        _, _, cap = sinkhorn_schedule(eps_arr,
+                                      np.full_like(eps_arr, mn, np.int64),
+                                      np.full_like(eps_arr, mn, np.int64))
+        return int(cap.max(initial=1)) + 1
+
+    def solve_lockstep(self, inputs, eps: float, *, sizes=None,
+                       guaranteed: bool = False, keep_state: bool = False,
+                       max_iters=None):
+        # one compacting dispatch with k above the iteration cap: genuine
+        # lockstep semantics (no compaction ever fires) without teaching
+        # core/batched about a third solver — same trick as the fused
+        # push-relabel specs' _fused_lockstep
+        from ..core.compaction import solve_compacting
+
+        b, m, n = (int(s) for s in np.shape(inputs["c"]))
+        eps_arr = eps_array(eps, b, guaranteed)
+        k_all = (self._lockstep_k(eps_arr, max(m, n))
+                 if max_iters is None else int(max_iters) + 1)
+        r, stats = solve_compacting(
+            self, inputs, eps, sizes=sizes, k=k_all, guaranteed=guaranteed,
+            keep_state=keep_state, max_iters=max_iters)
+        return r, (stats.final_state if keep_state else None)
+
+    def matrix_instance(self, host, i, mi, ni, mp, np_, eps_i, mesh2,
+                        row_axis, col_axis, **kw):
+        raise NotImplementedError(
+            "the sinkhorn spec supports batch placement only; use "
+            "placement='batch' (or the push-relabel specs) for "
+            "row/col-sharded single instances")
+
+    def matrix_stack(self, rows, m_valid, n_valid, m: int, n: int):
+        raise NotImplementedError(
+            "the sinkhorn spec supports batch placement only")
+
+    # -- per-artifact producers ----------------------------------------
+
+    artifacts = ("cost", "duals", "plan", "plan_sparse", "state", "stats")
+    state_on_result = False
+
+    def artifact_device(self, name, r, state):
+        if name == "cost":
+            return {"cost": r.cost}
+        if name == "scalars":
+            # no theta: Sinkhorn has no integer scaling parameter
+            return {"phases": r.phases, "rounds": r.rounds}
+        if name == "duals":
+            return {"y_b": r.y_b, "y_a": r.y_a}
+        if name == "plan":
+            return {"plan": r.plan}
+        raise KeyError(name)
+
+    def artifact_state(self, r, state):
+        # SinkhornOTResult carries no state: it exists only when the
+        # dispatch retained it (keep_state / want=("state",))
+        return state
+
+    def legacy_instance_dict(self, sol):
+        return {
+            "plan": sol.plan(),
+            "cost": sol.cost,
+            "phases": sol.phases,
+            "rounds": sol.rounds,
+        }
+
+
+class KernelSinkhornSpec(SinkhornSpec):
+    """SinkhornSpec whose f-update is the flash-style Pallas row kernel
+    (online-logsumexp over column blocks, ``kernels/sinkhorn_step.py``)
+    at the ``kernel_blocks()`` backend-table block sizes. Off-TPU the
+    kernel runs in interpret mode — honest-labeling as everywhere else.
+    Float tolerance vs the pure-jnp update is documented where it is
+    asserted (tests/test_portfolio.py): both evaluate the same online
+    logsumexp up to reassociation, ~1e-7 * |f| on f32."""
+
+    fused = True
+
+    def run_phases(self, data, state, k: int):
+        return run_sinkhorn_phases(
+            data["c_hat"], data["log_nu"], data["log_mu"], data["nu_hat"],
+            data["reg"], data["tol"], data["phase_cap"], state, k,
+            kernel=True)
+
+
+SINKHORN = SinkhornSpec()
+SINKHORN_KERNEL = KernelSinkhornSpec()
+KernelSinkhornSpec.stepped = SINKHORN
+# fused_variant() hook (core/problem.py): DispatchPolicy(fused=True)
+# resolves SINKHORN -> SINKHORN_KERNEL without core importing portfolio
+SinkhornSpec.fused_spec = SINKHORN_KERNEL
+
+
+# --------------------------------------------------------------------------
+# repro.analysis registration: the vmapped chunk/conv programs the
+# compacting driver re-issues for this spec, plus the prologue ->
+# init_state chain the donation-safety rule alias-checks (the PR-3 bug
+# class: the donated state must not share buffers with retained operands).
+# --------------------------------------------------------------------------
+
+from ..analysis import registry as _audit  # noqa: E402
+
+
+def _tiny_sinkhorn_batch():
+    """A deterministic (2, 4, 4) prepared batch for tracing dispatches."""
+    from ..core.compaction import spec_fns
+
+    b, mn = 2, 4
+    c = np.linspace(0.0, 1.0, b * mn * mn, dtype=np.float32)
+    inputs = {"c": c.reshape(b, mn, mn),
+              "nu": np.full((b, mn), 1.0 / mn, np.float32),
+              "mu": np.full((b, mn), 1.0 / mn, np.float32)}
+    p = SINKHORN.prepare(SINKHORN.canonicalize(inputs), 0.25)
+    prologue, init, chunk, conv, _ = spec_fns(SINKHORN, 2)
+    ops = {kk: jnp.asarray(v) for kk, v in p.ops.items()}
+    data, ctx = prologue(ops)
+    state = init(data, ctx)
+    return chunk, conv, data, state
+
+
+def _trace_sinkhorn_chunk():
+    chunk, _, data, state = _tiny_sinkhorn_batch()
+    return _audit.trace_entry(
+        name="portfolio.sinkhorn.chunk[sinkhorn]",
+        fn=chunk,
+        args={"data": data, "state": state},
+        donated={"state"},
+        tags={"chunk-dispatch", "sinkhorn"},
+        source=__name__,
+    )
+
+
+def _trace_sinkhorn_conv():
+    _, conv, data, state = _tiny_sinkhorn_batch()
+    return _audit.trace_entry(
+        name="portfolio.sinkhorn.conv[sinkhorn]",
+        fn=conv,
+        args={"data": data, "state": state},
+        tags={"conv-dispatch", "sinkhorn"},
+        source=__name__,
+    )
+
+
+def _trace_sinkhorn_state_chain():
+    m = n = 8
+
+    def chain(c, nu, mu, reg, tol):
+        data, ctx = SINKHORN.prologue({
+            "c": c, "nu": nu, "mu": mu, "reg": reg, "tol": tol,
+            "phase_cap": jnp.int32(64)})
+        state = SINKHORN.init_state(data, ctx)
+        return {"state": state,
+                "retained": {"c_hat": data["c_hat"],
+                             "log_nu": data["log_nu"],
+                             "nu_hat": data["nu_hat"],
+                             "scale": ctx["scale"]}}
+
+    return _audit.trace_entry(
+        name="portfolio.sinkhorn.state_chain",
+        fn=chain,
+        args={
+            "c": jnp.zeros((m, n), jnp.float32),
+            "nu": jnp.full((m,), 1.0 / m, jnp.float32),
+            "mu": jnp.full((n,), 1.0 / n, jnp.float32),
+            "reg": jnp.float32(0.02),
+            "tol": jnp.float32(0.01),
+        },
+        retained={"c", "nu", "mu"},
+        tags={"state-init-chain", "sinkhorn"},
+        source=__name__,
+    )
+
+
+def _trace_run_phases():
+    """The stepped core itself, with the recompile-hazard contract: the
+    host-f64-derived schedule (reg/tol/phase_cap) must arrive as TRACED
+    operands — baking any of them into the program would recompile per
+    accuracy, the hazard class ``must_trace`` exists to pin."""
+    m = n = 8
+    state = SinkhornState(
+        f=jnp.zeros((m,), jnp.float32), g=jnp.zeros((n,), jnp.float32),
+        err=jnp.asarray(jnp.inf, jnp.float32),
+        phases=jnp.zeros((), jnp.int32))
+
+    def run(c_hat, log_nu, log_mu, nu_hat, reg, tol, phase_cap, state):
+        return run_sinkhorn_phases(c_hat, log_nu, log_mu, nu_hat, reg,
+                                   tol, phase_cap, state, 3)
+
+    return _audit.trace_entry(
+        name="portfolio.sinkhorn.run_sinkhorn_phases",
+        fn=run,
+        args={
+            "c_hat": jnp.zeros((m, n), jnp.float32),
+            "log_nu": jnp.full((m,), -np.log(m), jnp.float32),
+            "log_mu": jnp.full((n,), -np.log(n), jnp.float32),
+            "nu_hat": jnp.full((m,), 1.0 / m, jnp.float32),
+            "reg": jnp.float32(0.02),
+            "tol": jnp.float32(0.01),
+            "phase_cap": jnp.int32(64),
+            "state": state,
+        },
+        donated={"state"},
+        must_trace={"reg", "tol", "phase_cap"},
+        tags={"stepped-core", "sinkhorn"},
+        source=__name__,
+    )
+
+
+_audit.register("portfolio.sinkhorn.run_sinkhorn_phases",
+                _trace_run_phases, source=__name__)
+_audit.register("portfolio.sinkhorn.chunk[sinkhorn]",
+                _trace_sinkhorn_chunk, source=__name__)
+_audit.register("portfolio.sinkhorn.conv[sinkhorn]",
+                _trace_sinkhorn_conv, source=__name__)
+_audit.register("portfolio.sinkhorn.state_chain",
+                _trace_sinkhorn_state_chain, source=__name__)

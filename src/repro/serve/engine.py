@@ -154,7 +154,7 @@ class OTService:
                  mesh=None, want: Optional[tuple] = None,
                  validate: bool = True,
                  admission_tol: Optional[float] = None,
-                 sinks=()):
+                 sinks=(), solver: str = "pushrelabel"):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core import validate as V
@@ -182,8 +182,12 @@ class OTService:
         # goes through the unified core/api.solve front door under this
         # one policy (from_legacy owns the compact/mesh keyword mapping
         # and its mesh-requires-compact rule).
+        # ``solver`` routes OT-mode buckets through the solver portfolio
+        # (core/api DispatchPolicy.solver: pushrelabel / sinkhorn /
+        # hybrid / measured-"auto"); assignment-mode requests ignore it.
         self._policy = DispatchPolicy.from_legacy(
-            compact, mesh, chunk=self.chunk, buckets=self.buckets)
+            compact, mesh, chunk=self.chunk, buckets=self.buckets,
+            solver=solver)
         self.want = None if want is None else tuple(want)
         self.mesh = mesh
         self.queue: List[OTRequest] = []

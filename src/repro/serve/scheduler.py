@@ -301,7 +301,8 @@ class AsyncOTScheduler:
                  admission_tol: Optional[float] = None, faults=None,
                  retries_per_level: int = 2, retry_backoff_s: float = 0.05,
                  join_timeout_s: float = 30.0,
-                 policy=None, sinks=(), occupancy_window: int = 64):
+                 policy=None, sinks=(), occupancy_window: int = 64,
+                 solver: str = "pushrelabel"):
         from repro.core import batched as B
         from repro.core import compaction as C
         from repro.core import validate as V
@@ -319,10 +320,12 @@ class AsyncOTScheduler:
         self.chunk = C.DEFAULT_CHUNK if chunk is None else int(chunk)
         # every bucket dispatch goes through the unified core/api.solve
         # front door under this one policy
+        # ``solver`` routes OT buckets through the solver portfolio
+        # (ignored when an explicit ``policy`` object is passed)
         self._policy = policy if policy is not None else DispatchPolicy(
             mode="mesh", mesh=mesh,
             placement=placement, chunk=self.chunk,
-            buckets=self.buckets)
+            buckets=self.buckets, solver=solver)
         self.validate = bool(validate)
         self.admission_tol = (V.DEFAULT_TOL if admission_tol is None
                               else float(admission_tol))
